@@ -1,0 +1,233 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+The paper (a workshop functionality paper) has one demonstration figure
+(Fig. 2, the multi-stage workflow) and no perf tables; its §5 names the
+performance study as future work. The harness therefore covers:
+
+  fig2_workflow_*      — the paper's workflow end-to-end (MSE + stage
+                         timings, fused in-situ vs staged in-transit:
+                         the marshaling-overhead comparison of §5)
+  fft_local_*          — local FFT backends across sizes (vs jnp.fft)
+  fft_slab_scaling_*   — distributed slab FFT over 1/2/4/8 host devices
+                         (the paper's future-work scaling study)
+  fft_overlap_*        — chunked-pipeline slab variant (beyond-paper)
+  bandpass_*           — fused Pallas filter+energy vs two-pass jnp
+  train_step / decode_step — model-substrate microbenches (reduced cfg)
+
+Output: ``name,us_per_call,derived`` CSV on stdout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import numpy as np
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+sys.path.insert(0, SRC)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+ROWS = []
+
+
+def row(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def bench_fft_local():
+    from repro.core.fft import dft
+    rng = np.random.default_rng(0)
+    for n in (256, 1024, 4096):
+        re = jnp.asarray(rng.standard_normal((64, n)).astype(np.float32))
+        im = jnp.zeros_like(re)
+        for backend in ("jnp", "stockham", "fourstep"):
+            fn = jax.jit(lambda r, i, b=backend: dft.local_fft(
+                r, i, backend=b))
+            us = timeit(fn, re, im)
+            row(f"fft_local_{backend}_n{n}", us,
+                f"batch=64;GFLOPs={5*64*n*np.log2(n)/1e3/us:.2f}")
+
+
+def bench_fft_kernels():
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    re = jnp.asarray(rng.standard_normal((64, 1024)).astype(np.float32))
+    im = jnp.zeros_like(re)
+    for kernel in ("stockham", "fourstep"):
+        us = timeit(lambda r, i, k=kernel: ops.fft(r, i, kernel=k), re, im,
+                    warmup=1, iters=2)
+        row(f"fft_kernel_{kernel}_interp_n1024", us,
+            "interpret-mode(correctness-path)")
+
+
+def bench_workflow_fig2():
+    from repro.core.insitu.adaptors import RadiatingSourceAdaptor
+    from repro.core.insitu.config import build_chain
+
+    src = RadiatingSourceAdaptor(dims=(200, 200))
+    data = src.produce(0)
+    clean = np.asarray(data.arrays["clean_reference"])
+    noisy = np.asarray(data.arrays["field"])
+    cfg = {"chain": [
+        {"endpoint": "fft", "array": "field", "direction": "forward",
+         "local": True},
+        {"endpoint": "bandpass", "array": "field", "keep_frac": 0.05},
+        {"endpoint": "fft", "array": "field", "direction": "backward",
+         "local": True},
+    ]}
+    for mode in ("insitu", "intransit"):
+        chain = build_chain({**cfg, "mode": mode}, None, data.grid)
+        out = chain.execute(data)              # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = chain.execute(data)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        den = np.asarray(out.arrays["field"])
+        imp = float(np.mean((noisy - clean) ** 2)
+                    / np.mean((den - clean) ** 2))
+        row(f"fig2_workflow_{mode}_200x200", us,
+            f"mse_improvement={imp:.2f}x")
+
+
+def bench_fft_slab_scaling():
+    script = textwrap.dedent("""
+        import os, sys, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=%d"
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core.fft import dft, distributed as D
+        ndev = %d
+        mesh = jax.make_mesh((ndev,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        N = 1024
+        x = rng.standard_normal((N, N)).astype(np.float32)
+        re = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data", None)))
+        im = jnp.zeros_like(re)
+        fwd = jax.jit(lambda r, i: D.slab_fft_2d(r, i, mesh, "data"))
+        ov = jax.jit(lambda r, i: D.slab_fft_2d_overlap(r, i, mesh, "data",
+                                                        chunks=4))
+        out = {}
+        for name, f in (("slab", fwd), ("overlap", ov)):
+            jax.block_until_ready(f(re, im))
+            t0 = time.perf_counter()
+            for _ in range(10):
+                o = f(re, im)
+            jax.block_until_ready(o)
+            out[name] = (time.perf_counter() - t0) / 10 * 1e6
+        print(json.dumps(out))
+    """)
+    base = None
+    for ndev in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env.pop("XLA_FLAGS", None)
+        res = subprocess.run([sys.executable, "-c", script % (ndev, ndev)],
+                             env=env, capture_output=True, text=True,
+                             timeout=600)
+        if res.returncode != 0:
+            row(f"fft_slab_scaling_p{ndev}", -1, "ERROR")
+            continue
+        out = json.loads(res.stdout.strip().splitlines()[-1])
+        if base is None:
+            base = out["slab"]
+        row(f"fft_slab_scaling_p{ndev}", out["slab"],
+            f"speedup={base/out['slab']:.2f}x;N=1024")
+        row(f"fft_overlap_p{ndev}", out["overlap"],
+            f"vs_slab={out['slab']/out['overlap']:.2f}x")
+
+
+def bench_bandpass():
+    from repro.core.fft.filters import lowpass_mask
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    re = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    mask = lowpass_mask((512, 512), 0.1).astype(jnp.float32)
+    us_ref = timeit(jax.jit(ref.bandpass_ref), re, im, mask)
+    row("bandpass_jnp_512", us_ref, "filter+energies;two-pass")
+    us_k = timeit(lambda a, b, m: ops.bandpass(a, b, m), re, im, mask,
+                  warmup=1, iters=2)
+    row("bandpass_pallas_interp_512", us_k, "fused(correctness-path)")
+
+
+def bench_model_steps():
+    from repro.configs import registry
+    from repro.data import synthetic
+    from repro.models import lm
+    from repro.optim.adamw import AdamW, warmup_cosine
+    from repro.train import step as train_step_mod
+
+    cfg = registry.get_reduced("qwen3-4b")
+    opt = AdamW(warmup_cosine(1e-3, 2, 100))
+    step_fn = jax.jit(train_step_mod.make_train_step(cfg, None, opt,
+                                                     loss_chunk=32),
+                      donate_argnums=(0,))
+    state = train_step_mod.init_train_state(cfg, opt, jax.random.PRNGKey(0),
+                                            param_dtype=jnp.float32)
+    B, S = 8, 128
+    b = synthetic.batch_at(0, global_batch=B, seq_len=S,
+                           vocab=cfg.vocab_size)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    state, _ = step_fn(state, batch)          # compile
+    t0 = time.perf_counter()
+    for _ in range(5):
+        state, m = step_fn(state, batch)
+    jax.block_until_ready(m["loss"])
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    row("train_step_reduced_qwen3", us,
+        f"tokens_per_s={B*S/(us/1e6):.0f}")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    _, st = lm.prefill(cfg, params, {"tokens": batch["tokens"][:, :64]},
+                       cache_len=96)
+    dec = jax.jit(lambda p, t, s: lm.decode_step(cfg, p, t, s))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    _, st2 = dec(params, tok, st)             # compile
+    t0 = time.perf_counter()
+    stx = st2
+    for _ in range(20):
+        lg, stx = dec(params, tok, stx)
+    jax.block_until_ready(lg)
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    row("decode_step_reduced_qwen3", us,
+        f"tokens_per_s={B/(us/1e6):.0f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_fft_local()
+    bench_workflow_fig2()
+    bench_bandpass()
+    bench_fft_slab_scaling()
+    bench_fft_kernels()
+    bench_model_steps()
+    out = Path(__file__).resolve().parents[1] / "results" / "bench.csv"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text("name,us_per_call,derived\n" + "\n".join(
+        f"{n},{u:.1f},{d}" for n, u, d in ROWS) + "\n")
+
+
+if __name__ == "__main__":
+    main()

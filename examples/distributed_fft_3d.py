@@ -1,0 +1,66 @@
+"""Pencil-decomposed 3-D FFT on a device mesh — the paper's §5 scaling
+goal, end to end: synthetic turbulence-like field → forward pencil FFT
+(two all_to_all rotations) → isotropic energy spectrum (the in-situ
+science product) → spectral low-pass → inverse → error check.
+
+Run:  PYTHONPATH=src python examples/distributed_fft_3d.py
+(uses 8 host placeholder devices — set BEFORE jax import)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.core.fft import dft
+from repro.core.fft.plan import BACKWARD, FORWARD, plan_dft
+from repro.core.fft.filters import radial_lowpass_mask, apply_filter
+from repro.core.fft.spectrum import radial_spectrum
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+N = (64, 64, 64)
+print(f"mesh {dict(mesh.shape)}, grid {N}")
+
+# synthetic multi-scale field: sum of shells + noise
+rng = np.random.default_rng(0)
+z, y, x = np.meshgrid(*[np.arange(n) for n in N], indexing="ij")
+field = sum(np.sin(2 * np.pi * k * (x + 2 * y + 3 * z) / N[0]) / k
+            for k in (2, 4, 8, 16))
+field += 0.3 * rng.standard_normal(N)
+field = field.astype(np.float32)
+
+fwd = plan_dft(N, FORWARD, mesh, decomp="pencil")
+inv = plan_dft(N, BACKWARD, mesh, decomp="pencil")
+print(f"plan: {fwd.decomp} over axes {fwd.axis_names} "
+      f"(input sharding {fwd.input_sharding().spec})")
+
+re, im = fwd.place(field)
+fr, fi = fwd.execute(re, im)
+
+# in-situ science product: isotropic energy spectrum E(k)
+k_centers, e_k = radial_spectrum(np.asarray(fr), np.asarray(fi), nbins=24)
+print("energy spectrum (k, E):")
+for k, e in list(zip(np.asarray(k_centers), np.asarray(e_k)))[1:9]:
+    print(f"  k={k:6.1f}  E={e:.3e}")
+
+# low-pass in the rotated pencil layout: rebuild the mask in k-order
+# matching the output layout [k0 complete, k1/a0, k2/a1] = natural index
+mask = radial_lowpass_mask(N, 0.15)
+fr2, fi2 = apply_filter(fr, fi, jnp.asarray(mask))
+
+br, bi = inv.execute(fr2, fi2)
+smooth = np.asarray(br)
+
+# checks: roundtrip without filter is exact; filtering reduces variance
+br0, _ = inv.execute(fr, fi)
+err = float(np.max(np.abs(np.asarray(br0) - field)))
+print(f"roundtrip max err : {err:.2e}")
+print(f"variance raw      : {field.var():.4f}")
+print(f"variance filtered : {smooth.var():.4f}")
+assert err < 1e-3
+assert smooth.var() < field.var()
+print("OK")

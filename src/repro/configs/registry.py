@@ -1,0 +1,80 @@
+"""Architecture registry: ``--arch <id>`` lookup + per-arch shape cells.
+
+Each assigned architecture lives in its own module exposing ``CONFIG``
+(the exact published configuration) and ``reduced()`` (a tiny same-family
+config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+
+ARCH_MODULES: Dict[str, str] = {
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "qwen2.5-14b": "repro.configs.qwen25_14b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    return importlib.import_module(ARCH_MODULES[arch]).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return importlib.import_module(ARCH_MODULES[arch]).reduced()
+
+
+def cells(arch: str) -> List[ShapeConfig]:
+    """The dry-run cells for one arch. ``long_500k`` runs only for
+    sub-quadratic archs (SSM / hybrid / SWA) — see DESIGN.md
+    §Arch-applicability for the skip rationale."""
+    cfg = get_config(arch)
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.subquadratic:
+        out.append(SHAPES["long_500k"])
+    return out
+
+
+def all_cells() -> List[tuple]:
+    return [(a, s.name) for a in list_archs() for s in cells(a)]
+
+
+def reduce_common(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Shrink a config to smoke-test size, keeping its family features."""
+    base = dict(
+        num_layers=len(cfg.layer_pattern) * 2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=max(1, 4 * cfg.num_kv_heads // cfg.num_heads),
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        window=(32 if cfg.window else None),
+    )
+    if cfg.moe is not None:
+        base["moe"] = dataclasses.replace(cfg.moe, num_experts=4,
+                                          top_k=min(cfg.moe.top_k, 2))
+    if cfg.ssm is not None:
+        base["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=8,
+                                          chunk=16)
+    if cfg.family == "encdec":
+        base["encoder_layers"] = 2
+        base["decoder_layers"] = 2
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

@@ -1,0 +1,78 @@
+"""Spectral-domain filters — the paper's bandpass stage (§2.3).
+
+The paper's demonstration zeroes all but the lowest `keep_frac` of
+frequencies ("we retained only 0.75% of the edge values which hold these
+significant frequencies" — in unshifted FFT layout, low frequencies live
+at the four corners of the 2-D spectrum). These helpers build such masks
+for any grid shape, in natural or distributed-transposed layouts, as
+pure elementwise multiplies (jit/shard_map-fusable; the Pallas
+``bandpass`` kernel is the fused TPU version).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def freq_index(n: int):
+    """|k| per position in unshifted FFT order: 0,1,…,n/2,…,2,1."""
+    k = np.arange(n)
+    return np.minimum(k, n - k)
+
+
+def lowpass_mask(shape: Sequence[int], keep_frac: float) -> jnp.ndarray:
+    """Keep frequencies with normalized radius ≤ keep_frac (per axis
+    Manhattan-independent: product of per-axis cutoffs like the paper's
+    corner-box criterion)."""
+    masks = []
+    for n in shape:
+        cutoff = max(1, int(round(n * keep_frac)))
+        masks.append(freq_index(n) < cutoff)
+    out = np.ones(tuple(shape), bool)
+    for ax, m in enumerate(masks):
+        view = [None] * len(shape)
+        view[ax] = slice(None)
+        out &= m[tuple(view)]
+    return jnp.asarray(out)
+
+
+def highpass_mask(shape: Sequence[int], cut_frac: float) -> jnp.ndarray:
+    return jnp.logical_not(lowpass_mask(shape, cut_frac))
+
+
+def bandpass_mask(shape: Sequence[int], low_frac: float,
+                  high_frac: float) -> jnp.ndarray:
+    """Keep low_frac ≤ |k|/n < high_frac per axis (box annulus)."""
+    return jnp.logical_and(lowpass_mask(shape, high_frac),
+                           jnp.logical_not(lowpass_mask(shape, low_frac)))
+
+
+def radial_lowpass_mask(shape: Sequence[int], keep_frac: float
+                        ) -> jnp.ndarray:
+    """Spherical cutoff on normalized radius (smoother than the box)."""
+    grids = np.meshgrid(*[freq_index(n) / n for n in shape], indexing="ij")
+    r = np.sqrt(sum(g * g for g in grids))
+    return jnp.asarray(r <= keep_frac)
+
+
+def apply_filter(re, im, mask) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    m = mask.astype(re.dtype)
+    return re * m, im * m
+
+
+# -- layout-aware masks ------------------------------------------------------
+
+def mask_transposed_2d(n0: int, n1: int, build=lowpass_mask, **kw):
+    """Mask for ``slab_fft_2d`` forward output Y[k0, k1] (plain index
+    order — the slab transform keeps natural frequency order; only the
+    *sharding* is transposed, so this is just ``build((n0, n1))``)."""
+    return build((n0, n1), **kw)
+
+
+def mask_fourstep_1d(n: int, p: int, build=lowpass_mask, **kw):
+    """Mask permuted into the four-step transposed digit order."""
+    from repro.core.fft.distributed import fourstep_freq_of_position
+    base = np.asarray(build((n,), **kw))
+    return jnp.asarray(base[fourstep_freq_of_position(n, p)])

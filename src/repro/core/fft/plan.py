@@ -1,0 +1,112 @@
+"""FFTW-style plan lifecycle over jit compilation.
+
+The paper's endpoint wraps FFTW's ``allocate - plan - execute - destroy``
+paradigm (Listing 3). The JAX analogue: *planning is compilation*. An
+``FFTPlan`` captures (global shape, mesh, decomposition, direction,
+backend), lowers + compiles the distributed transform once, and
+``execute`` runs it on device arrays. ``FFTW_ESTIMATE``'s role (pick a
+reasonable algorithm fast) maps to the backend dispatch heuristics;
+``FFTW_MEASURE``'s (search) maps to the §Perf block-shape sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.fft import distributed as dist
+from repro.core.fft.dft import Pair, to_complex, to_pair
+
+FORWARD = "forward"
+BACKWARD = "backward"
+
+
+@dataclasses.dataclass
+class FFTPlan:
+    shape: Tuple[int, ...]
+    direction: str
+    mesh: Mesh
+    decomp: str                       # "slab" | "pencil" | "fourstep1d"
+    axis_names: Tuple[str, ...]
+    backend: str = "auto"
+    overlap_chunks: int = 0           # >0: pipelined slab variant
+    _fn: Optional[Callable] = None
+
+    # -- plan ---------------------------------------------------------------
+    def compile(self) -> "FFTPlan":
+        inverse = self.direction == BACKWARD
+        mesh, backend = self.mesh, self.backend
+
+        if self.decomp == "slab":
+            ax = self.axis_names[0]
+            if self.overlap_chunks:
+                fn = lambda r, i: dist.slab_fft_2d_overlap(
+                    r, i, mesh, ax, inverse=inverse, backend=backend,
+                    chunks=self.overlap_chunks)
+            else:
+                fn = lambda r, i: dist.slab_fft_2d(
+                    r, i, mesh, ax, inverse=inverse, backend=backend)
+        elif self.decomp == "pencil":
+            if inverse:
+                fn = lambda r, i: dist.pencil_ifft_3d(
+                    r, i, mesh, self.axis_names, backend=backend)
+            else:
+                fn = lambda r, i: dist.pencil_fft_3d(
+                    r, i, mesh, self.axis_names, backend=backend)
+        elif self.decomp == "fourstep1d":
+            ax = self.axis_names[0]
+            if inverse:
+                fn = lambda r, i: dist.fourstep_ifft_1d(r, i, mesh, ax,
+                                                        backend=backend)
+            else:
+                fn = lambda r, i: dist.fourstep_fft_1d(r, i, mesh, ax,
+                                                       backend=backend)
+        else:
+            raise ValueError(self.decomp)
+
+        self._fn = jax.jit(fn)
+        return self
+
+    # -- sharding contracts --------------------------------------------------
+    def input_sharding(self) -> NamedSharding:
+        inverse = self.direction == BACKWARD
+        if self.decomp == "slab":
+            ax = self.axis_names[0]
+            spec = P(None, ax) if inverse else P(ax, None)
+        elif self.decomp == "pencil":
+            a0, a1 = self.axis_names
+            spec = P(None, a0, a1) if inverse else P(a0, a1, None)
+        else:
+            spec = P(self.axis_names[0])
+        return NamedSharding(self.mesh, spec)
+
+    def place(self, x) -> Pair:
+        re, im = to_pair(x)
+        sh = self.input_sharding()
+        return jax.device_put(re, sh), jax.device_put(im, sh)
+
+    # -- execute --------------------------------------------------------------
+    def execute(self, re, im) -> Pair:
+        if self._fn is None:
+            self.compile()
+        return self._fn(re, im)
+
+    def execute_complex(self, x):
+        return to_complex(self.execute(*self.place(x)))
+
+
+def plan_dft(shape, direction: str, mesh: Mesh, *,
+             decomp: Optional[str] = None,
+             axis_names: Optional[Tuple[str, ...]] = None,
+             backend: str = "auto", overlap_chunks: int = 0) -> FFTPlan:
+    """`fftw_mpi_plan_dft_*` equivalent with decomposition inference."""
+    if decomp is None:
+        decomp = {1: "fourstep1d", 2: "slab", 3: "pencil"}[len(shape)]
+    if axis_names is None:
+        names = tuple(mesh.axis_names)
+        axis_names = names[:2] if decomp == "pencil" else names[:1]
+    return FFTPlan(tuple(shape), direction, mesh, decomp, axis_names,
+                   backend, overlap_chunks).compile()

@@ -1,0 +1,97 @@
+"""Real-input (r2c/c2r) distributed transforms — FFTW's real plans.
+
+The paper's data model is "real or complex-valued structured meshes"
+(§2.2) and its demonstration field is real; a complex transform wastes
+2× everywhere. These slab-decomposed r2c/c2r transforms keep only the
+non-negative k₁ half-spectrum (Hermitian symmetry):
+
+  * local rfft along the unsharded dim (half-spectrum, ~N/2+1 bins)
+  * all_to_all on the half-width planes (≈2× less wire than c2c)
+  * full complex FFT along the other dim (each k₁ column is complex)
+
+The half-spectrum is zero-padded up to a multiple of the shard count for
+the tiled all_to_all and sliced back after. §Perf measures the wire/HBM
+reduction on the Fig-2 chain workload.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.fft.dft import Pair, fft_along
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    # check_vma=False: pallas_call inside shard_map can't declare vma on
+    # its out_shape ShapeDtypeStructs (jax 0.8 limitation) — the escape
+    # hatch the error message itself recommends.
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def half_bins(n1: int) -> int:
+    return n1 // 2 + 1
+
+
+def padded_half(n1: int, p: int) -> int:
+    h = half_bins(n1)
+    return h + (-h) % p
+
+
+def rfft2_slab(x, mesh: Mesh, axis_name: str = "data") -> Pair:
+    """Real (N0, N1) P(ax, None) → half-spectrum Y[k0, k1≤N1/2]
+    (re, im) of shape (N0, Hp) with P(None, ax); Hp = padded N1/2+1."""
+    Pn = mesh.shape[axis_name]
+    n1 = x.shape[1]
+    hp = padded_half(n1, Pn)
+
+    def body(xl):
+        z = jnp.fft.rfft(xl.astype(jnp.float32), axis=1)   # (n0l, N1/2+1)
+        re = jnp.real(z).astype(jnp.float32)
+        im = jnp.imag(z).astype(jnp.float32)
+        pad = [(0, 0), (0, hp - re.shape[1])]
+        re, im = jnp.pad(re, pad), jnp.pad(im, pad)
+        re = jax.lax.all_to_all(re, axis_name, 1, 0, tiled=True)
+        im = jax.lax.all_to_all(im, axis_name, 1, 0, tiled=True)
+        return fft_along(re, im, 0)                        # (N0, hp/P)
+
+    return shard_map(body, mesh=mesh, in_specs=P(axis_name, None),
+                     out_specs=(P(None, axis_name), P(None, axis_name)))(x)
+
+
+def irfft2_slab(re, im, n1: int, mesh: Mesh,
+                axis_name: str = "data"):
+    """Inverse of ``rfft2_slab``: half-spectrum P(None, ax) → real
+    (N0, N1) P(ax, None)."""
+    Pn = mesh.shape[axis_name]
+    h = half_bins(n1)
+
+    def body(rl, il):
+        rl, il = fft_along(rl, il, 0, inverse=True)
+        rl = jax.lax.all_to_all(rl, axis_name, 0, 1, tiled=True)
+        il = jax.lax.all_to_all(il, axis_name, 0, 1, tiled=True)
+        z = (rl + 1j * il)[:, :h]
+        return jnp.fft.irfft(z, n=n1, axis=1).astype(jnp.float32)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis_name), P(None, axis_name)),
+                     out_specs=P(axis_name, None))(re, im)
+
+
+def half_mask(full_mask) -> jnp.ndarray:
+    """Slice a full-spectrum 2-D mask to the (padded) half-spectrum."""
+    return full_mask[:, : half_bins(full_mask.shape[1])]
+
+
+def rfft_chain_2d(x, full_mask, mesh: Mesh, axis_name: str = "data"):
+    """The paper's fwd → bandpass → inv chain on the half-spectrum."""
+    Pn = mesh.shape[axis_name]
+    n1 = x.shape[1]
+    hp = padded_half(n1, Pn)
+    hm = half_mask(full_mask).astype(jnp.float32)
+    hm = jnp.pad(hm, [(0, 0), (0, hp - hm.shape[1])])
+    re, im = rfft2_slab(x, mesh, axis_name)
+    re, im = re * hm, im * hm
+    return irfft2_slab(re, im, n1, mesh, axis_name)

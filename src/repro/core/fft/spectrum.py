@@ -1,0 +1,68 @@
+"""Spectral analysis payloads for in-situ consumers.
+
+These are the small "science products" an in-situ chain ships out of a
+running producer: total/band energies and radially-binned power spectra
+(the classic turbulence diagnostic), plus the gradient/activation
+spectral summaries the training integration uses.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft.filters import freq_index
+
+
+def power(re, im):
+    return re.astype(jnp.float32) ** 2 + im.astype(jnp.float32) ** 2
+
+
+def total_energy(re, im) -> jnp.ndarray:
+    return jnp.sum(power(re, im))
+
+
+def band_energies(re, im, edges=(0.0, 0.01, 0.05, 0.1, 0.25, 0.5)
+                  ) -> jnp.ndarray:
+    """Energy per radial band (normalized |k| edges). Returns (len(edges)-1,)."""
+    shape = re.shape
+    grids = np.meshgrid(*[freq_index(n) / n for n in shape], indexing="ij")
+    r = np.sqrt(sum(g * g for g in grids))
+    p = power(re, im)
+    out = []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        m = jnp.asarray((r >= lo) & (r < hi), p.dtype)
+        out.append(jnp.sum(p * m))
+    return jnp.stack(out)
+
+
+def radial_spectrum(re, im, nbins: int = 32) -> Tuple[jnp.ndarray,
+                                                      jnp.ndarray]:
+    """Isotropic 1-D power spectrum E(k): mean power per |k| shell."""
+    shape = re.shape
+    grids = np.meshgrid(*[freq_index(n) for n in shape], indexing="ij")
+    r = np.sqrt(sum(g.astype(np.float64) ** 2 for g in grids))
+    kmax = r.max()
+    bins = np.clip((r / (kmax + 1e-9) * nbins).astype(np.int32), 0,
+                   nbins - 1)
+    bins = jnp.asarray(bins.reshape(-1))
+    p = power(re, im).reshape(-1)
+    e = jnp.zeros((nbins,), jnp.float32).at[bins].add(p)
+    cnt = jnp.zeros((nbins,), jnp.float32).at[bins].add(1.0)
+    centers = jnp.linspace(0, float(kmax), nbins)
+    return centers, e / jnp.maximum(cnt, 1.0)
+
+
+def tensor_spectrum_summary(x, nbins: int = 16):
+    """In-situ training payload: 1-D FFT along the last axis of a (…, N)
+    tensor (gradient row, activation channel, …), radially binned.
+    Small output: (nbins,) — ships through metrics without host pressure."""
+    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=-1)
+    p = jnp.mean(jnp.abs(xf) ** 2, axis=tuple(range(x.ndim - 1)))
+    n = p.shape[-1]
+    edges = jnp.linspace(0, n, nbins + 1).astype(jnp.int32)
+    idx = jnp.clip(jnp.searchsorted(edges, jnp.arange(n), side="right") - 1,
+                   0, nbins - 1)
+    e = jnp.zeros((nbins,), jnp.float32).at[idx].add(p)
+    return e

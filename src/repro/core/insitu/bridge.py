@@ -1,0 +1,77 @@
+"""Bridge data model — the SENSEI-bridge analogue.
+
+The paper's endpoint marshals between the SENSEI/VTK data model and
+FFTW's arrays (§2.2). On TPU the "data model" of a stage is its
+(shape, dtype, sharding, layout); ``BridgeData`` carries named device
+arrays plus structured-grid metadata, and marshaling between stages is a
+*sharding/layout agreement*: when consecutive endpoints agree, handoff
+is zero-copy (fused into one XLA program); when they disagree, the chain
+inserts an explicit, accounted ``reshard`` (the paper's in-transit M→N
+redistribution).
+
+Spectral fields travel as split (re, im) float pairs, mirroring the
+real/complex duality of the FFTW model (and Pallas' no-complex rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class GridMeta:
+    dims: Tuple[int, ...]
+    spacing: Tuple[float, ...] = ()
+    origin: Tuple[float, ...] = ()
+
+    def __post_init__(self):
+        nd = len(self.dims)
+        if not self.spacing:
+            object.__setattr__(self, "spacing", (1.0,) * nd)
+        if not self.origin:
+            object.__setattr__(self, "origin", (0.0,) * nd)
+
+
+@dataclasses.dataclass
+class BridgeData:
+    """One step's payload moving through the chain."""
+    arrays: Dict[str, Any]                  # name -> array | (re, im)
+    grid: Optional[GridMeta] = None
+    step: int = 0
+    time: float = 0.0
+    domain: str = "spatial"                 # spatial | spectral
+    layout: str = "natural"                 # natural | transposed | fourstep
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def replace(self, **kw) -> "BridgeData":
+        return dataclasses.replace(self, **kw)
+
+    def primary(self) -> str:
+        return self.meta.get("primary", next(iter(self.arrays)))
+
+    def get_pair(self, name: Optional[str] = None):
+        """Return (re, im) for an array, promoting real -> (x, 0)."""
+        import jax.numpy as jnp
+        v = self.arrays[name or self.primary()]
+        if isinstance(v, tuple):
+            return v
+        return (v.astype(jnp.float32), jnp.zeros_like(v, jnp.float32))
+
+
+def tree_flatten_bridge(b: BridgeData):
+    return (b.arrays,), (b.grid, b.step, b.time, b.domain, b.layout,
+                         tuple(sorted(b.meta.items())))
+
+
+# Register as a pytree so BridgeData flows through jit unchanged.
+jax.tree_util.register_pytree_node(
+    BridgeData,
+    lambda b: ((b.arrays, b.step, b.time),
+               (b.grid, b.domain, b.layout, tuple(b.meta.items()))),
+    lambda aux, children: BridgeData(
+        arrays=children[0], grid=aux[0], step=children[1],
+        time=children[2], domain=aux[1], layout=aux[2],
+        meta=dict(aux[3])),
+)

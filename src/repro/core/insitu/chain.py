@@ -1,0 +1,129 @@
+"""In-situ chain composition — the paper's multi-stage daisy-chain.
+
+Two execution modes, mirroring the paper's deployment scenarios (§2.1):
+
+* **in-situ (fused)** — all device endpoints trace into ONE jitted XLA
+  program: stage handoffs are zero-copy by fusion (the TPU answer to the
+  paper's zero-copy marshaling goal, §5). Host endpoints (writer,
+  visualization) run afterwards on the (small) materialized results.
+* **in-transit (staged)** — each device endpoint jits separately, and
+  between stages the chain performs the M→N redistribution
+  (``reshard``) when the next stage's required sharding differs —
+  producer ranks and consumer ranks need not match, which is exactly
+  the paper's future-work scenario. Reshard byte counts are accounted
+  in ``chain.marshaling_report()``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.core.insitu.bridge import BridgeData
+from repro.core.insitu.endpoint import Endpoint
+
+
+class InSituChain:
+    def __init__(self, endpoints: List[Endpoint], mesh=None, *,
+                 mode: str = "insitu"):
+        assert mode in ("insitu", "intransit")
+        self.endpoints = endpoints
+        self.mesh = mesh
+        self.mode = mode
+        self._compiled = None
+        self._reshard_bytes = 0
+        self._timings: Dict[str, float] = {}
+
+    # -- lifecycle -------------------------------------------------------------
+    def initialize(self, grid=None):
+        for ep in self.endpoints:
+            ep.initialize(self.mesh, grid)
+        return self
+
+    def finalize(self) -> Dict[str, Any]:
+        out = {}
+        for ep in self.endpoints:
+            out[ep.name] = ep.finalize()
+        return out
+
+    # -- execution ---------------------------------------------------------------
+    def _device_prefix(self) -> List[Endpoint]:
+        out = []
+        for ep in self.endpoints:
+            if ep.host:
+                break
+            out.append(ep)
+        return out
+
+    def execute(self, data: BridgeData) -> BridgeData:
+        if self.mode == "insitu":
+            return self._execute_fused(data)
+        return self._execute_staged(data)
+
+    def _execute_fused(self, data: BridgeData) -> BridgeData:
+        device_eps = self._device_prefix()
+        host_eps = self.endpoints[len(device_eps):]
+
+        if self._compiled is None:
+            def run(d: BridgeData) -> BridgeData:
+                for ep in device_eps:
+                    d = ep.execute(d)
+                return d
+            self._compiled = jax.jit(run)
+
+        t0 = time.perf_counter()
+        out = self._compiled(data)
+        jax.block_until_ready(jax.tree.leaves(out.arrays))
+        self._timings["device"] = time.perf_counter() - t0
+        for ep in host_eps:
+            t0 = time.perf_counter()
+            out = ep.execute(out)
+            self._timings[ep.name] = time.perf_counter() - t0
+        return out
+
+    def _execute_staged(self, data: BridgeData) -> BridgeData:
+        out = data
+        for ep in self.endpoints:
+            want = ep.in_sharding(self.mesh)
+            if want is not None and not ep.host:
+                out = out.replace(arrays={
+                    k: self._reshard_tree(v, want)
+                    for k, v in out.arrays.items()})
+            t0 = time.perf_counter()
+            if ep.host:
+                out = ep.execute(out)
+            else:
+                out = jax.jit(ep.execute)(out)
+                jax.block_until_ready(jax.tree.leaves(out.arrays))
+            self._timings[ep.name] = (self._timings.get(ep.name, 0.0)
+                                      + time.perf_counter() - t0)
+        return out
+
+    def _reshard_tree(self, v, sharding):
+        def move(x):
+            if hasattr(x, "sharding") and x.sharding != sharding:
+                self._reshard_bytes += x.size * x.dtype.itemsize
+                return jax.device_put(x, sharding)
+            return x
+        return jax.tree.map(move, v)
+
+    # -- reporting ------------------------------------------------------------
+    def marshaling_report(self) -> Dict[str, Any]:
+        return {"mode": self.mode,
+                "reshard_bytes": self._reshard_bytes,
+                "timings_s": dict(self._timings)}
+
+    # -- training integration ---------------------------------------------------
+    def as_step_hook(self):
+        """A jit-friendly callable over training tensors: used by
+        train/step.py to run spectral monitoring inside the step."""
+        device_eps = self._device_prefix()
+
+        def hook(payload: Dict[str, Any]) -> Dict[str, Any]:
+            d = BridgeData(arrays=dict(payload), domain="spatial")
+            for ep in device_eps:
+                d = ep.execute(d)
+            return {k: v for k, v in d.arrays.items()
+                    if k.startswith("insitu_")}
+        return hook

@@ -1,0 +1,61 @@
+"""Declarative chain configuration — the paper's XML analogue (§2.2.1).
+
+The paper configures the FFT endpoint with an XML file carrying mesh /
+array / direction, chained to further endpoints via python_xml. Here a
+chain is a JSON-able dict (runtime-reconfigurable the same way):
+
+    {"mode": "insitu",
+     "chain": [
+        {"endpoint": "fft",      "array": "field", "direction": "forward"},
+        {"endpoint": "bandpass", "keep_frac": 0.0075},
+        {"endpoint": "fft",      "array": "field", "direction": "backward"},
+        {"endpoint": "visualize"}]}
+
+``build_chain(cfg, mesh, grid)`` instantiates registered endpoints and
+initializes them (FFT planning happens here, FFTW-style).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Optional, Union
+
+from repro.core.insitu.chain import InSituChain
+from repro.core.insitu.endpoint import Endpoint
+from repro.core.insitu.endpoints.bandpass import BandpassEndpoint
+from repro.core.insitu.endpoints.fft_endpoint import FFTEndpoint
+from repro.core.insitu.endpoints.spectral_monitor import SpectralMonitorEndpoint
+from repro.core.insitu.endpoints.stats import SpectrumEndpoint, StatsEndpoint
+from repro.core.insitu.endpoints.writer import VisualizeEndpoint, WriterEndpoint
+
+ENDPOINTS: Dict[str, type] = {
+    "fft": FFTEndpoint,
+    "bandpass": BandpassEndpoint,
+    "stats": StatsEndpoint,
+    "spectrum": SpectrumEndpoint,
+    "spectral_monitor": SpectralMonitorEndpoint,
+    "writer": WriterEndpoint,
+    "visualize": VisualizeEndpoint,
+}
+
+
+def register_endpoint(name: str, cls: type):
+    assert issubclass(cls, Endpoint)
+    ENDPOINTS[name] = cls
+
+
+def build_chain(cfg: Union[Dict[str, Any], str, Path], mesh=None,
+                grid=None) -> InSituChain:
+    if isinstance(cfg, (str, Path)):
+        cfg = json.loads(Path(cfg).read_text())
+    eps = []
+    for spec in cfg["chain"]:
+        spec = dict(spec)
+        kind = spec.pop("endpoint")
+        if kind not in ENDPOINTS:
+            raise KeyError(f"unknown endpoint {kind!r}; "
+                           f"known: {sorted(ENDPOINTS)}")
+        eps.append(ENDPOINTS[kind](**spec))
+    chain = InSituChain(eps, mesh=mesh, mode=cfg.get("mode", "insitu"))
+    chain.initialize(grid)
+    return chain

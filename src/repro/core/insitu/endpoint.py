@@ -1,0 +1,44 @@
+"""Endpoint protocol — Initialize / Execute / Finalize (paper §2.3).
+
+The SENSEI Python in-situ component exposes exactly these three hooks;
+we keep the contract. ``execute`` must be jit-traceable for device
+endpoints (they fuse into one XLA program in in-situ mode); endpoints
+with host side effects (writers, visualization) set ``host = True`` and
+run on materialized outputs after the device program.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Optional
+
+from repro.core.insitu.bridge import BridgeData
+
+
+class Endpoint(abc.ABC):
+    name: str = "endpoint"
+    host: bool = False            # True: runs outside jit on host data
+
+    def __init__(self, **params):
+        self.params = params
+        self._state: Dict[str, Any] = {}
+
+    # -- lifecycle -----------------------------------------------------------
+    def initialize(self, mesh=None, grid=None) -> None:
+        """Plan-time setup: compile FFT plans, build masks, open files."""
+
+    @abc.abstractmethod
+    def execute(self, data: BridgeData) -> BridgeData:
+        """Transform the bridge payload (traced for device endpoints)."""
+
+    def finalize(self) -> Dict[str, Any]:
+        """Tear down; return any summary the driver should report."""
+        return {}
+
+    # -- marshaling contract ---------------------------------------------------
+    def in_sharding(self, mesh):
+        """Sharding this endpoint requires on the primary array (or None
+        = accept anything). The chain inserts reshards on mismatch."""
+        return None
+
+    def out_sharding(self, mesh):
+        return None

@@ -1,0 +1,63 @@
+"""Spectral monitor — the paper's technique integrated into training.
+
+The "simulation" of the in-situ chain is a running training job: this
+endpoint consumes the on-device gradient/parameter payload the train
+step exposes, computes per-tensor power spectra (FFT along the trailing
+dim, radially binned) and band-energy summaries **without any host round
+trip**, and publishes small ``insitu_*`` arrays that flow back through
+training metrics. High-frequency gradient energy is a practical
+instability diagnostic — exactly the class of analysis the paper's
+infrastructure exists to make cheap.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fft.spectrum import tensor_spectrum_summary
+from repro.core.insitu.bridge import BridgeData
+from repro.core.insitu.endpoint import Endpoint
+
+
+class SpectralMonitorEndpoint(Endpoint):
+    name = "spectral_monitor"
+
+    def __init__(self, *, source: str = "grads", nbins: int = 16,
+                 max_tensors: int = 8, min_last_dim: int = 64,
+                 sample_rows: int = 4):
+        super().__init__(source=source, nbins=nbins)
+        self.source = source
+        self.nbins = nbins
+        self.max_tensors = max_tensors
+        self.min_last_dim = min_last_dim
+        # Spectra are computed on a row *sample* of each tensor: an FFT
+        # over a full FSDP-sharded tensor makes XLA all-gather it
+        # (measured +12 GiB/chip and +8% collective on qwen3-4b train);
+        # a static leading-rows slice touches one shard and makes the
+        # monitor effectively free. §Perf cell C, iteration 2.
+        self.sample_rows = sample_rows
+
+    def _sample(self, leaf):
+        x = leaf.reshape(-1, leaf.shape[-1])
+        return x[: self.sample_rows]
+
+    def execute(self, data: BridgeData) -> BridgeData:
+        tree = data.arrays[self.source]
+        leaves = [(jax.tree_util.keystr(p), self._sample(l)) for p, l
+                  in jax.tree_util.tree_leaves_with_path(tree)
+                  if hasattr(l, "ndim") and l.ndim >= 2
+                  and l.shape[-1] >= self.min_last_dim]
+        leaves = leaves[: self.max_tensors]
+        spectra = jnp.stack(
+            [tensor_spectrum_summary(l, self.nbins) for _, l in leaves]) \
+            if leaves else jnp.zeros((1, self.nbins), jnp.float32)
+        total = jnp.sum(spectra, axis=-1, keepdims=True)
+        norm = spectra / jnp.maximum(total, 1e-20)
+        arrays = dict(data.arrays)
+        arrays["insitu_grad_spectra"] = norm
+        # high-frequency fraction: top half of the bins
+        arrays["insitu_highfreq_frac"] = jnp.mean(
+            jnp.sum(norm[:, self.nbins // 2:], axis=-1))
+        return data.replace(arrays=arrays)

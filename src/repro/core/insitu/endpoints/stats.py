@@ -1,0 +1,50 @@
+"""Descriptive statistics + spectral analysis endpoints.
+
+The small "science product" stages of a chain: summary statistics of a
+field, band energies, and radial power spectra (spectrum.py). Their
+outputs are tiny arrays published back onto the bridge under
+``insitu_*`` keys — cheap to ship to host or to training metrics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.fft import spectrum
+from repro.core.insitu.bridge import BridgeData
+from repro.core.insitu.endpoint import Endpoint
+
+
+class StatsEndpoint(Endpoint):
+    name = "stats"
+
+    def __init__(self, *, array: str = "field"):
+        super().__init__(array=array)
+        self.array = array
+
+    def execute(self, data: BridgeData) -> BridgeData:
+        v = data.arrays[self.array]
+        x = v[0] if isinstance(v, tuple) else v
+        xf = x.astype(jnp.float32)
+        arrays = dict(data.arrays)
+        arrays["insitu_stats"] = jnp.stack([
+            jnp.min(xf), jnp.max(xf), jnp.mean(xf), jnp.std(xf),
+            jnp.sqrt(jnp.mean(xf * xf))])
+        return data.replace(arrays=arrays)
+
+
+class SpectrumEndpoint(Endpoint):
+    name = "spectrum"
+
+    def __init__(self, *, array: str = "field", nbins: int = 32):
+        super().__init__(array=array, nbins=nbins)
+        self.array = array
+        self.nbins = nbins
+
+    def execute(self, data: BridgeData) -> BridgeData:
+        assert data.domain == "spectral"
+        re, im = data.get_pair(self.array)
+        k, e = spectrum.radial_spectrum(re, im, self.nbins)
+        arrays = dict(data.arrays)
+        arrays["insitu_spectrum_k"] = k
+        arrays["insitu_spectrum_e"] = e
+        return data.replace(arrays=arrays)

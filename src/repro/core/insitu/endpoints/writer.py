@@ -1,0 +1,101 @@
+"""Host-side endpoints: array writer + image visualization.
+
+These terminate a chain the way the paper's matplotlib endpoint does
+(§2.3). ``host = True``: they run on materialized arrays after the fused
+device program. The visualizer writes portable PGM/PPM (no matplotlib
+dependency needed; if matplotlib exists we also emit a PNG).
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.insitu.bridge import BridgeData
+from repro.core.insitu.endpoint import Endpoint
+
+
+class WriterEndpoint(Endpoint):
+    name = "writer"
+    host = True
+
+    def __init__(self, *, array: str = "field", out_dir: str = "results/insitu",
+                 prefix: str = "field", every: int = 1):
+        super().__init__(array=array, out_dir=out_dir)
+        self.array = array
+        self.out_dir = Path(out_dir)
+        self.prefix = prefix
+        self.every = every
+        self.written = []
+
+    def initialize(self, mesh=None, grid=None):
+        self.out_dir.mkdir(parents=True, exist_ok=True)
+
+    def execute(self, data: BridgeData) -> BridgeData:
+        if data.step % self.every:
+            return data
+        v = data.arrays[self.array]
+        arr = np.asarray(v[0] if isinstance(v, tuple) else v)
+        path = self.out_dir / f"{self.prefix}_{data.step:06d}.npy"
+        tmp = path.with_suffix(".tmp.npy")
+        np.save(tmp, arr)
+        os.replace(tmp, path)               # atomic publish
+        self.written.append(str(path))
+        return data
+
+    def finalize(self):
+        return {"files": self.written}
+
+
+class VisualizeEndpoint(Endpoint):
+    name = "visualize"
+    host = True
+
+    def __init__(self, *, array: str = "field",
+                 out_dir: str = "results/insitu", prefix: str = "viz",
+                 log_scale: bool = False):
+        super().__init__(array=array)
+        self.array = array
+        self.out_dir = Path(out_dir)
+        self.prefix = prefix
+        self.log_scale = log_scale
+        self.written = []
+
+    def initialize(self, mesh=None, grid=None):
+        self.out_dir.mkdir(parents=True, exist_ok=True)
+
+    def execute(self, data: BridgeData) -> BridgeData:
+        v = data.arrays[self.array]
+        if isinstance(v, tuple):
+            arr = np.abs(np.asarray(v[0]) + 1j * np.asarray(v[1]))
+        else:
+            arr = np.asarray(v)
+        if arr.ndim == 3:
+            arr = arr[arr.shape[0] // 2]
+        if self.log_scale:
+            arr = np.log1p(np.abs(arr))
+        path = self.out_dir / f"{self.prefix}_{data.step:06d}.pgm"
+        write_pgm(path, arr)
+        self.written.append(str(path))
+        try:
+            import matplotlib
+            matplotlib.use("Agg")
+            import matplotlib.pyplot as plt
+            plt.imsave(str(path.with_suffix(".png")), arr, cmap="viridis")
+            self.written.append(str(path.with_suffix(".png")))
+        except Exception:
+            pass
+        return data
+
+    def finalize(self):
+        return {"files": self.written}
+
+
+def write_pgm(path, arr: np.ndarray):
+    lo, hi = float(arr.min()), float(arr.max())
+    scale = 255.0 / (hi - lo) if hi > lo else 1.0
+    img = ((arr - lo) * scale).astype(np.uint8)
+    with open(path, "wb") as f:
+        f.write(b"P5\n%d %d\n255\n" % (img.shape[1], img.shape[0]))
+        f.write(img.tobytes())

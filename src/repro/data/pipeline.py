@@ -1,0 +1,69 @@
+"""Host→device input pipeline: sharded placement + background prefetch.
+
+``ShardedLoader`` wraps the synthetic stream (or any step-indexed batch
+function), placing each global batch with the policy's DP sharding via
+``jax.make_array_from_process_local_data`` semantics (single-process here:
+``jax.device_put`` with a NamedSharding), and prefetching the next batch
+on a worker thread while the current step runs — the standard
+overlap-input-with-compute pattern.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(self, batch_fn: Callable[[int], Dict[str, np.ndarray]],
+                 policy, *, start_step: int = 0, prefetch: int = 2):
+        self.batch_fn = batch_fn
+        self.policy = policy
+        self.step = start_step
+        self.prefetch = prefetch
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: Dict[str, np.ndarray]):
+        out = {}
+        for k, v in batch.items():
+            spec = self.policy.act_tokens() if v.ndim == 2 \
+                else jax.sharding.PartitionSpec(self.policy.batch())
+            if v.ndim == 3:
+                spec = jax.sharding.PartitionSpec(
+                    self.policy.batch(), None, None)
+            out[k] = jax.device_put(v, self.policy.named(spec))
+        return out
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self._place(self.batch_fn(step))
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.5)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self.step = step
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

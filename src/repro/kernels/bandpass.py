@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused spectral bandpass + band-energy reduction.
+
+The paper's bandpass stage is an elementwise mask multiply in the
+spectral domain; standalone it is trivially memory-bound. The fusion win
+on TPU is doing the *filter and the diagnostics in one pass over the
+spectrum*: this kernel multiplies by the mask and simultaneously reduces
+kept/total energy per block (the quantities the in-situ stats endpoint
+reports), so the spectrum crosses HBM exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xr_ref, xi_ref, m_ref, or_ref, oi_ref, kept_ref, tot_ref):
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    m = m_ref[...]
+    p = xr * xr + xi * xi
+    or_ref[...] = xr * m
+    oi_ref[...] = xi * m
+    # per-block energy partials (grid loops accumulate via +=)
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        kept_ref[...] = jnp.zeros_like(kept_ref)
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    kept_ref[...] += jnp.sum(p * m)[None]
+    tot_ref[...] += jnp.sum(p)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bandpass_filter(re, im, mask, *, block_rows: int = 256,
+                    interpret: bool = False):
+    """(R, C) spectrum planes × (R, C) mask → filtered planes + kept/total
+    energies. Rows are blocked; mask is float (0/1) or soft."""
+    R, C = re.shape
+    br = min(block_rows, R)
+    assert R % br == 0
+    grid = (R // br,)
+    out_shape = (jax.ShapeDtypeStruct((R, C), jnp.float32),
+                 jax.ShapeDtypeStruct((R, C), jnp.float32),
+                 jax.ShapeDtypeStruct((1,), jnp.float32),
+                 jax.ShapeDtypeStruct((1,), jnp.float32))
+    blk = pl.BlockSpec((br, C), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    outr, outi, kept, tot = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[blk, blk, blk],
+        out_specs=[blk, blk, scalar, scalar],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(re, im, mask.astype(jnp.float32))
+    return outr, outi, kept[0], tot[0]

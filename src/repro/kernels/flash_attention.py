@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused flash attention (forward).
+
+The §Roofline tables repeatedly flag unfused attention as the memory
+bottleneck: at HLO level every (q-block × kv-block) logits tile round-
+trips HBM. This kernel keeps the running-softmax state (m, l, acc) in
+VMEM for a whole q block while streaming K/V blocks, so the S×S logits
+never touch HBM — the classic flash schedule, MXU-shaped (q·kᵀ and p·v
+as 128-aligned matmuls).
+
+Layout: grid (B·H, S/block_q). Per program: q block (block_q, hd) and
+the full per-head K/V (S, hd) resident in VMEM (fine through S≈8k at
+hd=128; longer sequences would add a kv grid axis). GQA is handled in
+the BlockSpec index maps: the K/V block index is derived from the query
+head, so K/V are NOT repeated in HBM. Causal masking and gemma-style
+logit softcap are fused.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+            seq: int, causal: bool, cap: float, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    bq, hd = q.shape
+    nk = seq // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(
+            k_ref[0], j * block_k, block_k, axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(
+            v_ref[0], j * block_k, block_k, axis=0).astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if cap > 0.0:
+            s = jnp.tanh(s / cap) * cap
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), -1e30, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    if causal:
+        # only blocks j with j*block_k <= (qi+1)*block_q - 1 contribute
+        nk_needed = (qi * block_q + block_q + block_k - 1) // block_k
+        nk_run = jnp.minimum(nk_needed, nk)
+    else:
+        nk_run = nk
+    m, l, acc = jax.lax.fori_loop(0, nk_run, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, softcap: float = 0.0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q (B, S, H, hd) · k/v (B, S, KV, hd), H = G·KV → out (B, S, H, hd).
+
+    Causal flash attention with fused optional logit softcap. K/V heads
+    are shared across query-head groups via index maps (no repeat)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0
+
+    # (B,S,H,hd) -> (B*H, S, hd) program-major layout
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    def kv_index(bh, qi):
+        return (bh // H) * KV + (bh % H) // G
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, seq=S,
+                          causal=causal, cap=float(softcap),
+                          scale=1.0 / math.sqrt(hd)),
+        grid=(B * H, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, S, hd), lambda bh, qi: (kv_index(bh, qi), 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda bh, qi: (kv_index(bh, qi), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,46 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes as traced jnp on the host, which validates the
+Pallas program logic; on TPU the same calls compile to Mosaic. The FFT
+core's ``local_fft(backend="pallas")`` routes here, so the distributed
+slab/pencil transforms can run their per-shard FFTs through the kernels.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bandpass import bandpass_filter
+from repro.kernels.fft_fourstep import fft_fourstep
+from repro.kernels.fft_stockham import fft_stockham
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fft(re, im, *, inverse: bool = False, block_b: int = 128,
+        kernel: str = "auto"):
+    """Batched FFT along the last axis, (B, N) split planes."""
+    B, N = re.shape
+    bb = block_b
+    while B % bb:
+        bb //= 2
+    bb = max(bb, 1)
+    if kernel == "auto":
+        pow2 = N & (N - 1) == 0
+        kernel = "stockham" if (pow2 and N < 256) else "fourstep"
+    if kernel == "stockham":
+        return fft_stockham(re, im, inverse=inverse, block_b=bb,
+                            interpret=_interpret())
+    return fft_fourstep(re, im, inverse=inverse, block_b=bb,
+                        interpret=_interpret())
+
+
+def bandpass(re, im, mask, *, block_rows: int = 256):
+    R, _ = re.shape
+    br = block_rows
+    while R % br:
+        br //= 2
+    return bandpass_filter(re, im, mask, block_rows=max(br, 1),
+                           interpret=_interpret())

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fft_ref(re, im, *, inverse: bool = False):
+    """Batched FFT along the last axis on split planes via jnp.fft."""
+    x = re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+    out = jnp.fft.ifft(x, axis=-1) if inverse else jnp.fft.fft(x, axis=-1)
+    return (jnp.real(out).astype(jnp.float32),
+            jnp.imag(out).astype(jnp.float32))
+
+
+def bandpass_ref(re, im, mask):
+    m = mask.astype(jnp.float32)
+    p = re.astype(jnp.float32) ** 2 + im.astype(jnp.float32) ** 2
+    return (re * m, im * m, jnp.sum(p * m), jnp.sum(p))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        softcap: float = 0.0):
+    """Oracle for the flash kernel: plain softmax attention with GQA
+    head-sharing, causal mask and optional logit softcap."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    import math
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,241 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = wire_bytes_per_chip / (links × link_bw)
+
+Methodology notes (verified empirically on this jax/XLA build — see
+DESIGN.md §6):
+
+* ``compiled.cost_analysis()`` reports **per-device** flops/bytes and
+  counts while-loop (scan) bodies **once**. Every step function in this
+  repo scans over the depth dimension with trip count L = n_groups, so we
+  lower each cell at L∈{0,1,full} and extrapolate
+  ``total = c(0) + L·(c(1) − c(0))``.
+* The memory term does NOT use cost_analysis' "bytes accessed": the CPU
+  backend hardly fuses, so every elementwise op (convert/add/mul/…)
+  counts its full operands — 30-50× what a TPU, which fuses elementwise
+  chains into neighboring matmuls, would move. Instead we use a
+  **dot-centric HBM traffic model** over the optimized HLO: operand +
+  output bytes of every dot/convolution (weights and activations cross
+  HBM per matmul, including remat re-executions), output bytes of
+  data-movement ops that cannot fuse (scatter / gather /
+  dynamic-slice / dynamic-update-slice / reduce / sort), plus the entry
+  computation's argument+output bytes once (optimizer state traffic).
+  This is the standard fusion-aware approximation; it is consistent
+  across cells and iterations, which is what the hillclimb needs.
+
+* Collective bytes are not in cost_analysis: we parse the optimized HLO
+  (``compiled.as_text()``), sum result-shape bytes per collective op, and
+  convert to per-chip wire bytes with ring-algorithm factors on the
+  participating-group size n:
+      all-reduce        2·(n−1)/n · bytes
+      all-gather        (n−1)/n · bytes(result)
+      reduce-scatter    (n−1)   · bytes(result)
+      all-to-all        (n−1)/n · bytes
+      collective-permute        bytes
+  The same L-extrapolation applies.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per direction), 2 links per mesh axis usable by a
+ring on a 2-D torus (we charge the whole collective to one axis' links,
+a conservative single-axis model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link per direction
+ICI_LINKS = 2                # links available along the ring axis
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^ ]*\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DOT_LINE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"(dot|convolution)\((.*?)\)", re.M)
+_MOVE_LINE_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"(scatter|gather|dynamic-slice|dynamic-update-slice|reduce|sort)\(",
+    re.M)
+
+
+def hbm_traffic_model(hlo_text: str) -> float:
+    """Fusion-aware per-chip HBM byte estimate (see module docstring)."""
+    total = 0.0
+    for m in _DOT_LINE_RE.finditer(hlo_text):
+        dtype, dims, _op, args = m.groups()
+        total += _shape_bytes(dtype, dims)          # output write
+        for sm in _SHAPE_RE.finditer(args):          # operand reads
+            total += _shape_bytes(sm.group(1), sm.group(2))
+    for m in _MOVE_LINE_RE.finditer(hlo_text):
+        dtype, dims, _op = m.groups()
+        total += _shape_bytes(dtype, dims)
+    return total
+
+
+def collective_wire_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind (loop bodies counted once)."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        nbytes = _shape_bytes(dtype, dims)
+        # participating group size: first replica group on this line
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.end():line_end if line_end > 0 else None]
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        if kind == "collective-permute":
+            out[kind] = out.get(kind, 0.0) + float(nbytes)
+            out["total"] = out.get("total", 0.0) + float(nbytes)
+            continue
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2 * (n - 1) / n * nbytes
+        elif kind == "all-gather":
+            wire = (n - 1) / n * nbytes
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * nbytes
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * nbytes
+        else:  # collective-permute
+            wire = float(nbytes)
+        out[kind] = out.get(kind, 0.0) + wire
+        out["total"] = out.get("total", 0.0) + wire
+    return out
+
+
+@dataclasses.dataclass
+class CellCost:
+    """Extrapolated per-chip totals for one compiled cell."""
+    flops: float
+    bytes_hbm: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    transcendentals: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (ICI_BW * ICI_LINKS)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.bytes_hbm,
+            "collective_wire_bytes_per_chip": self.coll_bytes,
+            "collective_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def extrapolate(c0: dict, c1: dict, trips: int) -> CellCost:
+    """total = c0 + trips·(c1 − c0) applied to flops/bytes/collectives."""
+    def ex(a, b):
+        return a + trips * (b - a)
+
+    kinds = set(c0["coll"]) | set(c1["coll"])
+    coll = {k: max(ex(c0["coll"].get(k, 0.0), c1["coll"].get(k, 0.0)), 0.0)
+            for k in kinds}
+    return CellCost(
+        flops=ex(c0["flops"], c1["flops"]),
+        bytes_hbm=ex(c0["bytes"], c1["bytes"]),
+        coll_bytes=coll.get("total", 0.0),
+        coll_by_kind=coll,
+        transcendentals=ex(c0.get("trans", 0.0), c1.get("trans", 0.0)),
+    )
+
+
+def raw_costs(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ma = compiled.memory_analysis()
+    io_bytes = (int(getattr(ma, "argument_size_in_bytes", 0))
+                + int(getattr(ma, "output_size_in_bytes", 0)))
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": hbm_traffic_model(hlo) + io_bytes,
+        "bytes_unfused": float(ca.get("bytes accessed", 0.0)),
+        "trans": float(ca.get("transcendentals", 0.0)),
+        "coll": collective_wire_bytes(hlo),
+    }
+
+
+def model_flops(cfg, shape, *, per_chip: bool = False, chips: int = 256
+                ) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params."""
+    n = cfg.param_count(active_only=cfg.moe is not None)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:
+        tokens = shape.global_batch * 1
+        factor = 2.0
+    total = factor * n * tokens
+    return total / chips if per_chip else total
+
+
+def memory_report(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {k: int(getattr(ma, k, 0)) for k in keys}
+    out["total_hbm_per_chip"] = (out["argument_size_in_bytes"]
+                                 + out["temp_size_in_bytes"]
+                                 + out["output_size_in_bytes"]
+                                 - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,225 @@
+"""Per-cell step functions + ShapeDtypeStruct input specs + shardings.
+
+``build_cell(cfg, shape, mesh)`` returns everything the dry-run needs:
+the step callable, abstract inputs (no allocation — ShapeDtypeStruct
+stand-ins), and in/out shardings, for each of:
+
+  * train   — full train_step (fwd+bwd+AdamW update), donated state
+  * prefill — prompt pass emitting last-token logits + caches
+  * decode  — one-token serve step against a seq_len KV cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.sharding.policy import Policy, make_policy
+from repro.train import step as train_step_mod
+
+WHISPER_CROSS_LEN = 1536   # padded encoder length for decode cells
+WHISPER_DEC_PROMPT = 448
+
+
+def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                multi_pod: bool, parallelism: str = "tp",
+                fsdp_params: bool = True) -> Policy:
+    ep = cfg.moe is not None and cfg.moe.mode == "ep"
+    kv_seq = shape.is_decode and shape.global_batch < mesh.shape["data"]
+    return make_policy(mesh, global_batch=shape.global_batch,
+                       multi_pod=multi_pod, ep_mode=ep,
+                       kv_seq_shard=kv_seq, parallelism=parallelism,
+                       fsdp=fsdp_params)
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                         policy: Policy) -> int:
+    per_chip = shape.global_batch // max(policy.dp_size, 1)
+    return int(min(max(per_chip // 2, 1), 8))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, train: bool,
+                policy: Policy):
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+    shard: Dict[str, Any] = {"tokens": P(policy.batch(), None)}
+    if train:
+        batch["labels"] = sds((B, S), jnp.int32)
+        shard["labels"] = P(policy.batch(), None)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = sds((B, cfg.num_patches, lm.VIT_STUB_DIM),
+                                    jnp.bfloat16)
+        shard["patch_embeds"] = P(policy.batch(), None, None)
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        shard["frames"] = P(policy.batch(), None, None)
+        # decoder runs on `tokens`; for train it mirrors seq_len,
+        # for prefill it is the (short) transcription prompt
+        if not train:
+            batch["tokens"] = sds((B, WHISPER_DEC_PROMPT), jnp.int32)
+            shard["tokens"] = P(policy.batch(), None)
+    return batch, shard
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, policy: Policy,
+                *, microbatches: int = 0, remat_policy=None,
+                param_dtype=jnp.float32, max_target: int = 0,
+                insitu: bool = False):
+    opt = AdamW(warmup_cosine(3e-4, 2000, 100_000))
+    micro = microbatches or default_microbatches(cfg, shape, policy)
+    insitu_hook = None
+    if insitu:
+        from repro.core.insitu.chain import InSituChain
+        from repro.core.insitu.endpoints.spectral_monitor import (
+            SpectralMonitorEndpoint)
+        insitu_hook = InSituChain(
+            [SpectralMonitorEndpoint(source="grads", nbins=16,
+                                     max_tensors=8)]).as_step_hook()
+    step_fn = train_step_mod.make_train_step(
+        cfg, policy, opt, microbatches=micro, remat_policy=remat_policy,
+        insitu_chain=insitu_hook, insitu_every=1)
+    state_shapes = train_step_mod.train_state_shapes(
+        cfg, opt, param_dtype=param_dtype,
+        max_target=max_target or shape.seq_len)
+    state_shardings = train_step_mod.state_shardings(policy, state_shapes)
+    batch, batch_shard = batch_specs(cfg, shape, train=True, policy=policy)
+    in_shardings = (state_shardings,
+                    jax.tree.map(policy.named, batch_shard,
+                                 is_leaf=lambda x: isinstance(x, P)))
+    metric_shapes = jax.eval_shape(step_fn, state_shapes, batch)[1]
+    out_shardings = (state_shardings,
+                     jax.tree.map(lambda _: policy.named(P()),
+                                  metric_shapes))
+    return dict(fn=step_fn, args=(state_shapes, batch),
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                donate_argnums=(0,), meta={"microbatches": micro})
+
+
+def _param_shapes(cfg, dtype, max_target):
+    if cfg.family == "encdec":
+        return jax.eval_shape(partial(encdec.init_params, cfg,
+                                      dtype=dtype, max_target=max_target),
+                              jax.random.PRNGKey(0))
+    return jax.eval_shape(partial(lm.init_params, cfg, dtype=dtype),
+                          jax.random.PRNGKey(0))
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, policy: Policy,
+                  *, param_dtype=jnp.bfloat16):
+    params = _param_shapes(cfg, param_dtype,
+                           max_target=max(shape.seq_len, WHISPER_DEC_PROMPT)
+                           if cfg.family == "encdec" else 0)
+    mod = encdec if cfg.family == "encdec" else lm
+
+    def fn(params, batch):
+        return mod.prefill(cfg, params, batch, policy,
+                           cache_len=shape.seq_len)
+
+    batch, batch_shard = batch_specs(cfg, shape, train=False, policy=policy)
+    in_shardings = (policy.tree_shardings(params),
+                    jax.tree.map(policy.named, batch_shard,
+                                 is_leaf=lambda x: isinstance(x, P)))
+    # Explicit output shardings: without them XLA replicates the emitted
+    # KV caches across the model axis (observed 208 GiB/chip on dbrx).
+    out_shapes = jax.eval_shape(fn, params, batch)
+    out_shardings = (policy.named(policy.act_logits(cfg.vocab_size)),
+                     decode_state_shardings(cfg, out_shapes[1], policy))
+    return dict(fn=fn, args=(params, batch), in_shardings=in_shardings,
+                out_shardings=out_shardings, donate_argnums=(), meta={})
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, policy: Policy,
+                 *, param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                 cache_impl: str = "dense"):
+    B, S = shape.global_batch, shape.seq_len
+    params = _param_shapes(cfg, param_dtype,
+                           max_target=S if cfg.family == "encdec" else 0)
+    if cfg.family == "encdec":
+        state = jax.eval_shape(
+            partial(encdec.init_decode_state, cfg, B, S,
+                    WHISPER_CROSS_LEN, cache_dtype))
+        mod = encdec
+    else:
+        state = jax.eval_shape(
+            partial(lm.init_decode_state, cfg, B, S, cache_dtype,
+                    cache_impl=cache_impl))
+        mod = lm
+
+    def fn(params, tokens, state):
+        return mod.decode_step(cfg, params, tokens, state, policy)
+
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    state_shardings = decode_state_shardings(cfg, state, policy)
+    in_shardings = (policy.tree_shardings(params),
+                    policy.named(P(policy.batch(), None)),
+                    state_shardings)
+    out_shardings = (policy.named(policy.act_logits(cfg.vocab_size)),
+                     state_shardings)
+    return dict(fn=fn, args=(params, tokens, state),
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                donate_argnums=(2,), meta={})
+
+
+def decode_state_shardings(cfg, state_shapes, policy: Policy):
+    """KV caches: (G?, B, S, KV, hd) → batch × seq × tp shardings.
+    SSM states: heads over tp. Scalars replicated."""
+    kv_spec = policy.act_kv_cache(cfg.num_kv_heads)
+
+    def rule(path, leaf):
+        names = []
+        for k in path:
+            if hasattr(k, "key"):
+                names.append(str(k.key))
+            elif hasattr(k, "name"):
+                names.append(str(k.name))
+            elif hasattr(k, "idx"):
+                names.append(f"#{k.idx}")
+            else:
+                names.append(str(k))
+        nd = len(leaf.shape)
+        b = policy.batch()
+        if "pos" in names:
+            return policy.named(P())
+        if any(n in ("caches", "self", "cross") for n in names):
+            if nd == 5:      # k/v stacked over depth (G,B,S,KV,hd)
+                return policy.named(P(None, *kv_spec))
+            if nd == 4:      # k/v (B,S,KV,hd)
+                return policy.named(P(*kv_spec))
+            if nd == 3:      # positions (G,B,S)
+                return policy.named(P(None, b, kv_spec[1]))
+            if nd == 2:      # positions (B,S)
+                return policy.named(P(b, kv_spec[1]))
+        if any(n == "ssm" for n in names):
+            # SSMState fields (stacked over G groups):
+            #   h (G,B,H,N,P) — heads on tp
+            #   conv (G,B,K-1,H,P) — heads on tp
+            #   conv_B / conv_C (G,B,K-1,Gr,N) — replicated
+            field = names[-1]
+            if field in ("#0", "h"):
+                return policy.named(P(None, b, policy.tp_axis, None, None))
+            if field in ("#1", "conv"):
+                return policy.named(P(None, b, None, policy.tp_axis, None))
+            return policy.named(P(None, b, *([None] * (nd - 2))))
+        return policy.named(P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(rule, state_shapes)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               multi_pod: bool = False, parallelism: str = "tp",
+               fsdp_params: bool = True, **overrides):
+    policy = cell_policy(cfg, shape, mesh, multi_pod, parallelism,
+                         fsdp_params)
+    if shape.kind == "train":
+        return build_train(cfg, shape, policy, **overrides), policy
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, policy, **overrides), policy
+    return build_decode(cfg, shape, policy, **overrides), policy

@@ -1,0 +1,125 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen3-4b --reduced …``
+
+Wires every substrate layer together: config registry → model → sharded
+train step (policy from the live mesh) → deterministic data pipeline →
+AdamW → checkpoint/restart loop with straggler monitoring → optional
+in-situ spectral-monitor chain running inside the step (the paper's
+technique attached to training as a first-class feature).
+
+On this CPU container use ``--reduced`` (small same-family config); on a
+real TPU fleet the same entry point runs the full configs over
+``make_production_mesh()``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.insitu.chain import InSituChain
+from repro.core.insitu.endpoints.spectral_monitor import SpectralMonitorEndpoint
+from repro.data import synthetic
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import lm
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.runtime.fault import run_with_restarts
+from repro.sharding.policy import make_policy
+from repro.train import step as train_step_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--insitu-every", type=int, default=10)
+    ap.add_argument("--no-insitu", action="store_true")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=None,
+                    help="inject failures at these steps (FT test)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (registry.get_reduced(args.arch) if args.reduced
+           else registry.get_config(args.arch))
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    policy = make_policy(mesh, global_batch=args.batch)
+
+    opt = AdamW(warmup_cosine(args.lr, max(args.steps // 20, 1),
+                              args.steps))
+
+    insitu_chain = None
+    if not args.no_insitu:
+        insitu_chain = InSituChain(
+            [SpectralMonitorEndpoint(source="grads", nbins=8,
+                                     max_tensors=4)],
+            mesh=mesh).initialize()
+
+    step_fn = train_step_mod.make_train_step(
+        cfg, policy, opt, microbatches=args.microbatches,
+        loss_chunk=min(args.seq, 512),
+        insitu_chain=(insitu_chain.as_step_hook() if insitu_chain
+                      else None),
+        insitu_every=args.insitu_every)
+    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    def make_state():
+        return train_step_mod.init_train_state(
+            cfg, opt, jax.random.PRNGKey(args.seed),
+            param_dtype=jnp.float32, max_target=args.seq)
+
+    def batch_fn(step):
+        b = synthetic.batch_at(
+            step, global_batch=args.batch, seq_len=args.seq,
+            vocab=cfg.vocab_size, seed=args.seed, family=cfg.family,
+            num_patches=min(cfg.num_patches, args.seq // 2),
+            patch_dim=lm.VIT_STUB_DIM, frame_dim=cfg.d_model)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    losses = []
+
+    def on_metrics(step, metrics):
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % 10 == 0 or step <= 2:
+            extra = ""
+            if "insitu" in metrics:
+                hf = metrics["insitu"].get("insitu_highfreq_frac")
+                if hf is not None:
+                    extra = f" gradHF={float(hf):.3f}"
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e}"
+                  f" gnorm {float(metrics['grad_norm']):.2f}{extra}",
+                  flush=True)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        state, report = run_with_restarts(
+            make_state=make_state, train_step=step_fn, batch_fn=batch_fn,
+            total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, fail_at=args.fail_at,
+            on_metrics=on_metrics)
+
+    out = {"arch": cfg.name, "steps": args.steps,
+           "first_loss": losses[0] if losses else None,
+           "final_loss": losses[-1] if losses else None,
+           "wall_s": round(time.time() - t0, 1), **report}
+    print(json.dumps(out, default=str))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Grouped-query attention with the variants used by the assigned archs.
+
+Paths:
+  * direct        — S·S einsum, short sequences (smoke tests, decode).
+  * blockwise     — flash-style scan over (q-block × kv-block) with running
+                    max/denominator in f32; O(block) live memory. Used for
+                    long prefill/train sequences.
+  * banded (SWA)  — per q-block a ``dynamic_slice`` of the KV sequence of
+                    static length window+block, so FLOPs scale with S·W
+                    rather than S² (h2o-danube, gemma2 local layers).
+  * decode        — one query position against a KV cache: full cache,
+                    rolling (SWA) cache with position bookkeeping, or a
+                    sequence-sharded cache whose softmax reductions XLA
+                    turns into two-pass all-reduce combines (long_500k).
+
+Feature flags per arch: GQA ratios, RoPE theta, qk-norm (qwen3), qkv-bias
+(qwen2.5), attention logit softcap (gemma2/grok), sliding windows.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rms_norm, softcap
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_attn_params(cfg, key, dtype):
+    d, kv, hd = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    h = cfg.heads_padded
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype, fan_in=d),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype, fan_in=d),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype, fan_in=d),
+        "wo": dense_init(ks[3], (h, hd, d), dtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def head_mask(cfg, x):
+    """Zero the padded compute-only heads. x (..., Hp, hd)."""
+    if cfg.heads_padded == cfg.num_heads:
+        return x
+    mask = (jnp.arange(cfg.heads_padded) < cfg.num_heads)
+    return x * mask[..., :, None].astype(x.dtype)
+
+
+def maybe_repeat_kv(cfg, policy, k, v):
+    """When KV heads don't divide the TP axis, repeat K/V up to the padded
+    query-head count so every attention einsum shards cleanly on heads.
+    Activation-only (params keep true GQA shapes)."""
+    if policy is None or policy.tp_axis is None:
+        return k, v
+    tp = policy.mesh.shape[policy.tp_axis]
+    kv = k.shape[2]
+    if kv % tp == 0:
+        return k, v
+    reps = cfg.heads_padded // kv
+    return (jnp.repeat(k, reps, axis=2), jnp.repeat(v, reps, axis=2))
+
+
+def project_qkv(cfg, p, x, positions, *, rope: bool = True):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope+qk_norm applied."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, plus_one=True)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, plus_one=True)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(p, attn, cfg=None):  # (B,S,Hp,hd) -> (B,S,D)
+    if cfg is not None:
+        attn = head_mask(cfg, attn)
+    return jnp.einsum("bsnh,nhd->bsd", attn, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention pieces (grouped heads, f32 accumulation)
+# ---------------------------------------------------------------------------
+
+def _group(q, n_kv):
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def _logits(qg, k, scale, cap):
+    # qg (B,Q,KV,G,hd) × k (B,S,KV,hd) -> (B,KV,G,Q,S)
+    l = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    return softcap(l, cap)
+
+
+def _pv(probs, v):
+    # (B,KV,G,Q,S) × (B,S,KV,hd) -> (B,Q,KV,G,hd)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+
+
+def attention_direct(q, k, v, *, causal: bool, cap: Optional[float] = None,
+                     q_offset: int = 0, window: Optional[int] = None,
+                     kv_positions=None, q_positions=None):
+    """Unblocked attention. q (B,Q,H,hd); k,v (B,S,KV,hd)."""
+    B, Q, H, hd = q.shape
+    S = k.shape[1]
+    n_kv = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    qg = _group(q, n_kv)
+    logits = _logits(qg, k, scale, cap)                      # (B,KV,G,Q,S)
+    if q_positions is None:
+        q_positions = q_offset + jnp.arange(Q)
+    if kv_positions is None:
+        kv_positions = jnp.arange(S)
+    qpos = q_positions.reshape(-1, Q) if q_positions.ndim > 1 else q_positions[None, :]
+    kpos = kv_positions.reshape(-1, S) if kv_positions.ndim > 1 else kv_positions[None, :]
+    mask = jnp.ones((qpos.shape[0], Q, S), dtype=bool)
+    if causal:
+        mask &= qpos[:, :, None] >= kpos[:, None, :]
+    if window is not None:
+        mask &= (qpos[:, :, None] - kpos[:, None, :]) < window
+    mask &= kpos[:, None, :] >= 0                            # unwritten slots
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = _pv(probs, v)
+    return out.reshape(B, Q, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise flash attention (scan over q blocks; inner scan over kv blocks)
+# ---------------------------------------------------------------------------
+
+class _Flash(NamedTuple):
+    m: jax.Array      # (B,KV,G,Bq) running max
+    l: jax.Array      # (B,KV,G,Bq) running denom
+    acc: jax.Array    # (B,Bq,KV,G,hd) running numerator
+
+
+def attention_blockwise(q, k, v, *, causal: bool = True,
+                        cap: Optional[float] = None,
+                        q_block: int = 512, kv_block: int = 1024):
+    """Flash-style attention; O(q_block·kv_block) live logits."""
+    B, S, H, hd = q.shape
+    n_kv = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    nq, nk = S // q_block, S // kv_block
+    qb = q.reshape(B, nq, q_block, H, hd).swapaxes(0, 1)
+    kb = k.reshape(B, nk, kv_block, n_kv, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nk, kv_block, n_kv, hd).swapaxes(0, 1)
+
+    def q_step(_, qi_and_i):
+        qi, i = qi_and_i
+        qg = _group(qi, n_kv)                                 # (B,Bq,KV,G,hd)
+        init = _Flash(
+            m=jnp.full((B, n_kv, H // n_kv, q_block), -1e30, jnp.float32),
+            l=jnp.zeros((B, n_kv, H // n_kv, q_block), jnp.float32),
+            acc=jnp.zeros((B, q_block, n_kv, H // n_kv, hd), jnp.float32),
+        )
+
+        def kv_step(st, kj_vj_j):
+            kj, vj, j = kj_vj_j
+            logits = _logits(qg, kj, scale, cap)              # (B,KV,G,Bq,Bk)
+            if causal:
+                qpos = i * q_block + jnp.arange(q_block)
+                kpos = j * kv_block + jnp.arange(kv_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(st.m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(st.m - m_new)
+            l_new = st.l * corr + jnp.sum(p, axis=-1)
+            acc_new = st.acc * corr.transpose(0, 3, 1, 2)[..., None] + _pv(p, vj)
+            return _Flash(m_new, l_new, acc_new), None
+
+        st, _ = jax.lax.scan(kv_step, init,
+                             (kb, vb, jnp.arange(nk)))
+        denom = st.l.transpose(0, 3, 1, 2)[..., None]
+        out = (st.acc / jnp.maximum(denom, 1e-30)).reshape(B, q_block, H, hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def attention_banded(q, k, v, *, window: int, cap: Optional[float] = None,
+                     q_block: int = 512):
+    """Sliding-window attention: per q block, a static-length KV slice of
+    window+q_block positions is gathered with ``dynamic_slice`` so compute
+    scales as O(S·W)."""
+    B, S, H, hd = q.shape
+    n_kv = k.shape[2]
+    q_block = min(q_block, S)
+    L = min(window + q_block, S)
+    nq = S // q_block
+    qb = q.reshape(B, nq, q_block, H, hd).swapaxes(0, 1)
+
+    def q_step(_, qi_and_i):
+        qi, i = qi_and_i
+        end = (i + 1) * q_block
+        start = jnp.clip(end - L, 0, S - L)
+        ks = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+        q_pos = i * q_block + jnp.arange(q_block)
+        kv_pos = start + jnp.arange(L)
+        out = attention_direct(qi, ks, vs, causal=True, cap=cap,
+                               window=window,
+                               q_positions=q_pos, kv_positions=kv_pos)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Unified entry point used by the blocks
+# ---------------------------------------------------------------------------
+
+DIRECT_MAX_SEQ = 2048
+
+
+def _use_flash_kernel(kind: str, policy) -> bool:
+    """On TPU the fused Pallas flash kernel replaces the jnp blockwise
+    path (the §Roofline memory-term fix: logits stay in VMEM). On CPU we
+    keep the jnp path — interpret-mode kernels are for correctness tests,
+    not the training loop."""
+    return (jax.default_backend() == "tpu" and policy is None
+            and kind in ("full", "bidir"))
+
+
+def attention(q, k, v, *, kind: str, cfg, policy=None) -> jax.Array:
+    """kind: "full" (causal) | "swa" | "bidir" (encoder/cross)."""
+    cap = cfg.attn_softcap
+    S = q.shape[1]
+    if _use_flash_kernel(kind, policy):
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=(kind == "full"),
+                               softcap=cap or 0.0)
+    k, v = maybe_repeat_kv(cfg, policy, k, v)
+    if policy is not None:
+        q = policy.constrain(q, policy.act_heads())
+        k = policy.constrain(k, policy.act_heads())
+        v = policy.constrain(v, policy.act_heads())
+    if kind == "swa" and cfg.window is not None and S > cfg.window:
+        out = attention_banded(q, k, v, window=cfg.window, cap=cap)
+    elif kind == "bidir":
+        if S <= DIRECT_MAX_SEQ:
+            out = attention_direct(q, k, v, causal=False, cap=cap)
+        else:
+            out = attention_blockwise(q, k, v, causal=False, cap=cap)
+    elif S <= DIRECT_MAX_SEQ:
+        out = attention_direct(q, k, v, causal=True, cap=cap,
+                               window=cfg.window if kind == "swa" else None)
+    else:
+        out = attention_blockwise(q, k, v, causal=True, cap=cap)
+    if policy is not None:
+        out = policy.constrain(out, policy.act_heads())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single position, KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, kv_positions, cur_pos, *, cfg,
+                     window: Optional[int] = None, policy=None):
+    """q (B,1,H,hd); caches (B,S,KV,hd); kv_positions (B,S) int32 holding the
+    absolute position stored in each slot (-1 = unwritten). Works for full,
+    rolling and sequence-sharded caches alike — masking is by position."""
+    if policy is not None:
+        k_cache = policy.constrain(k_cache, policy.act_kv_cache(k_cache.shape[2]))
+        v_cache = policy.constrain(v_cache, policy.act_kv_cache(k_cache.shape[2]))
+    cur_pos = jnp.asarray(cur_pos, jnp.int32)
+    q_pos = (jnp.full((q.shape[0], 1), cur_pos) if cur_pos.ndim == 0
+             else cur_pos[:, None])
+    out = attention_direct(
+        q, k_cache, v_cache, causal=True, cap=cfg.attn_softcap,
+        window=window, q_positions=q_pos,
+        kv_positions=kv_positions)
+    return out

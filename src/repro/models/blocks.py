@@ -1,0 +1,302 @@
+"""Decoder blocks and scan-over-layers assembly.
+
+Models repeat a *pattern period* of layers (e.g. gemma2 alternates
+("swa","full"); zamba2 is five "ssm" layers then one "hybrid" slot that
+invokes the shared attention block). Parameters for one period are
+stacked with a leading ``n_groups`` dim under the "blocks" key and the
+whole depth runs as one ``lax.scan`` — keeping the lowered HLO compact
+(one period body) regardless of depth, which matters both for compile
+time and for the roofline trip-count extrapolation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Per-period parameter init
+# ---------------------------------------------------------------------------
+
+def init_layer_params(cfg, kind: str, key, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "ssm":
+        return {
+            "pre_norm": jnp.zeros((d,), dtype),
+            "ssm": ssm_mod.init_ssm_params(cfg, k1, dtype),
+        }
+    p: Dict[str, Any] = {
+        "pre_norm": jnp.zeros((d,), dtype),
+        "attn": attn_mod.init_attn_params(cfg, k1, dtype),
+        "pre_mlp_norm": jnp.zeros((d,), dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe_params(cfg, k2, dtype)
+    else:
+        p["mlp"] = mlp_mod.init_mlp_params(cfg, k2, dtype)
+    if cfg.post_norm:  # gemma2 sandwich norms
+        p["post_attn_norm"] = jnp.zeros((d,), dtype)
+        p["post_mlp_norm"] = jnp.zeros((d,), dtype)
+    if kind == "hybrid":
+        # zamba2: per-use projection of concat(hidden, first-embed) -> D;
+        # the attention/MLP weights themselves are shared (see init_shared).
+        p = {"pre_norm": jnp.zeros((d,), dtype),
+             "fuse_proj": dense_init(k3, (2 * d, d), dtype, fan_in=2 * d),
+             "ssm": ssm_mod.init_ssm_params(cfg, k1, dtype)}
+    return p
+
+
+def init_period_params(cfg, key, dtype) -> Dict[str, Any]:
+    keys = jax.random.split(key, len(cfg.layer_pattern))
+    return {f"l{i}": init_layer_params(cfg, kind, keys[i], dtype)
+            for i, kind in enumerate(cfg.layer_pattern)}
+
+
+def init_shared_params(cfg, key, dtype) -> Optional[Dict[str, Any]]:
+    """Zamba2 shared attention+MLP block (one copy reused every period)."""
+    if "hybrid" not in cfg.layer_pattern:
+        return None
+    k1, k2 = jax.random.split(key)
+    return {
+        "pre_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attn_params(cfg, k1, dtype),
+        "pre_mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": mlp_mod.init_mlp_params(cfg, k2, dtype),
+    }
+
+
+def n_groups(cfg) -> int:
+    period = len(cfg.layer_pattern)
+    assert cfg.num_layers % period == 0, (cfg.name, cfg.num_layers, period)
+    return cfg.num_layers // period
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill): full-sequence layer application
+# ---------------------------------------------------------------------------
+
+def _attn_layer(cfg, p, x, positions, kind, policy, *, want_cache=False):
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps, plus_one=True)
+    q, k, v = attn_mod.project_qkv(cfg, p["attn"], h, positions)
+    out = attn_mod.attention(q, k, v, kind=("swa" if kind == "swa" else "full"),
+                             cfg=cfg, policy=policy)
+    out = attn_mod.out_proj(p["attn"], out, cfg)
+    if cfg.post_norm:
+        out = rms_norm(out, p["post_attn_norm"], cfg.norm_eps, plus_one=True)
+    x = x + out
+    h = rms_norm(x, p["pre_mlp_norm"], cfg.norm_eps, plus_one=True)
+    aux = 0.0
+    if cfg.moe is not None:
+        out, aux = moe_mod.moe_mlp(cfg, p["moe"], h, policy)
+    else:
+        out = mlp_mod.mlp(cfg, p["mlp"], h, policy)
+    if cfg.post_norm:
+        out = rms_norm(out, p["post_mlp_norm"], cfg.norm_eps, plus_one=True)
+    x = x + out
+    cache = _constrain_cache(k, v, policy) if want_cache else None
+    return x, aux, cache
+
+
+def _constrain_cache(k, v, policy):
+    """Pin prefill-emitted K/V to the cache layout *before* the scan
+    stacks them — otherwise XLA replicates the (G,B,S,KV,hd) ys buffer
+    across the model axis (observed 200+ GiB/chip on 32k prefill)."""
+    if policy is None:
+        return (k, v)
+    spec = policy.act_kv_cache(k.shape[2])
+    return (policy.constrain(k, spec), policy.constrain(v, spec))
+
+
+def _ssm_layer(cfg, p, x, policy, *, want_state=False):
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps, plus_one=True)
+    if want_state:
+        out, st = ssm_mod.ssm_mixer(cfg, p["ssm"], h, policy,
+                                    want_state=True)
+        return x + out, st
+    return x + ssm_mod.ssm_mixer(cfg, p["ssm"], h, policy), None
+
+
+def _shared_block(cfg, shared, p, x, x0, positions, policy, *,
+                  want_cache=False):
+    """Zamba2 hybrid slot: shared attn+MLP on concat(x, x0), then own ssm."""
+    fused = jnp.einsum("bsd,dk->bsk",
+                       jnp.concatenate([x, x0], axis=-1), p["fuse_proj"])
+    h = rms_norm(fused, shared["pre_norm"], cfg.norm_eps, plus_one=True)
+    q, k, v = attn_mod.project_qkv(cfg, shared["attn"], h, positions)
+    out = attn_mod.attention(q, k, v, kind="full", cfg=cfg, policy=policy)
+    out = attn_mod.out_proj(shared["attn"], out, cfg)
+    x = x + out
+    h = rms_norm(x, shared["pre_mlp_norm"], cfg.norm_eps, plus_one=True)
+    x = x + mlp_mod.mlp(cfg, shared["mlp"], h, policy)
+    x, st = _ssm_layer(cfg, p, x, policy, want_state=want_cache)
+    cache = _constrain_cache(k, v, policy) if want_cache else None
+    return x, cache, st
+
+
+def period_forward(cfg, pparams, x, x0, positions, policy, shared=None, *,
+                   want_cache: bool = False):
+    """Apply one pattern period. Returns (x, aux, caches, ssm_states)."""
+    aux_total = 0.0
+    caches, states = {}, {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        p = pparams[f"l{i}"]
+        key = f"l{i}"
+        if kind == "ssm":
+            x, st = _ssm_layer(cfg, p, x, policy, want_state=want_cache)
+            if want_cache:
+                states[key] = st
+        elif kind == "hybrid":
+            x, cache, st = _shared_block(cfg, shared, p, x, x0, positions,
+                                         policy, want_cache=want_cache)
+            if want_cache:
+                caches[key] = cache
+                states[key] = st
+        else:
+            x, aux, cache = _attn_layer(cfg, p, x, positions, kind, policy,
+                                        want_cache=want_cache)
+            aux_total = aux_total + aux
+            if want_cache:
+                caches[key] = cache
+        if policy is not None:
+            x = policy.constrain(x, policy.act_hidden())
+    return x, aux_total, caches, states
+
+
+def stack_forward(cfg, blocks, x, positions, policy, shared=None, *,
+                  remat: bool = True, remat_policy=None):
+    """Scan the stacked periods over depth. blocks: pytree with leading
+    n_groups dim. Returns (x, total_aux)."""
+    x0 = x
+
+    def body(carry, gparams):
+        h, aux = carry
+        h2, aux2, _, _ = period_forward(cfg, gparams, h, x0, positions,
+                                        policy, shared)
+        return (h2, aux + aux2), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=remat_policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def stack_prefill(cfg, blocks, x, positions, policy, shared=None):
+    """Full-sequence pass that also emits per-layer caches + ssm states."""
+    x0 = x
+
+    def body(h, gparams):
+        h2, _, caches, states = period_forward(
+            cfg, gparams, h, x0, positions, policy, shared, want_cache=True)
+        return h2, (caches, states)
+
+    x, (caches, states) = jax.lax.scan(body, x, blocks)
+    return x, caches, states
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token through the stack with per-layer caches
+# ---------------------------------------------------------------------------
+
+def period_decode(cfg, pparams, x, x0, caches, ssm_states, cur_pos, policy,
+                  shared=None):
+    """One-token step through a period.
+
+    caches: dict f"l{i}" -> cache pytree for attention slots.
+    ssm_states: dict f"l{i}" -> SSMState for ssm/hybrid slots.
+    """
+    from repro.serve.kvcache import (cache_positions, read_kv,
+                                     update_any_cache as update_cache)
+
+    new_caches, new_states = {}, {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        p = pparams[f"l{i}"]
+        key = f"l{i}"
+        if kind == "ssm":
+            h = rms_norm(x, p["pre_norm"], cfg.norm_eps, plus_one=True)
+            out, new_states[key] = ssm_mod.ssm_decode_step(
+                cfg, p["ssm"], h, ssm_states[key], policy)
+            x = x + out
+            continue
+        if kind == "hybrid":
+            fused = jnp.einsum(
+                "bsd,dk->bsk", jnp.concatenate([x, x0], axis=-1),
+                p["fuse_proj"])
+            h = rms_norm(fused, shared["pre_norm"], cfg.norm_eps,
+                         plus_one=True)
+            q, k, v = attn_mod.project_qkv(cfg, shared["attn"], h,
+                                           positions_of(cur_pos, x))
+            cache = update_cache(caches[key], k, v, cur_pos)
+            new_caches[key] = cache
+            k_r, v_r = read_kv(cache, k.dtype)
+            out = attn_mod.decode_attention(
+                q, k_r, v_r, cache_positions(cache), cur_pos,
+                cfg=cfg, policy=policy)
+            out = attn_mod.out_proj(shared["attn"], out, cfg)
+            x = x + out
+            h = rms_norm(x, shared["pre_mlp_norm"], cfg.norm_eps,
+                         plus_one=True)
+            x = x + mlp_mod.mlp(cfg, shared["mlp"], h, policy)
+            h = rms_norm(x, p["pre_norm"], cfg.norm_eps, plus_one=True)
+            out, new_states[key] = ssm_mod.ssm_decode_step(
+                cfg, p["ssm"], h, ssm_states[key], policy)
+            x = x + out
+            continue
+        # attention slot (full or swa)
+        h = rms_norm(x, p["pre_norm"], cfg.norm_eps, plus_one=True)
+        q, k, v = attn_mod.project_qkv(cfg, p["attn"], h,
+                                       positions_of(cur_pos, x))
+        cache = update_cache(caches[key], k, v, cur_pos)
+        new_caches[key] = cache
+        k_r, v_r = read_kv(cache, k.dtype)
+        out = attn_mod.decode_attention(
+            q, k_r, v_r, cache_positions(cache), cur_pos, cfg=cfg,
+            window=cfg.window if kind == "swa" else None, policy=policy)
+        out = attn_mod.out_proj(p["attn"], out, cfg)
+        if cfg.post_norm:
+            out = rms_norm(out, p["post_attn_norm"], cfg.norm_eps,
+                           plus_one=True)
+        x = x + out
+        h = rms_norm(x, p["pre_mlp_norm"], cfg.norm_eps, plus_one=True)
+        if cfg.moe is not None:
+            out, _ = moe_mod.moe_mlp(cfg, p["moe"], h, policy)
+        else:
+            out = mlp_mod.mlp(cfg, p["mlp"], h, policy)
+        if cfg.post_norm:
+            out = rms_norm(out, p["post_mlp_norm"], cfg.norm_eps,
+                           plus_one=True)
+        x = x + out
+    return x, new_caches, new_states
+
+
+def positions_of(cur_pos, x):
+    """Rope/mask positions for a one-token step; cur_pos scalar or (B,)."""
+    cur_pos = jnp.asarray(cur_pos, jnp.int32)
+    if cur_pos.ndim == 0:
+        return jnp.full((x.shape[0], x.shape[1]), cur_pos, jnp.int32)
+    return jnp.broadcast_to(cur_pos[:, None],
+                            (x.shape[0], x.shape[1])).astype(jnp.int32)
+
+
+def stack_decode(cfg, blocks, x, caches, ssm_states, cur_pos, policy,
+                 shared=None):
+    """Scan one token through all periods, threading stacked caches."""
+    x0 = x
+
+    def body(h, xs):
+        gparams, gcaches, gstates = xs
+        h2, nc, ns = period_decode(cfg, gparams, h, x0, gcaches, gstates,
+                                   cur_pos, policy, shared)
+        return h2, (nc, ns)
+
+    x, (new_caches, new_states) = jax.lax.scan(
+        body, x, (blocks, caches, ssm_states))
+    return x, new_caches, new_states

@@ -1,0 +1,137 @@
+"""Shared model building blocks: norms, rotary embeddings, init, losses."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6, *, plus_one: bool = False):
+    """RMSNorm in f32 accumulation. ``plus_one`` = gemma-style (1+scale)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if plus_one:
+        s = 1.0 + s
+    return (y * s).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                     # (hd/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, N, hd) with positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (...,S,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(length: int, dim: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal embeddings (T, D)."""
+    log_timescale = math.log(10000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / misc
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(hidden, head_w, labels, *, chunk: int,
+                         constrain=None, final_cap: Optional[float] = None):
+    """Cross-entropy over a large vocab computed seq-chunk at a time.
+
+    The (B, S, V) logits tensor never materializes in full: each chunk's
+    logits are formed, reduced to per-token loss, and dropped; the
+    backward pass recomputes them (jax.checkpoint), keeping live memory
+    at (B, chunk, V). Returns the summed loss and token count.
+    """
+    B, S, D = hidden.shape
+    n_chunks = max(S // chunk, 1)
+    chunk = S // n_chunks
+
+    hidden = hidden.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    labels = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(h_c, y_c):
+        logits = jnp.einsum("bsd,dv->bsv", h_c.astype(jnp.float32),
+                            head_w.astype(jnp.float32))
+        logits = softcap(logits, final_cap)
+        if constrain is not None:
+            logits = constrain(logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, y_c[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        mask = (y_c >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    def body(acc, xs):
+        h_c, y_c = xs
+        l, n = chunk_loss(h_c, y_c)
+        return (acc[0] + l, acc[1] + n), None
+
+    (loss, count), _ = jax.lax.scan(body, (0.0, 0.0), (hidden, labels))
+    return loss, count

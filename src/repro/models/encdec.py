@@ -1,0 +1,248 @@
+"""Whisper-style encoder-decoder.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, T, d_model) — i.e. the output
+of the two conv1d layers — and the encoder adds fixed sinusoidal
+positions on top. The decoder uses learned positions, causal self
+attention (KV-cached for decode) and cross attention to the encoder
+output (whose K/V are computed once at prefill).
+
+Whisper uses LayerNorm (scale+bias) and a plain (non-gated) GELU MLP; no
+rotary embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import dense_init, embed_init, layer_norm, sinusoid_positions
+from repro.serve.kvcache import from_prefill, update_cache
+
+
+def _ln_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _mlp_init(cfg, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, (d, f), dtype),
+            "w_down": dense_init(k2, (f, d), dtype)}
+
+
+def _mlp(p, x):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]),
+                    approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def _enc_layer_init(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _ln_init(cfg.d_model, dtype),
+            "attn": attn_mod.init_attn_params(cfg, k1, dtype),
+            "ln2": _ln_init(cfg.d_model, dtype),
+            "mlp": _mlp_init(cfg, k2, dtype)}
+
+
+def _dec_layer_init(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _ln_init(cfg.d_model, dtype),
+            "self_attn": attn_mod.init_attn_params(cfg, k1, dtype),
+            "ln2": _ln_init(cfg.d_model, dtype),
+            "cross_attn": attn_mod.init_attn_params(cfg, k2, dtype),
+            "ln3": _ln_init(cfg.d_model, dtype),
+            "mlp": _mlp_init(cfg, k3, dtype)}
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16, *, max_target: int = 448
+                ) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.decoder_layers)
+    return {
+        "embedding": embed_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype),
+        "pos_embedding": embed_init(ks[3], (max_target, cfg.d_model), dtype),
+        "enc_layers": jax.vmap(
+            lambda k: _enc_layer_init(cfg, k, dtype))(enc_keys),
+        "dec_layers": jax.vmap(
+            lambda k: _dec_layer_init(cfg, k, dtype))(dec_keys),
+        "enc_final": _ln_init(cfg.d_model, dtype),
+        "dec_final": _ln_init(cfg.d_model, dtype),
+    }
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg, params, frames, policy=None):
+    """frames (B, T, D) stub embeddings -> encoder states (B, T, D)."""
+    B, T, D = frames.shape
+    x = frames + sinusoid_positions(T, D, frames.dtype)[None]
+    if policy is not None:
+        x = policy.constrain(x, policy.act_hidden())
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(h, p):
+        a = _ln(h, p["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(cfg, p["attn"], a, positions,
+                                       rope=False)
+        a = attn_mod.attention(q, k, v, kind="bidir", cfg=cfg, policy=policy)
+        h = h + attn_mod.out_proj(p["attn"], a, cfg)
+        m = _ln(h, p["ln2"], cfg.norm_eps)
+        h = h + _mlp(p["mlp"], m)
+        if policy is not None:
+            h = policy.constrain(h, policy.act_hidden())
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return _ln(x, params["enc_final"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _decoder_stack(cfg, params, x, enc_out, positions, policy, *,
+                   want_cache=False):
+    B = x.shape[0]
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32), enc_out.shape[:2])
+
+    def body(h, p):
+        a = _ln(h, p["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(cfg, p["self_attn"], a, positions,
+                                       rope=False)
+        a = attn_mod.attention(q, k, v, kind="full", cfg=cfg, policy=policy)
+        h = h + attn_mod.out_proj(p["self_attn"], a, cfg)
+        c = _ln(h, p["ln2"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dnh->bsnh", c, p["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            qc = qc + p["cross_attn"]["bq"]
+        kc = jnp.einsum("bsd,dnh->bsnh", enc_out, p["cross_attn"]["wk"])
+        vc = jnp.einsum("bsd,dnh->bsnh", enc_out, p["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            kc, vc = kc + p["cross_attn"]["bk"], vc + p["cross_attn"]["bv"]
+        cx = attn_mod.attention(qc, kc, vc, kind="bidir", cfg=cfg,
+                                policy=policy)
+        h = h + attn_mod.out_proj(p["cross_attn"], cx, cfg)
+        m = _ln(h, p["ln3"], cfg.norm_eps)
+        h = h + _mlp(p["mlp"], m)
+        if policy is not None:
+            h = policy.constrain(h, policy.act_hidden())
+        return h, (((k, v), (kc, vc)) if want_cache else None)
+
+    if want_cache:
+        x, caches = jax.lax.scan(body, x, params["dec_layers"])
+        return x, caches
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+    return x, None
+
+
+def loss_fn(cfg, params, batch, policy=None, **_):
+    """batch: frames (B,T,D), tokens (B,S), labels (B,S)."""
+    from repro.models.common import chunked_softmax_xent
+    enc_out = encode(cfg, params, batch["frames"], policy)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embedding"], tokens, axis=0) \
+        + params["pos_embedding"][None, :S]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _ = _decoder_stack(cfg, params, x, enc_out, positions, policy)
+    x = _ln(x, params["dec_final"], cfg.norm_eps)
+    constrain = ((lambda t: policy.constrain(t, policy.act_logits(cfg.vocab_size)))
+                 if policy is not None else None)
+    loss_sum, count = chunked_softmax_xent(
+        x, params["embedding"].T, batch["labels"], chunk=512,
+        constrain=constrain)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"loss": loss, "tokens": count}
+
+
+def prefill(cfg, params, batch, policy=None, *, cache_len: int = 0):
+    """Encode + run the decoder prompt; emit self- and cross-attn caches."""
+    enc_out = encode(cfg, params, batch["frames"], policy)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embedding"], tokens, axis=0) \
+        + params["pos_embedding"][None, :S]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, caches = _decoder_stack(cfg, params, x, enc_out, positions, policy,
+                               want_cache=True)
+    x = _ln(x, params["dec_final"], cfg.norm_eps)
+    (self_k, self_v), (cross_k, cross_v) = caches
+    self_cache = jax.vmap(lambda a, b: from_prefill(a, b, pad_to=cache_len))(
+        self_k, self_v)
+    logits = _last_logits(cfg, params, x, policy)
+    return logits, {"self": self_cache, "cross": (cross_k, cross_v),
+                    "pos": S}
+
+
+def _last_logits(cfg, params, x, policy):
+    h = x[:, -1:]
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        params["embedding"].T.astype(jnp.float32))
+    if policy is not None:
+        logits = policy.constrain(logits, policy.act_logits(cfg.vocab_size))
+    return logits
+
+
+def init_decode_state(cfg, batch: int, cache_len: int, enc_len: int,
+                      dtype=jnp.bfloat16):
+    """Empty decode state (decode-only dry-run cells)."""
+    from repro.serve.kvcache import init_cache
+    L = cfg.decoder_layers
+    mk = lambda: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (L,) + x.shape),
+        init_cache(batch, cache_len, cfg.num_kv_heads, cfg.head_dim, dtype))
+    cross = (jnp.zeros((L, batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                       dtype),
+             jnp.zeros((L, batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                       dtype))
+    return {"self": mk(), "cross": cross, "pos": 0}
+
+
+def decode_step(cfg, params, tokens, state, policy=None):
+    """One decoder token against cached self/cross attention."""
+    cur_pos = state["pos"]
+    B = tokens.shape[0]
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    pe = jax.lax.dynamic_slice_in_dim(
+        params["pos_embedding"],
+        jnp.asarray(cur_pos, jnp.int32) % params["pos_embedding"].shape[0],
+        1, axis=0)                                        # (1, D)
+    x = x + pe[None]
+
+    def body(h, xs):
+        p, self_cache, (kc, vc) = xs
+        a = _ln(h, p["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(
+            cfg, p["self_attn"], a,
+            jnp.full((B, 1), cur_pos, jnp.int32), rope=False)
+        cache = update_cache(self_cache, k, v, cur_pos)
+        a = attn_mod.decode_attention(q, cache.k, cache.v, cache.positions,
+                                      cur_pos, cfg=cfg, policy=policy)
+        h = h + attn_mod.out_proj(p["self_attn"], a, cfg)
+        c = _ln(h, p["ln2"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dnh->bsnh", c, p["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            qc = qc + p["cross_attn"]["bq"]
+        cx = attn_mod.attention_direct(qc, kc, vc, causal=False)
+        h = h + attn_mod.out_proj(p["cross_attn"], cx, cfg)
+        m = _ln(h, p["ln3"], cfg.norm_eps)
+        h = h + _mlp(p["mlp"], m)
+        return h, cache
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], state["self"], state["cross"]))
+    x = _ln(x, params["dec_final"], cfg.norm_eps)
+    logits = _last_logits(cfg, params, x, policy)
+    return logits, {"self": new_self, "cross": state["cross"],
+                    "pos": cur_pos + 1}

@@ -1,0 +1,204 @@
+"""Decoder-only LM (plus the VLM variant) — init / train / prefill / decode.
+
+Entry points consumed by launch/dryrun.py, the training driver and the
+serving engine:
+
+* ``init_params(cfg, key, dtype)``
+* ``loss_fn(cfg, params, batch, policy)``             — train objective
+* ``prefill(cfg, params, batch, policy, cache_len)``  — logits + caches
+* ``decode_step(cfg, params, token, state, policy)``  — one-token serve
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.common import chunked_softmax_xent, embed_init, rms_norm, softcap
+from repro.serve.kvcache import from_prefill, init_cache
+
+VIT_STUB_DIM = 4096  # InternVL2: pixel-shuffled InternViT feature width
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    G = blk.n_groups(cfg)
+    gkeys = jax.random.split(ks[0], G)
+    blocks = jax.vmap(
+        lambda k: blk.init_period_params(cfg, k, dtype))(gkeys)
+    params: Dict[str, Any] = {
+        "embedding": embed_init(ks[1], (cfg.vocab_size, cfg.d_model), dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                    dtype)
+    shared = blk.init_shared_params(cfg, ks[3], dtype)
+    if shared is not None:
+        params["shared"] = shared
+    if cfg.frontend == "vit_stub":
+        params["patch_proj"] = embed_init(
+            ks[4], (VIT_STUB_DIM, cfg.d_model), dtype)
+    return params
+
+
+def head_weights(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embedding"].T
+    return params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / input assembly
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, batch, policy=None):
+    """tokens (B,S) [+ patch_embeds (B,P,VIT)] -> hidden (B,S,D).
+
+    For the VLM, the first ``num_patches`` positions of the sequence are
+    image positions: projected patch embeddings replace the token
+    embeddings there (frontend is a stub per the assignment)."""
+    x = jnp.take(params["embedding"], batch["tokens"], axis=0)
+    if cfg.frontend == "vit_stub" and "patch_embeds" in batch:
+        patches = jnp.einsum("bpk,kd->bpd", batch["patch_embeds"],
+                             params["patch_proj"]).astype(x.dtype)
+        x = jnp.concatenate([patches, x[:, patches.shape[1]:]], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if policy is not None:
+        x = policy.constrain(x, policy.act_hidden())
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg, params, batch, policy=None, *, remat: bool = True,
+            remat_policy=None, loss_chunk: int = 512,
+            aux_weight: float = 0.01):
+    """Causal-LM loss. batch: tokens (B,S), labels (B,S) (−1 = pad)."""
+    x = embed_inputs(cfg, params, batch, policy)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux = blk.stack_forward(cfg, params["blocks"], x, positions, policy,
+                               params.get("shared"), remat=remat,
+                               remat_policy=remat_policy)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    constrain = ((lambda t: policy.constrain(t, policy.act_logits(cfg.vocab_size)))
+                 if policy is not None else None)
+    loss_sum, count = chunked_softmax_xent(
+        x, head_weights(cfg, params), batch["labels"], chunk=loss_chunk,
+        constrain=constrain, final_cap=cfg.final_softcap)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    metrics = {"loss": loss, "tokens": count, "aux_loss": aux}
+    if cfg.moe is not None:
+        loss = loss + aux_weight * aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _logits_last(cfg, params, x, policy):
+    """Final-position logits only (B,1,V)."""
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps,
+                 plus_one=True)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        head_weights(cfg, params).astype(jnp.float32))
+    logits = softcap(logits, cfg.final_softcap)
+    if policy is not None:
+        logits = policy.constrain(logits, policy.act_logits(cfg.vocab_size))
+    return logits
+
+
+def prefill(cfg, params, batch, policy=None, *, cache_len: int = 0):
+    """Run the full prompt; return (last-position logits, decode state).
+
+    decode state = (caches pytree stacked over depth, ssm states, ssm
+    positions); caches are rolled/padded to ``cache_len`` slots."""
+    x = embed_inputs(cfg, params, batch, policy)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, raw_caches, states = blk.stack_prefill(
+        cfg, params["blocks"], x, positions, policy, params.get("shared"))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+
+    caches = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        key = f"l{i}"
+        if key not in raw_caches:
+            continue
+        k, v = raw_caches[key]
+
+        def mk(kv_pair, window):
+            kk, vv = kv_pair
+            return jax.vmap(
+                lambda a, b: from_prefill(a, b, window=window,
+                                          pad_to=cache_len))(kk, vv)
+        window = cfg.window if kind == "swa" and cfg.window else 0
+        caches[key] = mk((k, v), window)
+    logits = _logits_last(cfg, params, x, policy)
+    return logits, {"caches": caches, "ssm": states, "pos": S}
+
+
+def init_decode_state(cfg, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16, policy=None, *,
+                      cache_impl: str = "dense"):
+    """Fresh (empty) decode state for decode-only dry-run cells.
+
+    ``cache_impl``: "dense" (dtype K/V) or "int8" (quantized storage,
+    §Perf lever — halves the cache's HBM footprint/traffic)."""
+    from repro.models.ssm import init_ssm_state
+    from repro.serve.kvcache import init_quant_cache
+
+    def mk_cache(window=0):
+        if cache_impl == "int8":
+            return init_quant_cache(batch, cache_len, cfg.num_kv_heads,
+                                    cfg.head_dim, window=window)
+        return init_cache(batch, cache_len, cfg.num_kv_heads, cfg.head_dim,
+                          dtype, window=window)
+
+    G = blk.n_groups(cfg)
+    caches, states = {}, {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        key = f"l{i}"
+        if kind in ("full",):
+            c = mk_cache()
+        elif kind == "swa":
+            c = mk_cache(window=cfg.window or cache_len)
+        elif kind == "hybrid":
+            c = mk_cache()
+            states[key] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (G,) + x.shape),
+                init_ssm_state(cfg, batch, dtype))
+        else:  # ssm
+            states[key] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (G,) + x.shape),
+                init_ssm_state(cfg, batch, dtype))
+            continue
+        caches[key] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (G,) + x.shape), c)
+    return {"caches": caches, "ssm": states, "pos": 0}
+
+
+def decode_step(cfg, params, tokens, state, policy=None):
+    """tokens (B,1) int32; state from prefill/init_decode_state.
+    Returns (logits (B,1,V), new state)."""
+    x = embed_inputs(cfg, params, {"tokens": tokens}, policy)
+    cur_pos = state["pos"]
+    x, new_caches, new_states = blk.stack_decode(
+        cfg, params["blocks"], x, state["caches"], state["ssm"], cur_pos,
+        policy, params.get("shared"))
+    logits = _logits_last(cfg, params, x, policy)
+    return logits, {"caches": new_caches, "ssm": new_states,
+                    "pos": cur_pos + 1}

@@ -1,0 +1,36 @@
+"""Gated (SwiGLU/GeGLU) and plain MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+
+
+def init_mlp_params(cfg, key, dtype, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    gated = cfg.act in ("silu", "geglu")
+    p = {
+        "w_up": dense_init(ks[0], (d, f), dtype, fan_in=d),
+        "w_down": dense_init(ks[1], (f, d), dtype, fan_in=f),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype, fan_in=d)
+    return p
+
+
+def mlp(cfg, p, x, policy=None):
+    act = activation(cfg.act)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    if policy is not None:
+        h = policy.constrain(h, policy.act_mlp())
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if policy is not None:
+        out = policy.constrain(out, policy.act_hidden())
+    return out

@@ -1,0 +1,134 @@
+"""Capacity-based top-k mixture of experts (Switch/GShard style dispatch).
+
+TPU-native formulation with **grouped dispatch**: tokens are split into
+G groups aligned with the data-parallel shards, and the sort → capacity →
+scatter pipeline runs *per group* (vmapped). Every index operation then
+carries the sharded group dim, so XLA SPMD keeps dispatch fully sharded —
+the naive global-sort formulation forces replicated (T·K, D) gathers
+(observed 200+ GiB/chip temp on 32k prefill before this change).
+
+Within a group: tokens sort by assigned expert, land in a static
+(E, C, D) capacity buffer (C = ceil(T_g·k/E·capacity_factor)), the expert
+MLPs run as one batched einsum over the expert dim (MXU-friendly), and
+results gather back with the router combine weights. Overflow drops
+(standard capacity semantics); the FLOPs over-provision is exactly the
+capacity factor, visible in §Roofline's useful_ratio.
+
+Sharding modes:
+  * "tp" (grok-1, E=8):  buffers P(batch, None, None, None); expert
+    weights (E, D, F) with F on the model axis.
+  * "ep" (dbrx, E=16):   buffers P(batch, ep, None, None); expert weights
+    one-per-model-shard — the scatter into the ep-sharded buffer is the
+    EP all-to-all, emitted by SPMD from the sharding constraint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import activation, dense_init
+
+
+def init_moe_params(cfg, key, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype, fan_in=d),
+        "moe_gate": dense_init(ks[1], (e, d, f), dtype, fan_in=d),
+        "moe_up": dense_init(ks[2], (e, d, f), dtype, fan_in=d),
+        "moe_down": dense_init(ks[3], (e, f, d), dtype, fan_in=f),
+    }
+
+
+def capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.moe.top_k * cfg.moe.capacity_factor
+            // cfg.moe.num_experts)
+    return max(c + (-c) % 128, 128)      # round up to an MXU-friendly 128
+
+
+def _group_dispatch(xt, expert_ids, gate_vals, C: int, E: int):
+    """Per-group dispatch (runs under vmap over the group dim).
+
+    xt (T, D) · expert_ids (T, K) · gate_vals (T, K) →
+    buf (E, C, D), plus gather metadata for the combine."""
+    T, K = expert_ids.shape
+    flat_expert = expert_ids.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    same = jax.nn.one_hot(sorted_expert, E, dtype=jnp.int32)   # (TK, E)
+    pos_in_expert = (jnp.cumsum(same, axis=0) - same)[
+        jnp.arange(T * K), sorted_expert]
+    keep = pos_in_expert < C
+
+    scatter_e = jnp.where(keep, sorted_expert, E - 1)
+    scatter_c = jnp.where(keep, pos_in_expert, C - 1)
+    contrib = jnp.where(keep[:, None], xt[sorted_token], 0)
+    buf = jnp.zeros((E, C, xt.shape[-1]), xt.dtype) \
+             .at[scatter_e, scatter_c].add(contrib.astype(xt.dtype))
+    return buf, (scatter_e, scatter_c, sorted_token, sorted_gate, keep)
+
+
+def _group_combine(out_buf, meta, T: int, D: int):
+    scatter_e, scatter_c, sorted_token, sorted_gate, keep = meta
+    gathered = out_buf[scatter_e, scatter_c]                   # (TK, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered.astype(jnp.float32) * sorted_gate[:, None]
+    return jnp.zeros((T, D), jnp.float32).at[sorted_token].add(weighted)
+
+
+def moe_mlp(cfg, p, x, policy=None):
+    """x (B,S,D) -> (B,S,D), plus aux load-balancing loss."""
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    T = B * S
+    G = policy.dp_size if policy is not None else 1
+    if T % G:
+        G = 1
+    Tg = T // G
+    C = capacity(Tg, cfg)
+    act = activation(cfg.act)
+
+    xt = x.reshape(G, Tg, D)
+    if policy is not None:
+        xt = policy.constrain(xt, P(policy.batch(), None, None))
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,Tg,E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (G,Tg,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch eq. 4), over all tokens
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32),
+        axis=(0, 1))
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(density * router_mean)
+
+    buf, meta = jax.vmap(
+        lambda a, b, c: _group_dispatch(a, b, c, C, E))(
+        xt, expert_ids, gate_vals)                             # (G,E,C,D)
+
+    buf_spec = (P(policy.batch(), policy.ep_axis, None, None)
+                if policy is not None else None)
+    if policy is not None:
+        buf = policy.constrain(buf, buf_spec)
+
+    gate = jnp.einsum("gecd,edf->gecf", buf, p["moe_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buf, p["moe_up"])
+    h = act(gate) * up
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["moe_down"])
+    if policy is not None:
+        out_buf = policy.constrain(out_buf, buf_spec)
+
+    out = jax.vmap(lambda ob, m: _group_combine(ob, m, Tg, D))(
+        out_buf, meta)                                         # (G,Tg,D)
+    if policy is not None:
+        out = policy.constrain(out, P(policy.batch(), None, None))
+    return out.reshape(B, S, D).astype(x.dtype), aux_loss

@@ -1,0 +1,234 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Chunked SSD algorithm (Dao & Gu 2024, §6): the sequence is split into
+chunks of length Q; within a chunk the quadratic "attention-like" form
+runs as dense einsums (MXU-friendly), and a `lax.scan` over chunks carries
+the (H, N, P) recurrent state between them. Decode is the pure recurrence
+`h' = a·h + dt·B⊗x`, `y = C·h + D·x` — O(1) per token, which is what makes
+the ``long_500k`` cells runnable for SSM/hybrid archs.
+
+Projections are kept as separate parameters (wz/wx_in/wB/wC/wdt) rather
+than one fused in_proj so that every output dim shards cleanly on the
+model axis (heads for x/z/dt; B/C are small and stay replicated).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+class SSMState(NamedTuple):
+    h: jax.Array          # (B, H, N, P) recurrent state
+    conv: jax.Array       # (B, K-1, H, P) rolling conv inputs (x part)
+    conv_B: jax.Array     # (B, K-1, G, N)
+    conv_C: jax.Array     # (B, K-1, G, N)
+
+
+def dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = di // s.head_dim
+    return di, H, s.head_dim, s.n_groups, s.d_state, s.d_conv
+
+
+def init_ssm_params(cfg, key, dtype):
+    d = cfg.d_model
+    di, H, Pd, G, N, K = dims(cfg)
+    ks = jax.random.split(key, 9)
+    p = {
+        "wz": dense_init(ks[0], (d, H, Pd), dtype, fan_in=d),
+        "wx_in": dense_init(ks[1], (d, H, Pd), dtype, fan_in=d),
+        "wB": dense_init(ks[2], (d, G, N), dtype, fan_in=d),
+        "wC": dense_init(ks[3], (d, G, N), dtype, fan_in=d),
+        "wdt": dense_init(ks[4], (d, H), dtype, fan_in=d),
+        "conv_x": dense_init(ks[5], (K, H, Pd), dtype, fan_in=K),
+        "conv_B": dense_init(ks[6], (K, G, N), dtype, fan_in=K),
+        "conv_C": dense_init(ks[7], (K, G, N), dtype, fan_in=K),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "ssm_D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), dtype),  # softplus≈1
+        "ssm_norm": jnp.zeros((H, Pd), dtype),
+        "out_proj": dense_init(ks[8], (H, Pd, d), dtype, fan_in=H * Pd),
+    }
+    return p
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along axis 1. x (B,S,...), w (K,...).
+
+    If ``state`` (B,K-1,...) is given it is prepended (decode/streaming);
+    returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = [(0, 0)] * x.ndim
+        pad[1] = (K - 1, 0)
+        xp = jnp.pad(x, pad)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, k:k + S] * w[k] for k in range(K))
+    new_state = xp[:, S:S + K - 1] if K > 1 else xp[:, :0]
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P) · dt (B,S,H) · A (H,) negative decay rates ·
+    Bm/Cm (B,S,G,N). Returns y (B,S,H,P).
+    """
+    B, S, H, Pd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    nc = S // Q
+    hg = H // G
+
+    f32 = jnp.float32
+    xc = xh.reshape(B, nc, Q, H, Pd).astype(f32)
+    dtc = dt.reshape(B, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B, nc, Q, G, N).astype(f32)
+    Cc = Cm.reshape(B, nc, Q, G, N).astype(f32)
+
+    dA = dtc * A[None, None, None, :]                     # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk
+    total = cum[:, :, -1, :]                              # (B,nc,H)
+
+    # ---- intra-chunk (quadratic within Q) --------------------------------
+    # L[i,j] = exp(cum_i − cum_j) for i ≥ j. Mask BEFORE the exp: masked
+    # entries have cum_i − cum_j > 0 and exp() would overflow to inf,
+    # poisoning the backward pass through the where.
+    Lm = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lm = jnp.where(mask[None, None, :, :, None], Lm, -1e30)
+    Lm = jnp.exp(Lm)
+    CB = jnp.einsum("bcqgn,bcsgn->bcqsg", Cc, Bc)         # (B,nc,Qi,Qj,G)
+    CB = jnp.repeat(CB, hg, axis=-1)                      # → per-head
+    M = CB * Lm * dtc[:, :, None, :, :]                   # scale by dt_j
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xc)
+
+    # ---- chunk states ----------------------------------------------------
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)    # (B,nc,Q,H)
+    # group→head broadcast of B before the contraction (no sum over groups)
+    Bh_ = Bc.reshape(B, nc, Q, G, 1, N).repeat(hg, axis=4) \
+            .reshape(B, nc, Q, H, N)
+    Bx = jnp.einsum("bcqhn,bcqhp->bcqhnp",
+                    Bh_, xc * (dtc * decay_to_end)[..., None])
+    states = jnp.sum(Bx, axis=2)                          # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence over nc ----------------------------------
+    def step(h, inp):
+        st, tot = inp                                     # (B,H,N,P),(B,H)
+        h_new = h * jnp.exp(tot)[:, :, None, None] + st
+        return h_new, h                                   # emit state *before*
+
+    h0 = jnp.zeros((B, H, N, Pd), f32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), total.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                        # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution ---------------------------------------
+    Ch = Cc.reshape(B, nc, Q, G, 1, N).repeat(hg, axis=4) \
+           .reshape(B, nc, Q, H, N)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         Ch * jnp.exp(cum)[..., None], h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y, h_last
+
+
+def ssm_mixer(cfg, p, x, policy=None, *, want_state: bool = False):
+    """Full-sequence Mamba2 mixer. x (B,S,D) → (B,S,D) [, final SSMState]."""
+    di, H, Pd, G, N, K = dims(cfg)
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"])
+    xh = jnp.einsum("bsd,dhp->bshp", x, p["wx_in"])
+    Bm = jnp.einsum("bsd,dgn->bsgn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dgn->bsgn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    xh, conv_tail = _causal_conv(xh, p["conv_x"])
+    Bm, conv_B_tail = _causal_conv(Bm, p["conv_B"])
+    Cm, conv_C_tail = _causal_conv(Cm, p["conv_C"])
+    xh, Bm, Cm = jax.nn.silu(xh), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    if policy is not None:
+        xh = policy.constrain(xh, policy.act_heads())
+        z = policy.constrain(z, policy.act_heads())
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,) < 0
+
+    # pad S to a chunk multiple; dt=0 on pad steps => decay 1 and zero
+    # input contribution, so y (real positions) and h_last stay exact.
+    S = xh.shape[1]
+    Q = min(cfg.ssm.chunk, S)
+    pad = (-S) % Q
+    if pad:
+        pad1 = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        xh_p, dt_p, Bm_p, Cm_p = map(pad1, (xh, dt, Bm, Cm))
+    else:
+        xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+    y, h_last = _ssd_chunked(xh_p, dt_p, A, Bm_p, Cm_p, Q)
+    if pad:
+        y = y[:, :S]
+    y = y + xh.astype(jnp.float32) * p["ssm_D"].astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)                # gated
+    y = rms_norm(y, p["ssm_norm"], cfg.norm_eps, plus_one=True)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["out_proj"])
+    if policy is not None:
+        out = policy.constrain(out, policy.act_hidden())
+    if want_state:
+        return out, SSMState(h_last, conv_tail, conv_B_tail, conv_C_tail)
+    return out
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32):
+    di, H, Pd, G, N, K = dims(cfg)
+    return SSMState(
+        h=jnp.zeros((batch, H, N, Pd), jnp.float32),
+        conv=jnp.zeros((batch, K - 1, H, Pd), dtype),
+        conv_B=jnp.zeros((batch, K - 1, G, N), dtype),
+        conv_C=jnp.zeros((batch, K - 1, G, N), dtype),
+    )
+
+
+def ssm_decode_step(cfg, p, x, state: SSMState, policy=None):
+    """Single-token recurrence. x (B,1,D) → (B,1,D), new state."""
+    di, H, Pd, G, N, K = dims(cfg)
+    hg = H // G
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"])
+    xh = jnp.einsum("bsd,dhp->bshp", x, p["wx_in"])
+    Bm = jnp.einsum("bsd,dgn->bsgn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dgn->bsgn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    xh, conv = _causal_conv(xh, p["conv_x"], state.conv)
+    Bm, conv_B = _causal_conv(Bm, p["conv_B"], state.conv_B)
+    Cm, conv_C = _causal_conv(Cm, p["conv_C"], state.conv_C)
+    xh, Bm, Cm = jax.nn.silu(xh), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                          # (B,H)
+
+    xf = xh.astype(jnp.float32)[:, 0]                     # (B,H,P)
+    Bf = Bm.astype(jnp.float32)[:, 0]                     # (B,G,N)
+    Cf = Cm.astype(jnp.float32)[:, 0]
+    Bh = Bf[:, :, None, :].repeat(hg, axis=2).reshape(-1, H, N)
+    Ch = Cf[:, :, None, :].repeat(hg, axis=2).reshape(-1, H, N)
+
+    h_new = (state.h * a[:, :, None, None]
+             + (dt[:, :, None] * Bh)[..., None] * xf[:, :, None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h_new)
+    y = y + xf * p["ssm_D"].astype(jnp.float32)[None, :, None]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["ssm_norm"], cfg.norm_eps, plus_one=True)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["out_proj"])
+    new_state = SSMState(h_new, conv, conv_B, conv_C)
+    return out, new_state

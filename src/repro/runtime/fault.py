@@ -1,0 +1,102 @@
+"""Fault tolerance: restart-from-checkpoint driver + straggler monitor.
+
+On thousands of nodes the failure model is "some step eventually dies";
+the contract that matters is **resume equivalence**: checkpoint at step
+k + deterministic data (data/synthetic.py is a pure function of step) ⇒
+a restarted job reproduces the exact trajectory it would have taken.
+``run_with_restarts`` enforces and tests that contract by (optionally)
+injecting failures.
+
+``StragglerMonitor`` is the single-process stand-in for fleet-level
+straggler mitigation: it tracks a robust step-time estimate (EMA +
+deviation), flags steps beyond k·σ, and records the slow-step log that a
+real deployment would feed to its scheduler (re-shard/evict decisions).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.ckpt import checkpoint as ckpt
+
+
+@dataclass
+class StragglerMonitor:
+    alpha: float = 0.1
+    threshold: float = 3.0
+    ema: Optional[float] = None
+    dev: float = 0.0
+    slow_steps: List[Dict[str, float]] = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        if self.ema is None:
+            self.ema = seconds
+            return False
+        is_slow = seconds > self.ema + self.threshold * max(self.dev,
+                                                            0.05 * self.ema)
+        if is_slow:
+            self.slow_steps.append({"step": step, "seconds": seconds,
+                                    "expected": self.ema})
+        self.dev = (1 - self.alpha) * self.dev \
+            + self.alpha * abs(seconds - self.ema)
+        self.ema = (1 - self.alpha) * self.ema + self.alpha * seconds
+        return is_slow
+
+    def report(self) -> Dict[str, Any]:
+        return {"mean_step_s": self.ema, "dev_s": self.dev,
+                "slow_steps": self.slow_steps}
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+def run_with_restarts(*, make_state: Callable[[], Any],
+                      train_step: Callable[[Any, Any], Any],
+                      batch_fn: Callable[[int], Any],
+                      total_steps: int,
+                      ckpt_dir, ckpt_every: int = 10,
+                      state_shardings=None,
+                      fail_at: Optional[List[int]] = None,
+                      max_restarts: int = 10,
+                      on_metrics: Optional[Callable] = None):
+    """Training driver with checkpoint/restart semantics.
+
+    ``fail_at``: steps at which to inject a failure (testing). Each
+    failure triggers restore-from-latest and replay, exactly as a real
+    preemption/node-loss restart would.
+    """
+    fail_at = set(fail_at or [])
+    restarts = 0
+    monitor = StragglerMonitor()
+
+    state = None
+    while True:
+        try:
+            start = ckpt.latest_step(ckpt_dir)
+            if state is None:
+                state = make_state()
+                if start is not None:
+                    state = ckpt.restore(ckpt_dir, start, state,
+                                         shardings=state_shardings)
+            step = start if start is not None else 0
+            while step < total_steps:
+                if step in fail_at:
+                    fail_at.discard(step)
+                    state = None               # simulate losing the node
+                    raise InjectedFailure(f"injected at step {step}")
+                t0 = time.perf_counter()
+                state, metrics = train_step(state, batch_fn(step))
+                monitor.observe(step, time.perf_counter() - t0)
+                step += 1
+                if on_metrics is not None:
+                    on_metrics(step, metrics)
+                if step % ckpt_every == 0 or step == total_steps:
+                    ckpt.save(ckpt_dir, step, state)
+            return state, {"restarts": restarts,
+                           "straggler": monitor.report()}
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

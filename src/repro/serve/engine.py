@@ -1,0 +1,131 @@
+"""Continuous-batching serve engine (slot-based, vLLM-lite).
+
+A fixed pool of B slots decodes in lockstep (one jitted decode step for
+the whole pool); requests join by streaming their prompt into a free
+slot, and leave on EOS/length, immediately freeing the slot for the next
+queued request. Per-slot cache positions are a (B,) vector threaded
+through the decode step (kvcache.update_cache's vector path), so slots
+at different depths coexist in one compiled program — the pattern the
+decode dry-run cells (one token × large batch × long cache) model.
+
+Inactive slots replay their last token at their current position each
+tick; the cache write is idempotent (same token + same position ⇒ same
+K/V) and their logits are discarded — this keeps the engine to a single
+compiled decode function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new: int = 32
+    eos: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg, params, *, slots: int = 4,
+                 cache_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.state = lm.init_decode_state(cfg, slots, cache_len,
+                                          jnp.float32)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros(slots, np.int32)
+        self.slot_remaining_prompt: List[List[int]] = [[] for _ in
+                                                       range(slots)]
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.cur_tok = np.zeros((slots, 1), np.int32)
+        self.ticks = 0
+        self._decode = jax.jit(
+            lambda p, t, s: lm.decode_step(cfg, p, t, s))
+
+    # -- queue management -----------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self.slot_pos[s] = 0
+                self.slot_remaining_prompt[s] = [int(t) for t in
+                                                 req.prompt]
+                self._reset_slot_cache(s)
+                self.cur_tok[s, 0] = self.slot_remaining_prompt[s].pop(0)
+
+    def _reset_slot_cache(self, s: int):
+        def reset(leaf):
+            if not hasattr(leaf, "ndim"):
+                return leaf
+            # stacked caches/states: (G, B, ...) — batch is axis 1
+            if leaf.ndim >= 3 and leaf.shape[1] == self.slots:
+                if leaf.dtype == jnp.int32:        # positions: unwritten
+                    return leaf.at[:, s].set(-1)
+                return leaf.at[:, s].set(0)
+            return leaf
+        self.state = {
+            **self.state,
+            "caches": jax.tree.map(reset, self.state["caches"]),
+            "ssm": jax.tree.map(reset, self.state["ssm"]),
+        }
+
+    # -- stepping ---------------------------------------------------------------
+    def _active(self, s: int) -> bool:
+        return self.slot_req[s] is not None
+
+    def step(self) -> bool:
+        """One scheduler tick: admit → lockstep decode → emit/retire."""
+        self._admit()
+        if not any(self._active(s) for s in range(self.slots)):
+            return False
+        state = dict(self.state)
+        state["pos"] = jnp.asarray(self.slot_pos)
+        logits, new_state = self._decode(self.params,
+                                         jnp.asarray(self.cur_tok), state)
+        self.state = {**new_state, "pos": 0}
+        self.ticks += 1
+        next_tok = np.asarray(jnp.argmax(logits[:, -1], -1))
+
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue                       # idempotent replay slot
+            self.slot_pos[s] += 1
+            if self.slot_remaining_prompt[s]:
+                # still prefilling: feed the next prompt token
+                self.cur_tok[s, 0] = self.slot_remaining_prompt[s].pop(0)
+                continue
+            tok = int(next_tok[s])
+            req.out.append(tok)
+            self.cur_tok[s, 0] = tok
+            if ((req.eos is not None and tok == req.eos)
+                    or len(req.out) >= req.max_new
+                    or self.slot_pos[s] >= self.cache_len - 1):
+                req.done = True
+                self.finished[req.rid] = req
+                self.slot_req[s] = None
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, Request]:
+        while (self.queue or any(self.slot_req)) and \
+                self.ticks < max_ticks:
+            if not self.step():
+                break
+        return self.finished

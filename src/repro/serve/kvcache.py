@@ -1,0 +1,179 @@
+"""KV caches: full, rolling (sliding-window), and sequence-sharded.
+
+All caches carry an explicit per-slot ``positions`` array (absolute token
+position stored in each slot, −1 = unwritten). Masking by position makes
+one decode-attention path serve every layout:
+
+* ``FullCache``    — (B, S_max, KV, hd); slot i holds position i.
+* ``RollingCache`` — (B, W, KV, hd); position p lands in slot p mod W.
+  O(W) memory makes ``long_500k`` decoding possible for SWA archs
+  (h2o-danube) and gemma2 local layers.
+* Sequence-sharded — a FullCache whose S dim is sharded over the idle
+  data axis (``Policy.kv_seq_axes``) for batch-1 long-context cells; the
+  softmax reductions over the sharded dim become XLA two-pass all-reduce
+  combines automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array            # (B, S, KV, hd)
+    v: jax.Array            # (B, S, KV, hd)
+    positions: jax.Array    # (B, S) int32, -1 = unwritten
+    window: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # window: 0 = full cache; >0 = rolling with width S
+
+
+def init_cache(batch: int, length: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16, *, window: int = 0) -> KVCache:
+    if window:
+        length = min(length, window)
+    return KVCache(
+        k=jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        positions=jnp.full((batch, length), -1, jnp.int32),
+        window=window,
+    )
+
+
+def from_prefill(k, v, *, window: int = 0, pad_to: int = 0) -> KVCache:
+    """Build a cache from prefill-produced K/V (B, S, KV, hd)."""
+    B, S = k.shape[0], k.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if window and S > window:
+        # keep the last `window` positions, placed at slot p mod window
+        tail_pos = jnp.arange(S - window, S)
+        slots = tail_pos % window
+        k_tail = k[:, S - window:]
+        v_tail = v[:, S - window:]
+        kr = jnp.zeros((B, window) + k.shape[2:], k.dtype).at[:, slots].set(k_tail)
+        vr = jnp.zeros((B, window) + v.shape[2:], v.dtype).at[:, slots].set(v_tail)
+        pr = jnp.full((B, window), -1, jnp.int32).at[:, slots].set(
+            jnp.broadcast_to(tail_pos.astype(jnp.int32), (B, window)))
+        return KVCache(kr, vr, pr, window)
+    if pad_to and pad_to > S:
+        pad = [(0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        pos = jnp.pad(pos, [(0, 0), (0, pad_to - S)], constant_values=-1)
+    return KVCache(k, v, pos, window)
+
+
+def update_cache(cache: KVCache, k_new, v_new, cur_pos) -> KVCache:
+    """Insert one token's K/V at absolute position ``cur_pos``.
+
+    ``cur_pos`` may be a scalar (all rows at the same position — plain
+    batched decode) or a (B,) vector (per-slot positions — the
+    continuous-batching engine)."""
+    B, S = cache.k.shape[:2]
+    cur_pos = jnp.asarray(cur_pos, jnp.int32)
+    if cur_pos.ndim == 0:
+        slot = cur_pos % S if cache.window else cur_pos
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+        pos = jax.lax.dynamic_update_slice(
+            cache.positions,
+            jnp.full((B, 1), cur_pos, jnp.int32), (0, slot))
+        return KVCache(k, v, pos, cache.window)
+    # per-row positions: scatter one slot per batch row
+    slot = cur_pos % S if cache.window else cur_pos
+    rows = jnp.arange(B)
+    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    pos = cache.positions.at[rows, slot].set(cur_pos)
+    return KVCache(k, v, pos, cache.window)
+
+
+def cache_positions(cache) -> jax.Array:
+    return cache.positions
+
+
+# ---------------------------------------------------------------------------
+# Int8-quantized cache (§Perf: halves decode HBM traffic for the cache)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantKVCache:
+    """Per-(position, head) absmax-scaled int8 KV storage."""
+    k: jax.Array            # (B, S, KV, hd) int8
+    v: jax.Array            # (B, S, KV, hd) int8
+    k_scale: jax.Array      # (B, S, KV, 1) bf16
+    v_scale: jax.Array      # (B, S, KV, 1) bf16
+    positions: jax.Array    # (B, S) int32
+    window: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+
+def quantize_kv(x):
+    scale = (jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                     keepdims=True) / 127.0 + 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127) \
+           .astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def init_quant_cache(batch: int, length: int, n_kv: int, head_dim: int,
+                     *, window: int = 0) -> QuantKVCache:
+    if window:
+        length = min(length, window)
+    return QuantKVCache(
+        k=jnp.zeros((batch, length, n_kv, head_dim), jnp.int8),
+        v=jnp.zeros((batch, length, n_kv, head_dim), jnp.int8),
+        k_scale=jnp.zeros((batch, length, n_kv, 1), jnp.bfloat16),
+        v_scale=jnp.zeros((batch, length, n_kv, 1), jnp.bfloat16),
+        positions=jnp.full((batch, length), -1, jnp.int32),
+        window=window,
+    )
+
+
+def read_kv(cache, dtype=jnp.bfloat16):
+    """Dequantized (or raw) K/V views for attention."""
+    if isinstance(cache, QuantKVCache):
+        k = (cache.k.astype(jnp.float32)
+             * cache.k_scale.astype(jnp.float32)).astype(dtype)
+        v = (cache.v.astype(jnp.float32)
+             * cache.v_scale.astype(jnp.float32)).astype(dtype)
+        return k, v
+    return cache.k, cache.v
+
+
+def update_any_cache(cache, k_new, v_new, cur_pos):
+    """Insert one token's K/V; dispatches on cache kind. ``cur_pos``
+    scalar or per-row (B,) vector (see update_cache)."""
+    if not isinstance(cache, QuantKVCache):
+        return update_cache(cache, k_new, v_new, cur_pos)
+    B, S = cache.k.shape[:2]
+    cur_pos = jnp.asarray(cur_pos, jnp.int32)
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    if cur_pos.ndim == 0:
+        slot = cur_pos % S if cache.window else cur_pos
+        upd = jax.lax.dynamic_update_slice
+        return QuantKVCache(
+            k=upd(cache.k, kq, (0, slot, 0, 0)),
+            v=upd(cache.v, vq, (0, slot, 0, 0)),
+            k_scale=upd(cache.k_scale, ks, (0, slot, 0, 0)),
+            v_scale=upd(cache.v_scale, vs, (0, slot, 0, 0)),
+            positions=upd(cache.positions,
+                          jnp.full((B, 1), cur_pos, jnp.int32), (0, slot)),
+            window=cache.window,
+        )
+    slot = cur_pos % S if cache.window else cur_pos
+    rows = jnp.arange(B)
+    return QuantKVCache(
+        k=cache.k.at[rows, slot].set(kq[:, 0]),
+        v=cache.v.at[rows, slot].set(vq[:, 0]),
+        k_scale=cache.k_scale.at[rows, slot].set(ks[:, 0]),
+        v_scale=cache.v_scale.at[rows, slot].set(vs[:, 0]),
+        positions=cache.positions.at[rows, slot].set(cur_pos),
+        window=cache.window,
+    )

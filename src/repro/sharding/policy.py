@@ -1,0 +1,259 @@
+"""Sharding policy: maps logical tensor roles onto mesh axes.
+
+The production mesh is ``("data", "model")`` single-pod or
+``("pod", "data", "model")`` multi-pod. Parallelism composition:
+
+* **DP**    — batch over ``batch_axes`` (``("pod","data")`` when multi-pod).
+* **FSDP**  — parameter + optimizer-state sharding over ``fsdp_axes``
+  (the data axes), gathered on use by XLA SPMD.
+* **TP**    — attention heads / MLP hidden / vocab over ``tp_axis``.
+* **EP**    — MoE experts over ``tp_axis`` when ``num_experts`` divides it
+  (dbrx); otherwise experts are tensor-parallel (grok).
+* **SP**    — optional sequence sharding for very long KV caches
+  (``kv_seq_axes``), used by ``long_500k`` cells where batch==1 cannot
+  occupy the data axis.
+
+Rules are applied to parameter pytrees by leaf-name convention (see
+``param_spec``); model code annotates activations with
+``with_sharding_constraint`` through the helper methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _flat(*groups) -> Optional[Tuple[str, ...]]:
+    """Collapse axis groups, dropping Nones; returns None if empty."""
+    axes: Tuple[str, ...] = ()
+    for g in groups:
+        if g is None:
+            continue
+        if isinstance(g, str):
+            axes += (g,)
+        else:
+            axes += tuple(g)
+    return axes if axes else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: Optional[str] = "model"
+    ep_axis: Optional[str] = None          # set for EP-mode MoE archs
+    kv_seq_axes: Tuple[str, ...] = ()      # SP for long-context KV caches
+    scan_layers: bool = True
+
+    # ------------------------------------------------------------------
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def batch(self) -> Optional[Tuple[str, ...]]:
+        return _flat(self.batch_axes)
+
+    def fsdp(self) -> Optional[Tuple[str, ...]]:
+        return _flat(self.fsdp_axes)
+
+    def tp(self) -> Optional[str]:
+        return self.tp_axis
+
+    # -- activation specs ----------------------------------------------
+    def act_tokens(self) -> P:                     # (B, S)
+        return P(self.batch(), None)
+
+    def act_hidden(self) -> P:                     # (B, S, D)
+        return P(self.batch(), None, None)
+
+    def act_heads(self) -> P:                      # (B, S, H, hd)
+        return P(self.batch(), None, self.tp_axis, None)
+
+    def act_mlp(self) -> P:                        # (B, S, F)
+        return P(self.batch(), None, self.tp_axis)
+
+    def _tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis] if self.tp_axis else 1
+
+    def act_logits(self, vocab: Optional[int] = None) -> P:  # (B, S, V)
+        if vocab is not None and vocab % self._tp_size() != 0:
+            return P(self.batch(), None, None)
+        return P(self.batch(), None, self.tp_axis)
+
+    def act_kv_cache(self, kv_heads: Optional[int] = None) -> P:
+        """(B, S, KV, hd). When KV heads don't divide the TP axis, the
+        cache's *sequence* dim takes the model axis instead (flash-decode
+        style: XLA turns the softmax reductions into two-pass all-reduce
+        combines). Long-context batch-1 cells add the idle data axes."""
+        seq = _flat(self.kv_seq_axes)
+        if kv_heads is not None and kv_heads % self._tp_size() != 0:
+            seq = _flat(self.tp_axis, self.kv_seq_axes)
+            return P(self.batch(), seq, None, None)
+        return P(self.batch(), seq, self.tp_axis, None)
+
+    def act_moe_dispatch(self) -> P:               # (E, C, D)
+        if self.ep_axis:
+            return P(self.ep_axis, None, None)
+        return P(None, self.batch(), None)
+
+    def constrain(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameter specs -------------------------------------------------
+    def param_spec(self, path: Sequence[str], shape: Tuple[int, ...]) -> P:
+        """Sharding rule for one parameter leaf, keyed on its name/path.
+
+        Leaf-name conventions (see models/*):
+          embedding (V,D) · pos_embedding (T,D) · wq/wk/wv (D,N,hd) ·
+          wo (N,hd,D) · bq/bk/bv (N,hd) · w_gate/w_up (D,F) · w_down (F,D)
+          · router (D,E) · moe_* (E,·,·) · in_proj/out_proj (ssm) ·
+          conv_w (K,C) · A_log/ssm_D/dt_bias (Hs,) · scale/bias norms ·
+          head (D,V) · shared-attn per-use in_proj: fuse_proj (2D,D)
+        """
+        name = path[-1]
+        fsdp, tp, ep = self.fsdp(), self.tp_axis, self.ep_axis
+        stacked = any(p in ("layers", "blocks", "enc_layers", "dec_layers",
+                            "fuse_projs") for p in path[:-1])
+
+        def st(spec: P) -> P:
+            return P(None, *spec) if stacked else spec
+
+        V_TP_MIN = 8  # don't TP tiny trailing dims
+        tp_size = self.mesh.shape[tp] if tp else 1
+
+        def tp_if(dim: int):
+            return tp if (tp and dim % tp_size == 0) else None
+
+        if name in ("embedding", "head_embedding"):
+            return P(tp_if(shape[0]), fsdp)
+        if name in ("pos_embedding", "source_pos"):
+            return P(None, None)
+        if name in ("wq", "wk", "wv"):              # (D, N, hd)
+            return st(P(fsdp, tp_if(shape[-2]), None))
+        if name == "wo":                            # (N, hd, D)
+            return st(P(tp_if(shape[-3]), None, fsdp))
+        if name in ("bq", "bk", "bv"):              # (N, hd)
+            return st(P(tp_if(shape[-2]), None))
+        if name in ("w_gate", "w_up"):              # (D, F)
+            return st(P(fsdp, tp))
+        if name == "w_down":                        # (F, D)
+            return st(P(tp, fsdp))
+        if name == "router":                        # (D, E)
+            return st(P(fsdp, None))
+        if name in ("moe_gate", "moe_up"):          # (E, D, F)
+            if ep:
+                return st(P(ep, fsdp, None))
+            return st(P(None, fsdp, tp))
+        if name == "moe_down":                      # (E, F, D)
+            if ep:
+                return st(P(ep, None, fsdp))
+            return st(P(None, tp, fsdp))
+        if name in ("wz", "wx_in"):                 # (D, Hs, P)
+            return st(P(fsdp, tp, None))
+        if name in ("wB", "wC"):                    # (D, G, N) — small, repl.
+            return st(P(fsdp, None, None))
+        if name == "wdt":                           # (D, Hs)
+            return st(P(fsdp, tp))
+        if name == "out_proj":                      # (Hs, P, D)
+            return st(P(tp, None, fsdp))
+        if name == "conv_x":                        # (K, Hs, P)
+            return st(P(None, tp, None))
+        if name in ("conv_B", "conv_C"):            # (K, G, N)
+            return st(P(None, None, None))
+        if name == "ssm_norm":                      # (Hs, P)
+            return st(P(tp, None))
+        if name in ("A_log", "ssm_D", "dt_bias"):   # (Hs,)
+            tp_size = self.mesh.shape.get(tp, 1) if tp else 1
+            return st(P(tp if shape[-1] % tp_size == 0
+                        and shape[-1] >= V_TP_MIN else None))
+        if name == "fuse_proj":                     # (2D, D) zamba2 per-use
+            return st(P(fsdp, None))
+        if name == "head":                          # (D, V)
+            return P(fsdp, tp_if(shape[-1]))
+        if name in ("scale", "bias", "q_norm", "k_norm", "post_scale",
+                    "pre_scale", "norm_scale"):
+            rank = len(shape) - (1 if stacked else 0)
+            return st(P(*([None] * rank)))
+        # conservative default: replicate
+        rank = len(shape)
+        return P(*([None] * rank))
+
+    def tree_specs(self, params_shapes):
+        """PartitionSpec pytree mirroring a pytree of ShapeDtypeStructs."""
+        def rule(path, leaf):
+            names = []
+            for k in path:
+                if hasattr(k, "key"):
+                    names.append(str(k.key))
+                elif hasattr(k, "idx"):
+                    names.append(str(k.idx))
+                else:
+                    names.append(str(k))
+            return self.param_spec(names, leaf.shape)
+        return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+    def tree_shardings(self, params_shapes):
+        return jax.tree_util.tree_map(
+            self.named, self.tree_specs(params_shapes),
+            is_leaf=lambda x: isinstance(x, P))
+
+
+def make_policy(mesh: Mesh, *, global_batch: int, multi_pod: bool = False,
+                ep_mode: bool = False, kv_seq_shard: bool = False,
+                fsdp: bool = True, parallelism: str = "tp") -> Policy:
+    """Build the per-cell policy.
+
+    ``parallelism``:
+      * "tp"   — baseline: DP/FSDP over (pod, data) × TP over model.
+      * "fsdp" — pure data parallelism: batch AND parameters shard over
+        every mesh axis, no tensor parallelism. Trades per-layer
+        activation all-reduces for per-layer weight all-gathers — the
+        §Perf rebalance for models whose activation traffic dominates.
+
+    Batch sharding degrades gracefully: if ``global_batch`` is not
+    divisible by the full data-parallel extent, axes are dropped
+    (pod first) until it divides; batch==1 cells shard the KV cache
+    sequence dim over the idle data axes instead.
+    """
+    if parallelism == "fsdp":
+        cand = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+        tp_axis = None
+        ep_axis = None
+        fsdp_axes = cand
+    else:
+        cand = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        tp_axis = "model" if "model" in mesh.shape else None
+        ep_axis = "model" if (ep_mode and "model" in mesh.shape) else None
+        fsdp_axes = cand if fsdp else ()
+
+    batch_axes: Tuple[str, ...] = cand
+    while batch_axes:
+        ext = 1
+        for a in batch_axes:
+            ext *= mesh.shape[a]
+        if global_batch % ext == 0:
+            break
+        batch_axes = batch_axes[1:]
+    kv_seq: Tuple[str, ...] = ()
+    if kv_seq_shard:
+        kv_seq = tuple(a for a in ("data",) if a in mesh.shape
+                       and a not in batch_axes)
+    return Policy(
+        mesh=mesh,
+        batch_axes=batch_axes,
+        fsdp_axes=fsdp_axes,
+        tp_axis=tp_axis,
+        ep_axis=ep_axis,
+        kv_seq_axes=kv_seq,
+    )

@@ -1,0 +1,16 @@
+"""Shared test fixtures.
+
+The suite compiles hundreds of XLA CPU executables; without releasing
+them the CPU JIT eventually fails late in the run with "Failed to
+materialize symbols … Cannot allocate memory". Dropping the compilation
+cache between modules keeps the JIT arena bounded (each module pays its
+own compiles; cross-module reuse is negligible here).
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

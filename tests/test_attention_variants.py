@@ -1,0 +1,135 @@
+"""Attention-path equivalences: blockwise == direct, banded == masked
+direct, head padding exactness, filters/spectrum invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+RNG = np.random.default_rng(21)
+
+
+def _qkv(B, S, H, KV, hd):
+    return (jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32),
+            jnp.asarray(RNG.standard_normal((B, S, KV, hd)), jnp.float32),
+            jnp.asarray(RNG.standard_normal((B, S, KV, hd)), jnp.float32))
+
+
+def test_blockwise_equals_direct_causal():
+    q, k, v = _qkv(2, 256, 4, 2, 32)
+    d = A.attention_direct(q, k, v, causal=True)
+    b = A.attention_blockwise(q, k, v, causal=True, q_block=64,
+                              kv_block=64)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(d), atol=2e-5)
+
+
+def test_blockwise_equals_direct_bidir():
+    q, k, v = _qkv(1, 128, 2, 2, 16)
+    d = A.attention_direct(q, k, v, causal=False)
+    b = A.attention_blockwise(q, k, v, causal=False, q_block=32,
+                              kv_block=64)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(d), atol=2e-5)
+
+
+def test_banded_equals_direct_with_window():
+    q, k, v = _qkv(1, 256, 2, 2, 16)
+    W = 64
+    d = A.attention_direct(q, k, v, causal=True, window=W)
+    b = A.attention_banded(q, k, v, window=W, q_block=64)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(d), atol=2e-5)
+
+
+@given(cap=st.sampled_from([10.0, 50.0]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_softcap_paths_agree(cap, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 16)), jnp.float32)
+    d = A.attention_direct(q, k, v, causal=True, cap=cap)
+    b = A.attention_blockwise(q, k, v, causal=True, cap=cap, q_block=32,
+                              kv_block=32)
+    assert float(jnp.max(jnp.abs(d - b))) < 3e-5
+
+
+def test_head_padding_is_exact():
+    """A padded-heads model (qwen2.5 path) must equal the same math with
+    the true head count: padded heads are zero-masked before wo."""
+    from repro.configs import registry
+    cfg = registry.get_reduced("qwen2.5-14b")
+    cfg = dataclasses.replace(cfg, num_heads=5, num_kv_heads=1,
+                              pad_heads_to=8, head_dim=16, d_model=48)
+    key = jax.random.PRNGKey(0)
+    p = A.init_attn_params(cfg, key, jnp.float32)
+    x = 0.3 * jax.random.normal(key, (2, 16, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    q, k, v = A.project_qkv(cfg, p, x, pos)
+    out = A.attention(q, k, v, kind="full", cfg=cfg)
+    y_pad = A.out_proj(p, out, cfg)
+
+    # reference: slice to the true 5 heads and run unpadded
+    cfg5 = dataclasses.replace(cfg, pad_heads_to=None)
+    p5 = dict(p)
+    p5["wq"] = p["wq"][:, :5]
+    p5["wo"] = p["wo"][:5]
+    p5["bq"] = p["bq"][:5]
+    q5, k5, v5 = A.project_qkv(cfg5, p5, x, pos)
+    out5 = A.attention(q5, k5, v5, kind="full", cfg=cfg5)
+    y_ref = A.out_proj(p5, out5, cfg5)
+    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_ref),
+                               atol=2e-5)
+
+
+def test_padded_head_grads_are_zero():
+    from repro.configs import registry
+    cfg = registry.get_reduced("qwen2.5-14b")
+    cfg = dataclasses.replace(cfg, num_heads=3, num_kv_heads=1,
+                              pad_heads_to=4, head_dim=8, d_model=24)
+    key = jax.random.PRNGKey(1)
+    p = A.init_attn_params(cfg, key, jnp.float32)
+    x = 0.3 * jax.random.normal(key, (1, 8, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+
+    def loss(p):
+        q, k, v = A.project_qkv(cfg, p, x, pos)
+        out = A.attention(q, k, v, kind="full", cfg=cfg)
+        return jnp.sum(A.out_proj(p, out, cfg) ** 2)
+
+    g = jax.grad(loss)(p)
+    np.testing.assert_allclose(np.asarray(g["wo"][3:]), 0.0)
+    np.testing.assert_allclose(np.asarray(g["wq"][:, 3:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# filters / spectrum invariants
+# ---------------------------------------------------------------------------
+
+def test_masks_hermitian_symmetric():
+    from repro.core.fft.filters import bandpass_mask, lowpass_mask
+    for build, kw in ((lowpass_mask, dict(keep_frac=0.2)),
+                      (bandpass_mask, dict(low_frac=0.1, high_frac=0.3))):
+        m = np.asarray(build((32, 48), **kw))
+        np.testing.assert_array_equal(
+            m[1:, 1:], m[1:, 1:][::-1, ::-1],
+            err_msg=str(build))  # mask(k) == mask(-k)
+
+
+def test_band_energies_sum_to_total():
+    from repro.core.fft.spectrum import band_energies, total_energy
+    re = jnp.asarray(RNG.standard_normal((32, 32)), jnp.float32)
+    im = jnp.asarray(RNG.standard_normal((32, 32)), jnp.float32)
+    bands = band_energies(re, im, edges=(0.0, 0.1, 0.3, 0.5, 1.0))
+    np.testing.assert_allclose(float(jnp.sum(bands)),
+                               float(total_energy(re, im)), rtol=1e-5)
+
+
+def test_radial_spectrum_parseval():
+    from repro.core.fft.spectrum import radial_spectrum
+    re = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    im = jnp.zeros_like(re)
+    k, e = radial_spectrum(re, im, nbins=16)
+    assert k.shape == (16,) and e.shape == (16,)
+    assert np.all(np.asarray(e) >= 0)

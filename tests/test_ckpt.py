@@ -1,0 +1,102 @@
+"""Checkpoint correctness: atomic publish, checksum verification, keep-k
+GC, restore-into-structure, and elastic (mesh-changing) restore."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(5.0), "s": jnp.int32(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 3, t)
+    out = ckpt.restore(tmp_path, 3, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_keep_k(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, t, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    kept = sorted(d.name for d in Path(tmp_path).glob("step_*"))
+    assert len(kept) == 2 and kept[-1].endswith("00000005")
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    assert not list(Path(tmp_path).glob("*.tmp"))
+
+
+def test_checksum_verification(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    f = next(Path(tmp_path).glob("step_*/arr_00000.npy"))
+    arr = np.load(f)
+    arr[0] += 1
+    np.save(f, arr)
+    with pytest.raises(IOError):
+        ckpt.restore(tmp_path, 1, _tree())
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    bad = _tree()
+    bad["w"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, 1, bad)
+
+
+ELASTIC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.ckpt import checkpoint as ckpt
+
+    tmp = sys.argv[1]
+    mesh8 = jax.make_mesh((8,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.arange(64.0).reshape(8, 8)
+    xs = jax.device_put(x, NamedSharding(mesh8, P("data", None)))
+    ckpt.save(tmp, 1, {"x": xs})
+
+    # elastic restore: a "restarted job" with a 4-device mesh
+    mesh4 = jax.make_mesh((4,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,),
+                          devices=jax.devices()[:4])
+    sh4 = {"x": NamedSharding(mesh4, P("data", None))}
+    out = ckpt.restore(tmp, 1, {"x": jnp.zeros((8, 8))}, shardings=sh4)
+    ok = bool(np.array_equal(np.asarray(out["x"]), np.asarray(x)))
+    nshards = len(out["x"].sharding.device_set)
+    print(json.dumps({"ok": ok, "nshards": nshards}))
+""")
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", ELASTIC, str(tmp_path)],
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["nshards"] == 4

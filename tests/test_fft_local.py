@@ -1,0 +1,119 @@
+"""Local FFT backends: correctness vs numpy + DFT mathematical properties
+(hypothesis). These are the oracles everything else builds on."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fft import dft
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(b, n):
+    return (RNG.standard_normal((b, n)).astype(np.float32),
+            RNG.standard_normal((b, n)).astype(np.float32))
+
+
+def _c(re, im):
+    return np.asarray(re) + 1j * np.asarray(im)
+
+
+@pytest.mark.parametrize("n", [8, 32, 64, 256, 1024, 4096])
+@pytest.mark.parametrize("backend", ["stockham", "fourstep", "jnp"])
+def test_forward_matches_numpy(n, backend):
+    re, im = _rand(3, n)
+    r, i = dft.local_fft(jnp.asarray(re), jnp.asarray(im), backend=backend)
+    ref = np.fft.fft(_c(re, im), axis=-1)
+    np.testing.assert_allclose(_c(r, i), ref, rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("n", [30, 200, 360])
+def test_nonpow2_fourstep(n):
+    re, im = _rand(2, n)
+    r, i = dft.local_fft(jnp.asarray(re), jnp.asarray(im),
+                         backend="fourstep")
+    ref = np.fft.fft(_c(re, im), axis=-1)
+    np.testing.assert_allclose(_c(r, i), ref, rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("backend", ["stockham", "fourstep"])
+def test_roundtrip(backend):
+    re, im = _rand(4, 512)
+    r, i = dft.local_fft(jnp.asarray(re), jnp.asarray(im), backend=backend)
+    r, i = dft.local_fft(r, i, inverse=True, backend=backend)
+    np.testing.assert_allclose(np.asarray(r), re, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(i), im, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Property-based: DFT invariants
+# ---------------------------------------------------------------------------
+
+sizes = st.sampled_from([16, 64, 128, 512])
+seeds = st.integers(0, 2**31 - 1)
+
+
+@given(n=sizes, seed=seeds, a=st.floats(-3, 3), b=st.floats(-3, 3))
+@settings(max_examples=20, deadline=None)
+def test_linearity(n, seed, a, b):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, n)).astype(np.float32)
+    y = rng.standard_normal((1, n)).astype(np.float32)
+    z = np.zeros_like(x)
+    fx = _c(*dft.local_fft(jnp.asarray(x), jnp.asarray(z)))
+    fy = _c(*dft.local_fft(jnp.asarray(y), jnp.asarray(z)))
+    fxy = _c(*dft.local_fft(jnp.asarray(a * x + b * y), jnp.asarray(z)))
+    np.testing.assert_allclose(fxy, a * fx + b * fy, rtol=1e-3, atol=1e-2)
+
+
+@given(n=sizes, seed=seeds)
+@settings(max_examples=20, deadline=None)
+def test_parseval(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, n)).astype(np.float32)
+    z = np.zeros_like(x)
+    r, i = dft.local_fft(jnp.asarray(x), jnp.asarray(z))
+    lhs = np.sum(x ** 2)
+    rhs = (np.sum(np.asarray(r) ** 2 + np.asarray(i) ** 2)) / n
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3)
+
+
+@given(n=sizes, seed=seeds)
+@settings(max_examples=20, deadline=None)
+def test_hermitian_symmetry_real_input(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, n)).astype(np.float32)
+    z = np.zeros_like(x)
+    f = _c(*dft.local_fft(jnp.asarray(x), jnp.asarray(z)))[0]
+    # X[k] == conj(X[N-k])
+    np.testing.assert_allclose(f[1:], np.conj(f[1:][::-1]), rtol=1e-3,
+                               atol=1e-2)
+
+
+@given(n=sizes, seed=seeds)
+@settings(max_examples=15, deadline=None)
+def test_convolution_theorem(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    z = np.zeros((1, n), np.float32)
+    fx = _c(*dft.local_fft(jnp.asarray(x[None]), jnp.asarray(z)))[0]
+    fy = _c(*dft.local_fft(jnp.asarray(y[None]), jnp.asarray(z)))[0]
+    conv = np.real(np.fft.ifft(fx * fy))
+    ref = np.array([np.sum(x * np.roll(y[::-1], k + 1)) for k in range(n)])
+    np.testing.assert_allclose(conv, ref, rtol=1e-2, atol=1e-2)
+
+
+@given(n=sizes, seed=seeds, shift=st.integers(0, 63))
+@settings(max_examples=15, deadline=None)
+def test_shift_theorem(n, seed, shift):
+    rng = np.random.default_rng(seed)
+    shift = shift % n
+    x = rng.standard_normal(n).astype(np.float32)
+    z = np.zeros((1, n), np.float32)
+    fx = _c(*dft.local_fft(jnp.asarray(x[None]), jnp.asarray(z)))[0]
+    fsh = _c(*dft.local_fft(jnp.asarray(np.roll(x, shift)[None]),
+                            jnp.asarray(z)))[0]
+    phase = np.exp(-2j * np.pi * shift * np.arange(n) / n)
+    np.testing.assert_allclose(fsh, fx * phase, rtol=1e-3, atol=1e-2)

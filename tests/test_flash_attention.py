@@ -1,0 +1,82 @@
+"""Pallas flash-attention kernel vs the jnp oracle: GQA ratios, causal,
+softcap, block shapes, dtypes (interpret mode on CPU)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+RNG = np.random.default_rng(11)
+
+
+def _qkv(B, S, H, KV, hd, dtype=np.float32):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)).astype(dtype))
+    k = jnp.asarray(RNG.standard_normal((B, S, KV, hd)).astype(dtype))
+    v = jnp.asarray(RNG.standard_normal((B, S, KV, hd)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 512, 8, 1, 32),     # MQA
+    (2, 128, 16, 8, 128),   # gemma-ish
+])
+def test_flash_matches_oracle(B, S, H, KV, hd):
+    q, k, v = _qkv(B, S, H, KV, hd)
+    got = flash_attention(q, k, v, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_flash_variants(causal, softcap):
+    q, k, v = _qkv(1, 256, 4, 2, 64)
+    got = flash_attention(q, k, v, causal=causal, softcap=softcap,
+                          block_q=64, block_k=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_block_shape_invariance():
+    q, k, v = _qkv(1, 512, 4, 4, 64)
+    outs = [np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bk,
+                                       interpret=True))
+            for bq, bk in ((64, 64), (128, 256), (512, 512))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=1e-4)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(1, 256, 4, 2, 64)
+    q, k, v = (t.astype(jnp.bfloat16) for t in (q, k, v))
+    got = flash_attention(q, k, v, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+@given(s_pow=st.integers(7, 9), h=st.sampled_from([2, 4]),
+       g=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_flash_property(s_pow, h, g, seed):
+    rng = np.random.default_rng(seed)
+    S, hd = 2 ** s_pow, 32
+    H, KV = h * g, h
+    q = jnp.asarray(rng.standard_normal((1, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, S, KV, hd)).astype(np.float32))
+    got = flash_attention(q, k, v, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-5

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a
+REDUCED same-family config and runs one forward/train step on CPU,
+asserting output shapes and finiteness (the assignment's requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import encdec, lm
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.train import step as train_step_mod
+
+ARCHS = registry.list_archs()
+
+
+def _batch(cfg, key, B=2, S=32):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            key, (B, cfg.num_patches, lm.VIT_STUB_DIM))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.02 * jax.random.normal(key, (B, S, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_exact_config_matches_assignment(arch):
+    cfg = registry.get_config(arch)
+    spec = {
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "mamba2-1.3b": (48, 2048, 1, 1, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, (arch, got, spec)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_loss(arch):
+    cfg = registry.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    batch = _batch(cfg, key)
+    if cfg.family == "encdec":
+        params = encdec.init_params(cfg, key, jnp.float32, max_target=32)
+        loss, metrics = encdec.loss_fn(cfg, params, batch)
+    else:
+        params = lm.init_params(cfg, key, jnp.float32)
+        loss, metrics = lm.loss_fn(cfg, params, batch, remat=False,
+                                   loss_chunk=16)
+    assert np.isfinite(float(loss)), arch
+    # random init => loss ~ ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0, \
+        (arch, float(loss), np.log(cfg.vocab_size))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = registry.get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    opt = AdamW(warmup_cosine(1e-3, 2, 100))
+    step_fn = train_step_mod.make_train_step(cfg, None, opt,
+                                             loss_chunk=16)
+    state = train_step_mod.init_train_state(cfg, opt, key,
+                                            param_dtype=jnp.float32,
+                                            max_target=32)
+    batch = _batch(cfg, key)
+    l0 = None
+    for _ in range(3):
+        state, metrics = step_fn(state, batch)
+        assert np.isfinite(float(metrics["loss"])), arch
+        if l0 is None:
+            l0 = float(metrics["loss"])
+    # three steps on one fixed batch must reduce its loss
+    assert float(metrics["loss"]) < l0, arch
+    for leaf in jax.tree.leaves(state["params"]):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float32))), arch
+
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "qwen2.5-14b",
+                                  "grok-1-314b", "zamba2-2.7b",
+                                  "mamba2-1.3b"])
+def test_reduced_microbatched_equals_single(arch):
+    """Gradient accumulation must match the single-shot step."""
+    cfg = registry.get_reduced(arch)
+    key = jax.random.PRNGKey(2)
+    opt = AdamW(warmup_cosine(1e-3, 2, 100), grad_clip=None)
+    batch = _batch(cfg, key, B=4)
+    s1 = train_step_mod.init_train_state(cfg, opt, key,
+                                         param_dtype=jnp.float32,
+                                         max_target=32)
+    s2 = jax.tree.map(lambda x: x, s1)
+    f1 = train_step_mod.make_train_step(cfg, None, opt, microbatches=1,
+                                        loss_chunk=16)
+    f2 = train_step_mod.make_train_step(cfg, None, opt, microbatches=2,
+                                        loss_chunk=16)
+    s1, m1 = f1(s1, batch)
+    s2, m2 = f2(s2, batch)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        s1["params"], s2["params"])
+    assert max(jax.tree.leaves(d)) < 5e-3, (arch, max(jax.tree.leaves(d)))
+
+
+def test_param_count_sane():
+    """Full-config parameter counts are in the advertised ballpark."""
+    expect = {
+        "gemma2-27b": 27e9, "qwen2.5-14b": 14e9, "qwen3-4b": 4e9,
+        "h2o-danube-1.8b": 1.8e9, "internvl2-2b": 1.9e9,
+        "grok-1-314b": 314e9, "dbrx-132b": 132e9,
+        "whisper-medium": 0.77e9, "zamba2-2.7b": 2.7e9,
+        "mamba2-1.3b": 1.3e9,
+    }
+    for arch, n in expect.items():
+        got = registry.get_config(arch).param_count()
+        assert 0.55 * n < got < 1.7 * n, (arch, got, n)
+
+
+def test_moe_active_params():
+    grok = registry.get_config("grok-1-314b")
+    assert grok.param_count(active_only=True) < 0.45 * grok.param_count()

@@ -1,0 +1,136 @@
+"""Sharding-policy rules: divisibility-aware parameter specs, batch-axis
+degradation, KV-cache layouts (single-device mesh: rule logic only)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.models import lm
+from repro.sharding.policy import Policy, make_policy
+
+
+class FakeMesh:
+    """Shape-only stand-in (rule logic never touches devices)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+def _policy(**kw):
+    mesh = FakeMesh({"data": 16, "model": 16})
+    defaults = dict(mesh=mesh, batch_axes=("data",), fsdp_axes=("data",),
+                    tp_axis="model")
+    defaults.update(kw)
+    return Policy(**defaults)
+
+
+def test_embedding_vocab_divisibility():
+    p = _policy()
+    assert p.param_spec(("embedding",), (256000, 4096)) == P("model", ("data",))
+    # 92553 not divisible by 16 -> no vocab TP
+    assert p.param_spec(("embedding",), (92553, 2048)) == P(None, ("data",))
+
+
+def test_kv_head_divisibility():
+    p = _policy()
+    assert p.param_spec(("blocks", "l0", "attn", "wk"),
+                        (1, 4096, 16, 128)) == P(None, ("data",), "model", None)
+    assert p.param_spec(("blocks", "l0", "attn", "wk"),
+                        (1, 4096, 8, 128)) == P(None, ("data",), None, None)
+
+
+def test_moe_modes():
+    ep = _policy(ep_axis="model")
+    tp = _policy()
+    assert ep.param_spec(("moe_gate",), (16, 6144, 10752)) == \
+        P("model", ("data",), None)
+    assert tp.param_spec(("moe_gate",), (8, 6144, 32768)) == \
+        P(None, ("data",), "model")
+
+
+def test_kv_cache_spec_variants():
+    p = _policy()
+    # shardable kv heads -> heads on model
+    assert p.act_kv_cache(16) == P(("data",), None, "model", None)
+    # unshardable kv heads -> sequence takes the model axis
+    assert p.act_kv_cache(8) == P(("data",), ("model",), None, None)
+    # long-context batch-1: idle data axis joins the sequence dim
+    p2 = _policy(batch_axes=(), kv_seq_axes=("data",))
+    assert p2.act_kv_cache(8) == P(None, ("model", "data"), None, None)
+
+
+def test_logits_vocab_fallback():
+    p = _policy()
+    assert p.act_logits(151936) == P(("data",), None, "model")
+    assert p.act_logits(51865) == P(("data",), None, None)
+
+
+def test_make_policy_batch_degradation():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # batch divisible: keeps the axis
+    pol = make_policy(mesh, global_batch=16)
+    assert pol.batch_axes == ("data",)
+
+
+def test_param_tree_specs_cover_all_leaves():
+    """Every parameter of every reduced arch gets a spec whose sharded
+    dims divide the (16,16) production extent."""
+    mesh = FakeMesh({"data": 16, "model": 16})
+    for arch in registry.list_archs():
+        cfg = registry.get_config(arch)
+        pol = Policy(mesh=mesh)
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            shapes = jax.eval_shape(
+                lambda: encdec.init_params(cfg, jax.random.PRNGKey(0),
+                                           jnp.bfloat16, max_target=448))
+        else:
+            shapes = jax.eval_shape(
+                lambda: lm.init_params(cfg, jax.random.PRNGKey(0),
+                                       jnp.bfloat16))
+        specs = pol.tree_specs(shapes)
+        flat_shapes = jax.tree.leaves(shapes)
+        flat_specs = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_shapes) == len(flat_specs)
+        for sh, spec in zip(flat_shapes, flat_specs):
+            for dim, axes in zip(sh.shape, tuple(spec)):
+                if axes is None:
+                    continue
+                axes = (axes,) if isinstance(axes, str) else axes
+                ext = 1
+                for a in axes:
+                    ext *= mesh.shape[a]
+                assert dim % ext == 0, (arch, spec, sh.shape)
+
+
+def test_fsdp_parallelism_mode():
+    """§Perf A: the pure-FSDP rebalance shards batch+params over all
+    axes with no tensor parallelism."""
+    from repro.sharding.policy import make_policy
+    mesh = FakeMesh({"data": 16, "model": 16})
+    pol = make_policy(mesh, global_batch=256, parallelism="fsdp")
+    assert pol.tp_axis is None
+    assert pol.batch_axes == ("data", "model")
+    assert pol.fsdp_axes == ("data", "model")
+    # weights shard d_model over 256
+    spec = pol.param_spec(("blocks", "l0", "mlp", "w_up"), (1, 2560, 9728))
+    assert spec == P(None, ("data", "model"), None)
+    # batch that doesn't divide 256 degrades
+    pol2 = make_policy(mesh, global_batch=32, parallelism="fsdp")
+    assert pol2.batch_axes == ("model",)
+
+
+def test_tp_only_inference_mode():
+    """§Perf B2: fsdp=False replicates weights over the data axis."""
+    from repro.sharding.policy import make_policy
+    mesh = FakeMesh({"data": 16, "model": 16})
+    pol = make_policy(mesh, global_batch=128, fsdp=False)
+    assert pol.fsdp_axes == ()
+    spec = pol.param_spec(("blocks", "l0", "attn", "wq"),
+                          (1, 4608, 32, 128))
+    assert spec == P(None, None, "model", None)

@@ -1,0 +1,87 @@
+"""Roofline extraction unit tests: HLO collective/traffic parsers, the
+L-extrapolation, and MODEL_FLOPS accounting."""
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.launch import roofline as rl
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %ar = bf16[256,1024]{1,0} all-reduce(bf16[256,1024]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[64,4096]{1,0} all-gather(f32[64,256]{1,0} %x), replica_groups=[16,16]<=[256], dimensions={1}
+  %rs = bf16[16,64]{1,0} reduce-scatter(bf16[256,64]{1,0} %y), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %a2a = f32[128,32]{1,0} all-to-all(f32[128,32]{1,0} %z), replica_groups={{0,1}}
+  %cp = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %w), source_target_pairs={{0,1}}
+  %dot.1 = f32[128,64]{1,0} dot(f32[128,256]{1,0} %a, f32[256,64]{1,0} %b), lhs_contracting_dims={1}
+}
+"""
+
+
+def test_collective_parser_kinds_and_factors():
+    out = rl.collective_wire_bytes(HLO)
+    n = 4
+    ar = 2 * (n - 1) / n * 256 * 1024 * 2
+    assert abs(out["all-reduce"] - ar) < 1
+    ag = (16 - 1) / 16 * 64 * 4096 * 4
+    assert abs(out["all-gather"] - ag) < 1
+    rs = (16 - 1) * 16 * 64 * 2
+    assert abs(out["reduce-scatter"] - rs) < 1
+    a2a = (2 - 1) / 2 * 128 * 32 * 4
+    assert abs(out["all-to-all"] - a2a) < 1
+    cp = 8 * 8 * 4
+    assert abs(out["collective-permute"] - cp) < 1
+    total = ar + ag + rs + a2a + cp
+    assert abs(out["total"] - total) < 1
+
+
+def test_traffic_model_counts_dots():
+    got = rl.hbm_traffic_model(HLO)
+    dot = (128 * 256 + 256 * 64 + 128 * 64) * 4
+    assert got >= dot
+    # collectives are NOT in the traffic model
+    assert got < dot + 1e4
+
+
+def test_extrapolation():
+    c0 = {"flops": 10.0, "bytes": 100.0, "trans": 0.0,
+          "coll": {"all-reduce": 5.0, "total": 5.0}}
+    c1 = {"flops": 14.0, "bytes": 160.0, "trans": 0.0,
+          "coll": {"all-reduce": 8.0, "total": 8.0}}
+    cell = rl.extrapolate(c0, c1, 10)
+    assert cell.flops == 10 + 10 * 4
+    assert cell.bytes_hbm == 100 + 10 * 60
+    assert cell.coll_bytes == 5 + 10 * 3
+    assert cell.dominant in ("compute", "memory", "collective")
+
+
+def test_terms_and_dominant():
+    cell = rl.CellCost(flops=rl.PEAK_FLOPS, bytes_hbm=0.0, coll_bytes=0.0,
+                       coll_by_kind={})
+    assert abs(cell.t_compute - 1.0) < 1e-9
+    assert cell.dominant == "compute"
+
+
+def test_model_flops_kinds():
+    cfg = registry.get_config("qwen3-4b")
+    n = cfg.param_count()
+    tr = rl.model_flops(cfg, SHAPES["train_4k"])
+    pf = rl.model_flops(cfg, SHAPES["prefill_32k"])
+    de = rl.model_flops(cfg, SHAPES["decode_32k"])
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-9
+    assert abs(pf - 2 * n * 32 * 32768) / pf < 1e-9
+    assert abs(de - 2 * n * 128) / de < 1e-9
+
+
+def test_moe_uses_active_params():
+    cfg = registry.get_config("grok-1-314b")
+    tr = rl.model_flops(cfg, SHAPES["train_4k"])
+    dense_equiv = 6 * cfg.param_count() * 256 * 4096
+    assert tr < 0.5 * dense_equiv
+
+
+def test_dtype_bytes_table():
+    assert rl._shape_bytes("bf16", "2,3") == 12
+    assert rl._shape_bytes("f32", "") == 4      # scalar
+    assert rl._shape_bytes("s8", "100") == 100

@@ -1,0 +1,157 @@
+"""Serving-path correctness: decode with KV caches / SSM states must
+reproduce the full-sequence forward exactly, for every cache variant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import blocks as blk
+from repro.models import encdec, lm
+from repro.models.common import rms_norm, softcap
+from repro.serve.kvcache import KVCache, from_prefill, init_cache, update_cache
+
+DEC_ARCHS = ["qwen3-4b", "qwen2.5-14b", "gemma2-27b", "h2o-danube-1.8b",
+             "internvl2-2b", "grok-1-314b", "dbrx-132b", "zamba2-2.7b",
+             "mamba2-1.3b"]
+
+
+def _ref_next_logits(cfg, params, tokens):
+    x = lm.embed_inputs(cfg, params, {"tokens": tokens})
+    B, S1 = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S1), (B, S1))
+    h, _ = blk.stack_forward(cfg, params["blocks"], x, pos, None,
+                             params.get("shared"), remat=False)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps, plus_one=True)
+    ref = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                     lm.head_weights(cfg, params).astype(jnp.float32))
+    return softcap(ref, cfg.final_softcap)
+
+
+@pytest.mark.parametrize("arch", DEC_ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = registry.get_reduced(arch)
+    key = jax.random.PRNGKey(3)
+    params = lm.init_params(cfg, key, jnp.float32)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S + 2), 0, cfg.vocab_size)
+    _, state = lm.prefill(cfg, params, {"tokens": tokens[:, :S]},
+                          cache_len=S + 4)
+    # two decode steps
+    logits1, state = lm.decode_step(cfg, params, tokens[:, S:S + 1], state)
+    logits2, state = lm.decode_step(cfg, params, tokens[:, S + 1:S + 2],
+                                    state)
+    ref1 = _ref_next_logits(cfg, params, tokens[:, :S + 1])
+    ref2 = _ref_next_logits(cfg, params, tokens[:, :S + 2])
+    np.testing.assert_allclose(np.asarray(logits1[:, 0]), np.asarray(ref1),
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(logits2[:, 0]), np.asarray(ref2),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_decode_from_empty_state_matches_forward():
+    """init_decode_state + pure decoding == forward, token by token."""
+    cfg = registry.get_reduced("qwen3-4b")
+    key = jax.random.PRNGKey(4)
+    params = lm.init_params(cfg, key, jnp.float32)
+    B, S = 2, 10
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    state = lm.init_decode_state(cfg, B, S + 2, jnp.float32)
+    logits = None
+    for t in range(S):
+        logits, state = lm.decode_step(cfg, params, tokens[:, t:t + 1],
+                                       state)
+    ref = _ref_next_logits(cfg, params, tokens)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(ref),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_rolling_cache_window_semantics():
+    """A rolling (SWA) cache must give the same attention as a full cache
+    restricted to the window."""
+    cfg = registry.get_reduced("h2o-danube-1.8b")  # window=32 reduced
+    key = jax.random.PRNGKey(5)
+    params = lm.init_params(cfg, key, jnp.float32)
+    B = 1
+    S = cfg.window + 13            # force wraparound
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    state = lm.init_decode_state(cfg, B, cfg.window, jnp.float32)
+    logits = None
+    for t in range(S):
+        logits, state = lm.decode_step(cfg, params, tokens[:, t:t + 1],
+                                       state)
+    ref = _ref_next_logits(cfg, params, tokens)   # swa forward masks window
+    np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(ref),
+                               atol=3e-3, rtol=1e-3)
+    # cache must be window-sized
+    c = jax.tree.leaves(state["caches"])[0]
+    assert c.shape[2] == cfg.window
+
+
+def test_whisper_prefill_decode_consistency():
+    cfg = registry.get_reduced("whisper-medium")
+    key = jax.random.PRNGKey(6)
+    params = encdec.init_params(cfg, key, jnp.float32, max_target=64)
+    B, T, S = 2, 24, 12
+    frames = 0.02 * jax.random.normal(key, (B, T, cfg.d_model))
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    _, state = encdec.prefill(cfg, params,
+                              {"frames": frames, "tokens": tokens[:, :S]},
+                              cache_len=S + 4)
+    logits, state = encdec.decode_step(cfg, params, tokens[:, S:S + 1],
+                                       state)
+    # reference: teacher-forced decoder over S+1 tokens
+    enc_out = encdec.encode(cfg, params, frames)
+    x = jnp.take(params["embedding"], tokens, axis=0) \
+        + params["pos_embedding"][None, :S + 1]
+    pos = jnp.broadcast_to(jnp.arange(S + 1), (B, S + 1))
+    h, _ = encdec._decoder_stack(cfg, params, x, enc_out, pos, None)
+    h = encdec._ln(h, params["dec_final"], cfg.norm_eps)
+    ref = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                     params["embedding"].T.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(ref),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_kvcache_update_and_positions():
+    c = init_cache(2, 8, 1, 4, jnp.float32)
+    k = jnp.ones((2, 1, 1, 4))
+    c = update_cache(c, k, 2 * k, 3)
+    assert int(c.positions[0, 3]) == 3
+    assert int(c.positions[0, 0]) == -1
+    np.testing.assert_allclose(np.asarray(c.k[:, 3]), 1.0)
+    np.testing.assert_allclose(np.asarray(c.v[:, 3]), 2.0)
+
+
+def test_rolling_from_prefill_keeps_tail():
+    B, S, W = 1, 12, 8
+    k = jnp.arange(B * S * 1 * 2, dtype=jnp.float32).reshape(B, S, 1, 2)
+    c = from_prefill(k, k, window=W)
+    # positions present: S-W..S-1
+    pos = np.sort(np.asarray(c.positions[0]))
+    np.testing.assert_array_equal(pos, np.arange(S - W, S))
+
+
+def test_int8_cache_close_to_dense():
+    """§Perf B: int8 KV cache must track the dense cache closely."""
+    cfg = registry.get_reduced("gemma2-27b")
+    key = jax.random.PRNGKey(8)
+    params = lm.init_params(cfg, key, jnp.float32)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    sd = lm.init_decode_state(cfg, B, S + 2, jnp.float32)
+    sq = lm.init_decode_state(cfg, B, S + 2, jnp.float32,
+                              cache_impl="int8")
+    ld = lq = None
+    for t in range(S):
+        ld, sd = lm.decode_step(cfg, params, tokens[:, t:t + 1], sd)
+        lq, sq = lm.decode_step(cfg, params, tokens[:, t:t + 1], sq)
+    assert float(jnp.max(jnp.abs(ld - lq))) < 0.05
+    pd_ = jax.nn.softmax(ld[:, 0], -1)
+    pq_ = jax.nn.softmax(lq[:, 0], -1)
+    assert float(0.5 * jnp.sum(jnp.abs(pd_ - pq_), -1).max()) < 0.01
+    assert bool(jnp.all(jnp.argmax(ld, -1) == jnp.argmax(lq, -1)))
+    # storage really is int8
+    leaf = jax.tree.leaves(sq["caches"])[0]
+    from repro.serve.kvcache import QuantKVCache  # noqa: F401
+    assert any(l.dtype == jnp.int8 for l in jax.tree.leaves(sq["caches"]))
