@@ -11,6 +11,9 @@ performance study as future work. The harness therefore covers:
   fft_slab_scaling_*   — distributed slab FFT over 1/2/4/8 host devices
                          (the paper's future-work scaling study)
   fft_overlap_*        — chunked-pipeline slab variant (beyond-paper)
+  fft_*_r2c_* / fft_rfft_batched* — real-input (Hermitian) transforms
+                         vs the complex path: wire bytes + time, and
+                         one batched plan vs a per-field loop
   bandpass_*           — fused Pallas filter+energy vs two-pass jnp
   train_step / decode_step — model-substrate microbenches (reduced cfg)
 
@@ -116,10 +119,10 @@ def bench_fft_slab_scaling():
             "--xla_force_host_platform_device_count=%d"
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import make_mesh
         from repro.core.fft import dft, distributed as D
         ndev = %d
-        mesh = jax.make_mesh((ndev,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((ndev,), ("data",))
         rng = np.random.default_rng(0)
         N = 1024
         x = rng.standard_normal((N, N)).astype(np.float32)
@@ -156,6 +159,93 @@ def bench_fft_slab_scaling():
             f"speedup={base/out['slab']:.2f}x;N=1024")
         row(f"fft_overlap_p{ndev}", out["overlap"],
             f"vs_slab={out['slab']/out['overlap']:.2f}x")
+
+
+def bench_fft_rfft():
+    """r2c vs c2c on the distributed paths: same grid, half the
+    spectrum — reduced all_to_all wire bytes and local FFT work — plus
+    the batched-plan win (one compiled plan over B fields vs a loop)."""
+    script = textwrap.dedent("""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import make_mesh
+        from repro.core.fft import rfft
+        from repro.core.fft.plan import plan_dft, plan_rfft, FORWARD
+
+        def timeit(fn, *args, iters=10):
+            jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        out = {}
+        rng = np.random.default_rng(0)
+
+        # 2-D slab, 8-way: c2c vs r2c
+        mesh1 = make_mesh((8,), ("data",))
+        N = 1024
+        x = rng.standard_normal((N, N)).astype(np.float32)
+        c2c = plan_dft((N, N), FORWARD, mesh1)
+        r2c = plan_rfft((N, N), FORWARD, mesh1)
+        out["slab_c2c"] = timeit(c2c.execute, *c2c.place(x))
+        out["slab_r2c"] = timeit(r2c.execute, *r2c.place(x))
+        hp = rfft.padded_half(N, 8)
+        out["slab_c2c_wire_mb"] = 2 * N * N * 4 / 1e6
+        out["slab_r2c_wire_mb"] = 2 * N * hp * 4 / 1e6
+
+        # 3-D pencil, 4x2: c2c vs r2c
+        mesh2 = make_mesh((4, 2), ("data", "model"))
+        G = (64, 64, 64)
+        x3 = rng.standard_normal(G).astype(np.float32)
+        c3 = plan_dft(G, FORWARD, mesh2, decomp="pencil")
+        r3 = plan_rfft(G, FORWARD, mesh2, decomp="pencil")
+        out["pencil_c2c"] = timeit(c3.execute, *c3.place(x3))
+        out["pencil_r2c"] = timeit(r3.execute, *r3.place(x3))
+        hp3 = rfft.padded_half(G[2], 2)
+        out["pencil_c2c_wire_mb"] = 2 * 2 * G[0]*G[1]*G[2] * 4 / 1e6
+        out["pencil_r2c_wire_mb"] = 2 * 2 * G[0]*G[1]*hp3 * 4 / 1e6
+
+        # batched plan vs per-field loop (8 fields, 256^2, slab r2c)
+        B, M = 8, 256
+        xb = rng.standard_normal((B, M, M)).astype(np.float32)
+        pb = plan_rfft((M, M), FORWARD, mesh1, batch_ndim=1)
+        p1f = plan_rfft((M, M), FORWARD, mesh1)
+        out["rfft_batched8"] = timeit(pb.execute, *pb.place(xb))
+        xs = [p1f.place(xb[b]) for b in range(B)]
+        def looped():
+            return [p1f.execute(*a) for a in xs]
+        out["rfft_looped8"] = timeit(looped)
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if res.returncode != 0:
+        row("fft_rfft_vs_c2c", -1, "ERROR")
+        return
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    row("fft_slab_c2c_p8", out["slab_c2c"],
+        f"wire_MB={out['slab_c2c_wire_mb']:.1f};N=1024")
+    row("fft_slab_r2c_p8", out["slab_r2c"],
+        f"wire_MB={out['slab_r2c_wire_mb']:.1f}"
+        f";vs_c2c_time={out['slab_c2c']/out['slab_r2c']:.2f}x"
+        f";vs_c2c_bytes={out['slab_c2c_wire_mb']/out['slab_r2c_wire_mb']:.2f}x")
+    row("fft_pencil_c2c_4x2", out["pencil_c2c"],
+        f"wire_MB={out['pencil_c2c_wire_mb']:.1f};N=64^3")
+    row("fft_pencil_r2c_4x2", out["pencil_r2c"],
+        f"wire_MB={out['pencil_r2c_wire_mb']:.1f}"
+        f";vs_c2c_time={out['pencil_c2c']/out['pencil_r2c']:.2f}x"
+        f";vs_c2c_bytes={out['pencil_c2c_wire_mb']/out['pencil_r2c_wire_mb']:.2f}x")
+    row("fft_rfft_batched8_p8", out["rfft_batched8"],
+        f"vs_looped={out['rfft_looped8']/out['rfft_batched8']:.2f}x;N=256^2")
+    row("fft_rfft_looped8_p8", out["rfft_looped8"], "baseline")
 
 
 def bench_bandpass():
@@ -220,6 +310,7 @@ def main() -> None:
     bench_fft_local()
     bench_workflow_fig2()
     bench_bandpass()
+    bench_fft_rfft()
     bench_fft_slab_scaling()
     bench_fft_kernels()
     bench_model_steps()

@@ -1,0 +1,66 @@
+"""Batched real-input in-situ chain — many fields per step, one plan.
+
+A simulation rarely publishes one field: velocity components, pressure,
+tracers all need the same spectral processing every step. This example
+runs the paper's fwd → bandpass → inv chain over a STACK of real fields
+with a single cached, batched r2c/c2r plan pair:
+
+  * ``real=True``      — Hermitian half-spectrum (r2c forward, c2r
+                          back): half the FFT work and wire bytes
+  * ``batch_ndim=1``   — the leading dim is a batch of fields sharing
+                          one compiled executable
+  * plan cache         — both endpoints and every later step reuse the
+                          process-wide compiled plans (FFTW-style:
+                          plan once, execute forever)
+
+Run:  PYTHONPATH=src python examples/insitu_rfft_batched.py
+(uses 8 host placeholder devices — set BEFORE jax import)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.compat import make_mesh
+from repro.core.fft.plan import plan_cache_stats
+from repro.core.insitu.bridge import BridgeData, GridMeta
+from repro.core.insitu.config import build_chain
+
+mesh = make_mesh((8,), ("data",))
+B, N0, N1 = 4, 128, 128            # 4 fields per step
+grid = GridMeta(dims=(N0, N1))
+
+rng = np.random.default_rng(0)
+yy, xx = np.meshgrid(np.arange(N0), np.arange(N1), indexing="ij")
+clean = np.stack([np.sin(2 * np.pi * k * (xx + 2 * yy) / N0) / k
+                  for k in (2, 3, 4, 5)]).astype(np.float32)
+fields = clean + 0.5 * rng.standard_normal((B, N0, N1)).astype(np.float32)
+
+chain = build_chain({
+    "mode": "insitu",
+    "chain": [
+        {"endpoint": "fft", "array": "field", "direction": "forward",
+         "real": True, "batch_ndim": 1},
+        {"endpoint": "bandpass", "array": "field", "keep_frac": 0.08,
+         "use_kernel": False},
+        {"endpoint": "fft", "array": "field", "direction": "backward",
+         "real": True, "batch_ndim": 1},
+    ],
+}, mesh=mesh, grid=grid)
+
+data = BridgeData(arrays={"field": jnp.asarray(fields)}, grid=grid)
+out = chain.execute(data)
+
+den = np.asarray(out.arrays["field"])
+for b in range(B):
+    mse0 = float(np.mean((fields[b] - clean[b]) ** 2))
+    mse1 = float(np.mean((den[b] - clean[b]) ** 2))
+    print(f"field {b}: MSE {mse0:.4f} -> {mse1:.4f} "
+          f"({mse0 / mse1:.1f}x better)")
+print("plan cache:", plan_cache_stats())
+print("timings:", chain.marshaling_report()["timings_s"])
+assert all(np.mean((den[b] - clean[b]) ** 2)
+           < np.mean((fields[b] - clean[b]) ** 2) for b in range(B))
+print("OK")

@@ -1,0 +1,72 @@
+"""Version-tolerance shims for the JAX API surface this repo uses.
+
+The repo targets a range of JAX releases (CI pins one, clusters run
+others) and three API points have drifted across that range:
+
+* ``jax.make_mesh`` grew an ``axis_types`` kwarg (and the
+  ``jax.sharding.AxisType`` enum) in 0.5.x; earlier releases have
+  neither.
+* ``shard_map`` moved from ``jax.experimental.shard_map`` (kwarg
+  ``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``).
+* replication/vma checking must be off either way: ``pallas_call``
+  inside ``shard_map`` can't declare vma on its ``out_shape``
+  ShapeDtypeStructs — the escape hatch the error message itself
+  recommends.
+
+All mesh construction and every ``shard_map`` in the repo routes
+through here; nothing else should touch those APIs directly.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def jax_version() -> Tuple[int, ...]:
+    parts = []
+    for p in jax.__version__.split(".")[:3]:
+        digits = "".join(ch for ch in p if ch.isdigit())
+        parts.append(int(digits) if digits else 0)
+    return tuple(parts)
+
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None):
+    """``jax.make_mesh`` that omits ``axis_types`` on JAX < 0.5.
+
+    When the running JAX has ``jax.sharding.AxisType`` every axis is
+    declared ``Auto`` (the repo-wide convention: shardings are explicit
+    NamedShardings + shard_map, never inferred Explicit-mode axes);
+    older releases have only Auto semantics, so omitting the kwarg is
+    behavior-identical.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _HAS_AXIS_TYPE:
+        kwargs["axis_types"] = (
+            jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn  # noqa: N813
+    params = inspect.signature(fn).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return fn, check_kw
+
+
+_SHARD_MAP, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    """Version-dispatched ``shard_map`` with rep/vma checking disabled."""
+    return _SHARD_MAP(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})

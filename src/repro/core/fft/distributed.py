@@ -36,20 +36,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.fft.dft import Pair, cmul, fft_along, local_fft
-
-def shard_map(body, *, mesh, in_specs, out_specs):
-    # check_vma=False: pallas_call inside shard_map can't declare vma on
-    # its out_shape ShapeDtypeStructs (jax 0.8 limitation) — the escape
-    # hatch the error message itself recommends.
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
 
 
 def _a2a(x, axis_name, split, concat, wire_dtype=None):
     """all_to_all with optional reduced-precision transport (§Perf:
     casting the spectral planes to bf16 for the wire halves the
-    distributed FFT's dominant collective bytes; compute stays f32)."""
+    distributed FFT's dominant collective bytes; compute stays f32).
+
+    ``split``/``concat`` may be negative (counted from the trailing
+    transform dims) so bodies stay valid under leading batch dims."""
+    split = split % x.ndim
+    concat = concat % x.ndim
     if wire_dtype is not None and x.dtype != wire_dtype:
         orig = x.dtype
         y = jax.lax.all_to_all(x.astype(wire_dtype), axis_name,
@@ -60,6 +59,24 @@ def _a2a(x, axis_name, split, concat, wire_dtype=None):
                               concat_axis=concat, tiled=True)
 
 
+def _batch_ndim(x, rank: int) -> int:
+    """Leading batch dims of ``x`` given the transform rank.
+
+    Every decomposition here transforms the TRAILING ``rank`` dims;
+    anything in front is a batch of independent fields sharing one
+    compiled plan (the in-situ chain transforms many fields per step
+    this way)."""
+    nb = x.ndim - rank
+    if nb < 0:
+        raise ValueError(f"rank-{x.ndim} input for a rank-{rank} transform")
+    return nb
+
+
+def _bspec(nb: int, *tail) -> P:
+    """PartitionSpec with ``nb`` replicated leading (batch) dims."""
+    return P(*((None,) * nb), *tail)
+
+
 # ---------------------------------------------------------------------------
 # 2-D slab (the paper's fftw_mpi_plan_dft_2d equivalent)
 # ---------------------------------------------------------------------------
@@ -67,27 +84,30 @@ def _a2a(x, axis_name, split, concat, wire_dtype=None):
 def slab_fft_2d(re, im, mesh: Mesh, axis_name: str = "data", *,
                 inverse: bool = False, backend: str = "auto",
                 wire_dtype=None) -> Pair:
-    """2-D FFT of a global (N0, N1) array.
+    """2-D FFT of a global (..., N0, N1) array (leading dims = batch).
 
-    forward:  input P(ax, None)  → output P(None, ax)   (Y[k0, k1])
-    inverse:  input P(None, ax)  → output P(ax, None)   (y[n0, n1])
+    forward:  input P(..., ax, None)  → output P(..., None, ax)
+    inverse:  input P(..., None, ax)  → output P(..., ax, None)
     """
+    nb = _batch_ndim(re, 2)
     if inverse:
-        in_spec, out_spec = P(None, axis_name), P(axis_name, None)
+        in_spec, out_spec = _bspec(nb, None, axis_name), \
+            _bspec(nb, axis_name, None)
 
         def body(r, i):
-            r, i = fft_along(r, i, 0, inverse=True, backend=backend)
-            r = _a2a(r, axis_name, 0, 1, wire_dtype)
-            i = _a2a(i, axis_name, 0, 1, wire_dtype)
-            return fft_along(r, i, 1, inverse=True, backend=backend)
+            r, i = fft_along(r, i, -2, inverse=True, backend=backend)
+            r = _a2a(r, axis_name, -2, -1, wire_dtype)
+            i = _a2a(i, axis_name, -2, -1, wire_dtype)
+            return fft_along(r, i, -1, inverse=True, backend=backend)
     else:
-        in_spec, out_spec = P(axis_name, None), P(None, axis_name)
+        in_spec, out_spec = _bspec(nb, axis_name, None), \
+            _bspec(nb, None, axis_name)
 
         def body(r, i):
-            r, i = fft_along(r, i, 1, inverse=False, backend=backend)
-            r = _a2a(r, axis_name, 1, 0, wire_dtype)
-            i = _a2a(i, axis_name, 1, 0, wire_dtype)
-            return fft_along(r, i, 0, inverse=False, backend=backend)
+            r, i = fft_along(r, i, -1, inverse=False, backend=backend)
+            r = _a2a(r, axis_name, -1, -2, wire_dtype)
+            i = _a2a(i, axis_name, -1, -2, wire_dtype)
+            return fft_along(r, i, -2, inverse=False, backend=backend)
 
     return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
                      out_specs=(out_spec, out_spec))(re, im)
@@ -95,9 +115,12 @@ def slab_fft_2d(re, im, mesh: Mesh, axis_name: str = "data", *,
 
 def slab_fft_2d_overlap(re, im, mesh: Mesh, axis_name: str = "data", *,
                         inverse: bool = False, backend: str = "auto",
-                        chunks: int = 4) -> Pair:
+                        chunks: int = 4, wire_dtype=None) -> Pair:
     """Same contract as ``slab_fft_2d``; the first FFT+all_to_all stage is
     split into row chunks so communication pipelines with compute."""
+    if re.ndim != 2:
+        raise ValueError("slab_fft_2d_overlap is rank-2 only; use "
+                         "slab_fft_2d for batched transforms")
     if inverse:
         in_spec, out_spec = P(None, axis_name), P(axis_name, None)
 
@@ -120,8 +143,8 @@ def slab_fft_2d_overlap(re, im, mesh: Mesh, axis_name: str = "data", *,
             for j in range(chunks):
                 rj = jax.lax.dynamic_slice_in_dim(r, j * cp, cp, axis=0)
                 ij = jax.lax.dynamic_slice_in_dim(i, j * cp, cp, axis=0)
-                rj = _a2a(rj, axis_name, 0, 1)
-                ij = _a2a(ij, axis_name, 0, 1)
+                rj = _a2a(rj, axis_name, 0, 1, wire_dtype)
+                ij = _a2a(ij, axis_name, 0, 1, wire_dtype)
                 rj, ij = fft_along(rj, ij, 1, inverse=True, backend=backend)
                 parts.append((rj, ij))
             return (jnp.concatenate([p[0] for p in parts], axis=0),
@@ -138,8 +161,8 @@ def slab_fft_2d_overlap(re, im, mesh: Mesh, axis_name: str = "data", *,
                 rj = jax.lax.dynamic_slice_in_dim(r, j * c, c, axis=0)
                 ij = jax.lax.dynamic_slice_in_dim(i, j * c, c, axis=0)
                 rj, ij = fft_along(rj, ij, 1, inverse=False, backend=backend)
-                rj = _a2a(rj, axis_name, 1, 0)
-                ij = _a2a(ij, axis_name, 1, 0)
+                rj = _a2a(rj, axis_name, 1, 0, wire_dtype)
+                ij = _a2a(ij, axis_name, 1, 0, wire_dtype)
                 parts.append((rj, ij))
             r = jnp.concatenate([p[0] for p in parts], axis=0)
             i = jnp.concatenate([p[1] for p in parts], axis=0)
@@ -163,19 +186,21 @@ def slab_fft_2d_overlap(re, im, mesh: Mesh, axis_name: str = "data", *,
 def pencil_fft_3d(re, im, mesh: Mesh,
                   axes: Tuple[str, str] = ("data", "model"), *,
                   backend: str = "auto", wire_dtype=None) -> Pair:
-    """3-D FFT: input x[n0, n1, n2] P(a0, a1, None) (z-pencils) →
-    output Y[k0, k1, k2] P(None, a0, a1) (x-pencils)."""
+    """3-D FFT: input x[..., n0, n1, n2] P(..., a0, a1, None)
+    (z-pencils) → output Y[..., k0, k1, k2] P(..., None, a0, a1)
+    (x-pencils). Leading dims = batch."""
     a0, a1 = axes
-    in_spec, out_spec = P(a0, a1, None), P(None, a0, a1)
+    nb = _batch_ndim(re, 3)
+    in_spec, out_spec = _bspec(nb, a0, a1, None), _bspec(nb, None, a0, a1)
 
     def body(r, i):
-        r, i = fft_along(r, i, 2, inverse=False, backend=backend)  # z
-        r = _a2a(r, a1, 2, 1, wire_dtype)
-        i = _a2a(i, a1, 2, 1, wire_dtype)
-        r, i = fft_along(r, i, 1, inverse=False, backend=backend)  # y
-        r = _a2a(r, a0, 1, 0, wire_dtype)
-        i = _a2a(i, a0, 1, 0, wire_dtype)
-        r, i = fft_along(r, i, 0, inverse=False, backend=backend)  # x
+        r, i = fft_along(r, i, -1, inverse=False, backend=backend)  # z
+        r = _a2a(r, a1, -1, -2, wire_dtype)
+        i = _a2a(i, a1, -1, -2, wire_dtype)
+        r, i = fft_along(r, i, -2, inverse=False, backend=backend)  # y
+        r = _a2a(r, a0, -2, -3, wire_dtype)
+        i = _a2a(i, a0, -2, -3, wire_dtype)
+        r, i = fft_along(r, i, -3, inverse=False, backend=backend)  # x
         return r, i
 
     return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
@@ -185,18 +210,20 @@ def pencil_fft_3d(re, im, mesh: Mesh,
 def pencil_ifft_3d(re, im, mesh: Mesh,
                    axes: Tuple[str, str] = ("data", "model"), *,
                    backend: str = "auto", wire_dtype=None) -> Pair:
-    """Inverse of ``pencil_fft_3d``: P(None, a0, a1) → P(a0, a1, None)."""
+    """Inverse of ``pencil_fft_3d``: P(..., None, a0, a1) →
+    P(..., a0, a1, None)."""
     a0, a1 = axes
-    in_spec, out_spec = P(None, a0, a1), P(a0, a1, None)
+    nb = _batch_ndim(re, 3)
+    in_spec, out_spec = _bspec(nb, None, a0, a1), _bspec(nb, a0, a1, None)
 
     def body(r, i):
-        r, i = fft_along(r, i, 0, inverse=True, backend=backend)   # x
-        r = _a2a(r, a0, 0, 1, wire_dtype)
-        i = _a2a(i, a0, 0, 1, wire_dtype)
-        r, i = fft_along(r, i, 1, inverse=True, backend=backend)   # y
-        r = _a2a(r, a1, 1, 2, wire_dtype)
-        i = _a2a(i, a1, 1, 2, wire_dtype)
-        r, i = fft_along(r, i, 2, inverse=True, backend=backend)   # z
+        r, i = fft_along(r, i, -3, inverse=True, backend=backend)   # x
+        r = _a2a(r, a0, -3, -2, wire_dtype)
+        i = _a2a(i, a0, -3, -2, wire_dtype)
+        r, i = fft_along(r, i, -2, inverse=True, backend=backend)   # y
+        r = _a2a(r, a1, -2, -1, wire_dtype)
+        i = _a2a(i, a1, -2, -1, wire_dtype)
+        r, i = fft_along(r, i, -1, inverse=True, backend=backend)   # z
         return r, i
 
     return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
@@ -221,11 +248,13 @@ def fourstep_fft_1d(re, im, mesh: Mesh, axis_name: str = "data", *,
     ``cyclic_order``/``cyclic_inverse_order`` convert natural ↔ cyclic.
     """
     Pn = mesh.shape[axis_name]
-    spec = P(axis_name)
+    nb = _batch_ndim(re, 1)
+    spec = _bspec(nb, axis_name)
 
     def body(r, i):
         M = r.shape[-1]
         N = M * Pn
+        lead = r.shape[:-1]
         # x viewed globally as rows p of length M: this shard = row p.
         # 1) length-M FFT per row
         r, i = local_fft(r, i, inverse=False, backend=backend)
@@ -235,13 +264,13 @@ def fourstep_fft_1d(re, im, mesh: Mesh, axis_name: str = "data", *,
         ang = -2.0 * math.pi * p * k / N
         r, i = cmul(r, i, jnp.cos(ang), jnp.sin(ang))
         # 3) global transpose
-        r = _a2a(r.reshape(1, M), axis_name, 1, 0)      # (P, M/P)
-        i = _a2a(i.reshape(1, M), axis_name, 1, 0)
+        r = _a2a(r[..., None, :], axis_name, -1, -2)    # (..., P, M/P)
+        i = _a2a(i[..., None, :], axis_name, -1, -2)
         # 4) length-P FFT across rows
-        r, i = fft_along(r, i, 0, inverse=False, backend=backend)
-        # local (P, M/P): flatten column-major so it inverts cleanly
-        return (jnp.transpose(r, (1, 0)).reshape(-1),
-                jnp.transpose(i, (1, 0)).reshape(-1))
+        r, i = fft_along(r, i, -2, inverse=False, backend=backend)
+        # local (..., P, M/P): flatten column-major so it inverts cleanly
+        return (jnp.swapaxes(r, -1, -2).reshape(*lead, M),
+                jnp.swapaxes(i, -1, -2).reshape(*lead, M))
 
     return shard_map(body, mesh=mesh, in_specs=(spec, spec),
                      out_specs=(spec, spec))(re, im)
@@ -251,16 +280,18 @@ def fourstep_ifft_1d(re, im, mesh: Mesh, axis_name: str = "data", *,
                      backend: str = "auto") -> Pair:
     """Exact inverse of ``fourstep_fft_1d``."""
     Pn = mesh.shape[axis_name]
-    spec = P(axis_name)
+    nb = _batch_ndim(re, 1)
+    spec = _bspec(nb, axis_name)
 
     def body(r, i):
         Mp = r.shape[-1] // Pn
+        lead = r.shape[:-1]
         # undo step 4's column-major flatten, then invert the P-FFT
-        r = jnp.transpose(r.reshape(Mp, Pn), (1, 0))     # (P, M/P)
-        i = jnp.transpose(i.reshape(Mp, Pn), (1, 0))
-        r, i = fft_along(r, i, 0, inverse=True, backend=backend)
-        r = _a2a(r, axis_name, 0, 1).reshape(-1)         # (1, M) -> (M,)
-        i = _a2a(i, axis_name, 0, 1).reshape(-1)
+        r = jnp.swapaxes(r.reshape(*lead, Mp, Pn), -1, -2)   # (..., P, M/P)
+        i = jnp.swapaxes(i.reshape(*lead, Mp, Pn), -1, -2)
+        r, i = fft_along(r, i, -2, inverse=True, backend=backend)
+        r = _a2a(r, axis_name, -2, -1).reshape(*lead, -1)    # (..., M)
+        i = _a2a(i, axis_name, -2, -1).reshape(*lead, -1)
         M = r.shape[-1]
         N = M * Pn
         p = jax.lax.axis_index(axis_name).astype(jnp.float32)

@@ -1,61 +1,177 @@
-"""FFTW-style plan lifecycle over jit compilation.
+"""FFTW-style plan lifecycle over jit compilation: cached + measured.
 
 The paper's endpoint wraps FFTW's ``allocate - plan - execute - destroy``
 paradigm (Listing 3). The JAX analogue: *planning is compilation*. An
 ``FFTPlan`` captures (global shape, mesh, decomposition, direction,
-backend), lowers + compiles the distributed transform once, and
-``execute`` runs it on device arrays. ``FFTW_ESTIMATE``'s role (pick a
-reasonable algorithm fast) maps to the backend dispatch heuristics;
-``FFTW_MEASURE``'s (search) maps to the §Perf block-shape sweep.
+backend, real/complex, batch rank, wire dtype), lowers + compiles the
+distributed transform once, and ``execute`` runs it on device arrays.
+
+Three FFTW behaviors are reproduced on top of that:
+
+* **Plan cache** — FFTW never re-plans for a (shape, flags) pair it has
+  seen; neither do we. ``plan_dft``/``plan_rfft`` consult a
+  process-wide cache keyed by every compile-relevant field (including
+  the mesh's axis extents and device ids), so in-situ chains that
+  re-create endpoints every step still reuse one compiled plan.
+  ``plan_cache_stats()`` exposes hit/miss counters;
+  ``plan_cache_clear()`` empties it (e.g. after ``jax.clear_caches``).
+
+* **FFTW_ESTIMATE** — ``backend="auto"`` picks a reasonable algorithm
+  from the dispatch heuristics in ``dft.local_fft`` without measuring.
+
+* **FFTW_MEASURE** — ``backend="measure"`` sweeps the variant space on
+  first use and pins the fastest:
+
+      backend        ∈ {fourstep, stockham (pow-2 grids), jnp}
+      overlap_chunks ∈ {0, 2, 4}   (slab, unbatched complex only)
+      wire_dtype     ∈ {None, bfloat16}
+
+  Each candidate is compiled and timed on a zero input of the right
+  sharded shape; the winner's knobs are cached per (shape, mesh,
+  decomp, direction, real, batch) so later ``measure`` plans skip the
+  sweep. Note ``wire_dtype="bfloat16"`` trades ~3 decimal digits of
+  accuracy for half the collective bytes; pass
+  ``allow_reduced_wire=False`` to keep the sweep exact.
+
+Real-input plans (``plan_rfft``, or ``real=True``) use the Hermitian
+half-spectrum paths in ``rfft.py``: forward ``execute(x)`` maps a real
+field to a half-spectrum (re, im) pair, backward ``execute(re, im)``
+maps it back to a real field. Half the local FFT work, half the
+all_to_all wire bytes.
+
+Batched plans (``batch_ndim=k``) transform arrays with ``k`` extra
+leading dims — a whole stack of fields per step under ONE compiled
+plan, the in-situ chain's steady-state shape.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+import time
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.fft import distributed as dist
+from repro.core.fft import rfft as rfft_mod
 from repro.core.fft.dft import Pair, to_complex, to_pair
 
 FORWARD = "forward"
 BACKWARD = "backward"
 
+MEASURE = "measure"                   # backend sentinel: autotune
+
+# ---------------------------------------------------------------------------
+# Process-wide plan cache
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[tuple, "FFTPlan"] = {}
+_TUNE_CACHE: Dict[tuple, dict] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def _mesh_key(mesh: Mesh) -> tuple:
+    return (tuple(mesh.shape.items()),
+            tuple(d.id for d in mesh.devices.flat))
+
+
+def _wire_name(wire_dtype) -> Optional[str]:
+    if wire_dtype is None:
+        return None
+    return jnp.dtype(wire_dtype).name
+
+
+def _wire_dtype(name: Optional[str]):
+    return None if name is None else jnp.dtype(name)
+
+
+def _plan_key(shape, direction, mesh, decomp, axis_names, backend,
+              overlap_chunks, real, batch_ndim, wire,
+              measure_flag=None) -> tuple:
+    return (shape, direction, _mesh_key(mesh), decomp, axis_names,
+            backend, overlap_chunks, real, batch_ndim, wire, measure_flag)
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    return dict(_STATS, size=len(_PLAN_CACHE))
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _TUNE_CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class FFTPlan:
-    shape: Tuple[int, ...]
+    shape: Tuple[int, ...]            # transform (grid) shape, no batch dims
     direction: str
     mesh: Mesh
     decomp: str                       # "slab" | "pencil" | "fourstep1d"
     axis_names: Tuple[str, ...]
     backend: str = "auto"
     overlap_chunks: int = 0           # >0: pipelined slab variant
+    real: bool = False                # r2c (fwd) / c2r (bwd) half-spectrum
+    batch_ndim: int = 0               # extra leading batch dims at execute
+    wire_dtype: Optional[str] = None  # e.g. "bfloat16": reduced a2a wire
     _fn: Optional[Callable] = None
 
     # -- plan ---------------------------------------------------------------
     def compile(self) -> "FFTPlan":
         inverse = self.direction == BACKWARD
         mesh, backend = self.mesh, self.backend
+        wire = _wire_dtype(self.wire_dtype)
 
-        if self.decomp == "slab":
+        if self.real:
+            if self.overlap_chunks:
+                raise ValueError(
+                    "overlap_chunks is not supported on real plans")
+            if self.decomp == "slab":
+                ax = self.axis_names[0]
+                if inverse:
+                    n1 = self.shape[-1]
+                    fn = lambda r, i: rfft_mod.irfft2_slab(
+                        r, i, n1, mesh, ax, backend=backend, wire_dtype=wire)
+                else:
+                    fn = lambda x: rfft_mod.rfft2_slab(
+                        x, mesh, ax, backend=backend, wire_dtype=wire)
+            elif self.decomp == "pencil":
+                axes = self.axis_names
+                if inverse:
+                    n2 = self.shape[-1]
+                    fn = lambda r, i: rfft_mod.irfft3_pencil(
+                        r, i, n2, mesh, axes, backend=backend,
+                        wire_dtype=wire)
+                else:
+                    fn = lambda x: rfft_mod.rfft3_pencil(
+                        x, mesh, axes, backend=backend, wire_dtype=wire)
+            else:
+                raise ValueError(
+                    f"real plans support slab/pencil, not {self.decomp!r}")
+        elif self.decomp == "slab":
             ax = self.axis_names[0]
             if self.overlap_chunks:
                 fn = lambda r, i: dist.slab_fft_2d_overlap(
                     r, i, mesh, ax, inverse=inverse, backend=backend,
-                    chunks=self.overlap_chunks)
+                    chunks=self.overlap_chunks, wire_dtype=wire)
             else:
                 fn = lambda r, i: dist.slab_fft_2d(
-                    r, i, mesh, ax, inverse=inverse, backend=backend)
+                    r, i, mesh, ax, inverse=inverse, backend=backend,
+                    wire_dtype=wire)
         elif self.decomp == "pencil":
             if inverse:
                 fn = lambda r, i: dist.pencil_ifft_3d(
-                    r, i, mesh, self.axis_names, backend=backend)
+                    r, i, mesh, self.axis_names, backend=backend,
+                    wire_dtype=wire)
             else:
                 fn = lambda r, i: dist.pencil_fft_3d(
-                    r, i, mesh, self.axis_names, backend=backend)
+                    r, i, mesh, self.axis_names, backend=backend,
+                    wire_dtype=wire)
         elif self.decomp == "fourstep1d":
             ax = self.axis_names[0]
             if inverse:
@@ -71,42 +187,188 @@ class FFTPlan:
         return self
 
     # -- sharding contracts --------------------------------------------------
+    def _spec(self, *tail) -> P:
+        return P(*((None,) * self.batch_ndim), *tail)
+
     def input_sharding(self) -> NamedSharding:
         inverse = self.direction == BACKWARD
         if self.decomp == "slab":
             ax = self.axis_names[0]
-            spec = P(None, ax) if inverse else P(ax, None)
+            spec = self._spec(None, ax) if inverse else self._spec(ax, None)
         elif self.decomp == "pencil":
             a0, a1 = self.axis_names
-            spec = P(None, a0, a1) if inverse else P(a0, a1, None)
+            spec = self._spec(None, a0, a1) if inverse \
+                else self._spec(a0, a1, None)
         else:
-            spec = P(self.axis_names[0])
+            spec = self._spec(self.axis_names[0])
         return NamedSharding(self.mesh, spec)
 
-    def place(self, x) -> Pair:
-        re, im = to_pair(x)
+    def output_sharding(self) -> NamedSharding:
+        """Where ``execute`` leaves the data (the next stage's input)."""
+        mirror = dataclasses.replace(
+            self, direction=BACKWARD if self.direction == FORWARD
+            else FORWARD)
+        return mirror.input_sharding()
+
+    def place(self, x):
+        """Device-put onto the plan's input sharding. Real forward plans
+        take the real field itself; everything else takes/returns split
+        (re, im) pairs."""
         sh = self.input_sharding()
+        if self.real and self.direction == FORWARD:
+            return (jax.device_put(jnp.asarray(x, jnp.float32), sh),)
+        re, im = to_pair(x)
         return jax.device_put(re, sh), jax.device_put(im, sh)
 
     # -- execute --------------------------------------------------------------
-    def execute(self, re, im) -> Pair:
+    def execute(self, *arrays):
+        """Run the compiled transform.
+
+        complex plans / real backward:  ``execute(re, im)``
+        real forward:                   ``execute(x)`` → (re, im)
+        real backward returns the real field alone."""
         if self._fn is None:
             self.compile()
-        return self._fn(re, im)
+        return self._fn(*arrays)
 
     def execute_complex(self, x):
-        return to_complex(self.execute(*self.place(x)))
+        out = self.execute(*self.place(x))
+        return to_complex(out) if isinstance(out, tuple) else out
 
 
-def plan_dft(shape, direction: str, mesh: Mesh, *,
-             decomp: Optional[str] = None,
-             axis_names: Optional[Tuple[str, ...]] = None,
-             backend: str = "auto", overlap_chunks: int = 0) -> FFTPlan:
-    """`fftw_mpi_plan_dft_*` equivalent with decomposition inference."""
+# ---------------------------------------------------------------------------
+# Planner entry points (cached)
+# ---------------------------------------------------------------------------
+
+def _infer(shape, decomp, axis_names, mesh):
     if decomp is None:
         decomp = {1: "fourstep1d", 2: "slab", 3: "pencil"}[len(shape)]
     if axis_names is None:
         names = tuple(mesh.axis_names)
         axis_names = names[:2] if decomp == "pencil" else names[:1]
-    return FFTPlan(tuple(shape), direction, mesh, decomp, axis_names,
-                   backend, overlap_chunks).compile()
+    return decomp, tuple(axis_names)
+
+
+def plan_dft(shape, direction: str, mesh: Mesh, *,
+             decomp: Optional[str] = None,
+             axis_names: Optional[Tuple[str, ...]] = None,
+             backend: str = "auto", overlap_chunks: int = 0,
+             real: bool = False, batch_ndim: int = 0,
+             wire_dtype=None, allow_reduced_wire: bool = True) -> FFTPlan:
+    """``fftw_mpi_plan_dft_*`` equivalent: decomposition inference, a
+    process-wide plan cache, and ``backend="measure"`` autotuning.
+    Identical arguments return the SAME compiled plan object."""
+    shape = tuple(int(s) for s in shape)
+    decomp, axis_names = _infer(shape, decomp, axis_names, mesh)
+    wire = _wire_name(wire_dtype)
+
+    key = _plan_key(shape, direction, mesh, decomp, axis_names, backend,
+                    overlap_chunks, real, batch_ndim, wire,
+                    allow_reduced_wire if backend == MEASURE else None)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _STATS["hits"] += 1
+        return plan
+    _STATS["misses"] += 1
+
+    if backend == MEASURE:
+        tuned = _autotune(shape, direction, mesh, decomp, axis_names,
+                          real=real, batch_ndim=batch_ndim,
+                          allow_reduced_wire=allow_reduced_wire)
+        plan = plan_dft(shape, direction, mesh, decomp=decomp,
+                        axis_names=axis_names, real=real,
+                        batch_ndim=batch_ndim, **tuned)
+    else:
+        plan = FFTPlan(shape, direction, mesh, decomp, axis_names,
+                       backend, overlap_chunks, real, batch_ndim,
+                       wire).compile()
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def plan_rfft(shape, direction: str, mesh: Mesh, **kw) -> FFTPlan:
+    """Real-input plan (FFTW's ``plan_dft_r2c``/``c2r``): forward maps a
+    real field to its Hermitian half-spectrum, backward inverts it."""
+    return plan_dft(shape, direction, mesh, real=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FFTW_MEASURE-style autotuner
+# ---------------------------------------------------------------------------
+
+def _pow2(n: int) -> bool:
+    return n & (n - 1) == 0
+
+
+def _time_plan(plan: FFTPlan, args, iters: int = 3) -> float:
+    jax.block_until_ready(plan.execute(*args))            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = plan.execute(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _dummy_args(shape, direction, mesh, decomp, axis_names, real,
+                batch_ndim):
+    probe = FFTPlan(shape, direction, mesh, decomp, axis_names,
+                    real=real, batch_ndim=batch_ndim)
+    full = (2,) * batch_ndim + tuple(shape)
+    if real and direction == BACKWARD:
+        # half-spectrum input: last grid dim padded to Hp
+        pn = mesh.shape[axis_names[-1]]
+        full = full[:-1] + (rfft_mod.padded_half(shape[-1], pn),)
+    sh = probe.input_sharding()
+    zero = jax.device_put(jnp.zeros(full, jnp.float32), sh)
+    if real and direction == FORWARD:
+        return (zero,)
+    return (zero, zero)
+
+
+def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
+              batch_ndim, allow_reduced_wire) -> dict:
+    """Sweep backend × overlap_chunks × wire_dtype, return the fastest
+    knob setting. Results cache per (shape, mesh, decomp, direction,
+    real, batch) so only the first measure-plan pays the sweep."""
+    tkey = (shape, direction, _mesh_key(mesh), decomp, axis_names, real,
+            batch_ndim, allow_reduced_wire)
+    if tkey in _TUNE_CACHE:
+        return _TUNE_CACHE[tkey]
+
+    backends = ["fourstep", "jnp"]
+    if all(_pow2(s) for s in shape):
+        backends.append("stockham")
+    overlaps = [0]
+    if decomp == "slab" and not real and batch_ndim == 0:
+        overlaps += [2, 4]
+    wires = [None]
+    if allow_reduced_wire and decomp in ("slab", "pencil"):
+        wires.append("bfloat16")
+
+    args = _dummy_args(shape, direction, mesh, decomp, axis_names, real,
+                       batch_ndim)
+    best, best_t, best_plan = None, float("inf"), None
+    for be in backends:
+        for ov in overlaps:
+            for wr in wires:
+                cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
+                               be, ov, real, batch_ndim, wr)
+                try:
+                    t = _time_plan(cand.compile(), args)
+                except Exception:     # noqa: BLE001 — variant unsupported
+                    continue
+                if t < best_t:
+                    best, best_t, best_plan = \
+                        {"backend": be, "overlap_chunks": ov,
+                         "wire_dtype": wr}, t, cand
+    if best is None:
+        best = {"backend": "auto", "overlap_chunks": 0, "wire_dtype": None}
+    else:
+        # the winner is already compiled and warm — seed the plan cache
+        # so the follow-up plan_dft doesn't trace/compile it again
+        _PLAN_CACHE.setdefault(
+            _plan_key(shape, direction, mesh, decomp, axis_names,
+                      best["backend"], best["overlap_chunks"], real,
+                      batch_ndim, best["wire_dtype"]), best_plan)
+    _TUNE_CACHE[tkey] = best
+    return best

@@ -2,16 +2,28 @@
 
 The paper's data model is "real or complex-valued structured meshes"
 (§2.2) and its demonstration field is real; a complex transform wastes
-2× everywhere. These slab-decomposed r2c/c2r transforms keep only the
-non-negative k₁ half-spectrum (Hermitian symmetry):
+2× everywhere. These transforms keep only the non-negative half of the
+spectrum along the *last* grid dim (Hermitian symmetry):
 
   * local rfft along the unsharded dim (half-spectrum, ~N/2+1 bins)
-  * all_to_all on the half-width planes (≈2× less wire than c2c)
-  * full complex FFT along the other dim (each k₁ column is complex)
+  * all_to_all on the half-width planes (≈2× less wire than c2c —
+    collective bytes dominate distributed FFT cost at scale, so this
+    is the single biggest lever)
+  * full complex FFT along the remaining dim(s)
 
-The half-spectrum is zero-padded up to a multiple of the shard count for
-the tiled all_to_all and sliced back after. §Perf measures the wire/HBM
-reduction on the Fig-2 chain workload.
+Two decompositions, mirroring ``distributed.py``:
+
+  * ``rfft2_slab``/``irfft2_slab``   — 2-D slab, one mesh axis
+  * ``rfft3_pencil``/``irfft3_pencil`` — 3-D pencil, two mesh axes,
+    two all_to_all rotations on half-width planes
+
+All entry points accept arbitrary LEADING batch dims (a batch of
+fields transforms under one compiled plan — see ``plan.plan_rfft``)
+and an optional reduced-precision ``wire_dtype`` for the collectives.
+
+The half-spectrum is zero-padded up to a multiple of the shard count
+for the tiled all_to_all and sliced back on inversion. §Perf measures
+the wire/HBM reduction on the Fig-2 chain workload.
 """
 from __future__ import annotations
 
@@ -21,14 +33,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.fft.dft import Pair, fft_along
-
-def shard_map(body, *, mesh, in_specs, out_specs):
-    # check_vma=False: pallas_call inside shard_map can't declare vma on
-    # its out_shape ShapeDtypeStructs (jax 0.8 limitation) — the escape
-    # hatch the error message itself recommends.
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+from repro.core.fft.distributed import _a2a, _bspec
 
 
 def half_bins(n1: int) -> int:
@@ -40,58 +47,135 @@ def padded_half(n1: int, p: int) -> int:
     return h + (-h) % p
 
 
-def rfft2_slab(x, mesh: Mesh, axis_name: str = "data") -> Pair:
-    """Real (N0, N1) P(ax, None) → half-spectrum Y[k0, k1≤N1/2]
-    (re, im) of shape (N0, Hp) with P(None, ax); Hp = padded N1/2+1."""
+# ---------------------------------------------------------------------------
+# 2-D slab r2c / c2r
+# ---------------------------------------------------------------------------
+
+def rfft2_slab(x, mesh: Mesh, axis_name: str = "data", *,
+               backend: str = "auto", wire_dtype=None) -> Pair:
+    """Real (..., N0, N1) P(..., ax, None) → half-spectrum
+    Y[..., k0, k1≤N1/2] (re, im) of shape (..., N0, Hp) with
+    P(..., None, ax); Hp = N1/2+1 padded to a multiple of the shard
+    count. Leading dims are batch."""
     Pn = mesh.shape[axis_name]
-    n1 = x.shape[1]
+    n1 = x.shape[-1]
     hp = padded_half(n1, Pn)
+    nb = x.ndim - 2
 
     def body(xl):
-        z = jnp.fft.rfft(xl.astype(jnp.float32), axis=1)   # (n0l, N1/2+1)
+        z = jnp.fft.rfft(xl.astype(jnp.float32), axis=-1)  # (..., n0l, H)
         re = jnp.real(z).astype(jnp.float32)
         im = jnp.imag(z).astype(jnp.float32)
-        pad = [(0, 0), (0, hp - re.shape[1])]
+        pad = [(0, 0)] * (xl.ndim - 1) + [(0, hp - re.shape[-1])]
         re, im = jnp.pad(re, pad), jnp.pad(im, pad)
-        re = jax.lax.all_to_all(re, axis_name, 1, 0, tiled=True)
-        im = jax.lax.all_to_all(im, axis_name, 1, 0, tiled=True)
-        return fft_along(re, im, 0)                        # (N0, hp/P)
+        re = _a2a(re, axis_name, -1, -2, wire_dtype)
+        im = _a2a(im, axis_name, -1, -2, wire_dtype)
+        return fft_along(re, im, -2, backend=backend)      # (..., N0, hp/P)
 
-    return shard_map(body, mesh=mesh, in_specs=P(axis_name, None),
-                     out_specs=(P(None, axis_name), P(None, axis_name)))(x)
+    return shard_map(body, mesh=mesh, in_specs=_bspec(nb, axis_name, None),
+                     out_specs=(_bspec(nb, None, axis_name),
+                                _bspec(nb, None, axis_name)))(x)
 
 
-def irfft2_slab(re, im, n1: int, mesh: Mesh,
-                axis_name: str = "data"):
-    """Inverse of ``rfft2_slab``: half-spectrum P(None, ax) → real
-    (N0, N1) P(ax, None)."""
-    Pn = mesh.shape[axis_name]
+def irfft2_slab(re, im, n1: int, mesh: Mesh, axis_name: str = "data", *,
+                backend: str = "auto", wire_dtype=None):
+    """Inverse of ``rfft2_slab``: half-spectrum P(..., None, ax) → real
+    (..., N0, N1) P(..., ax, None)."""
     h = half_bins(n1)
+    nb = re.ndim - 2
 
     def body(rl, il):
-        rl, il = fft_along(rl, il, 0, inverse=True)
-        rl = jax.lax.all_to_all(rl, axis_name, 0, 1, tiled=True)
-        il = jax.lax.all_to_all(il, axis_name, 0, 1, tiled=True)
-        z = (rl + 1j * il)[:, :h]
-        return jnp.fft.irfft(z, n=n1, axis=1).astype(jnp.float32)
+        rl, il = fft_along(rl, il, -2, inverse=True, backend=backend)
+        rl = _a2a(rl, axis_name, -2, -1, wire_dtype)
+        il = _a2a(il, axis_name, -2, -1, wire_dtype)
+        z = (rl + 1j * il)[..., :h]
+        return jnp.fft.irfft(z, n=n1, axis=-1).astype(jnp.float32)
 
     return shard_map(body, mesh=mesh,
-                     in_specs=(P(None, axis_name), P(None, axis_name)),
-                     out_specs=P(axis_name, None))(re, im)
+                     in_specs=(_bspec(nb, None, axis_name),
+                               _bspec(nb, None, axis_name)),
+                     out_specs=_bspec(nb, axis_name, None))(re, im)
 
+
+# ---------------------------------------------------------------------------
+# 3-D pencil r2c / c2r (half-spectrum along z, two rotations)
+# ---------------------------------------------------------------------------
+
+def rfft3_pencil(x, mesh: Mesh, axes: Tuple[str, str] = ("data", "model"),
+                 *, backend: str = "auto", wire_dtype=None) -> Pair:
+    """Real (..., n0, n1, n2) P(..., a0, a1, None) (z-pencils) →
+    half-spectrum Y[..., k0, k1, k2≤N2/2] of global shape
+    (..., N0, N1, Hp) with P(..., None, a0, a1) (x-pencils);
+    Hp = N2/2+1 padded to a multiple of the a1 shard count.
+
+    Same two-rotation dataflow as ``pencil_fft_3d`` but every
+    all_to_all moves half-width planes — collective bytes drop ~2×."""
+    a0, a1 = axes
+    P1 = mesh.shape[a1]
+    n2 = x.shape[-1]
+    hp = padded_half(n2, P1)
+    nb = x.ndim - 3
+
+    def body(xl):
+        z = jnp.fft.rfft(xl.astype(jnp.float32), axis=-1)   # z (half)
+        re = jnp.real(z).astype(jnp.float32)
+        im = jnp.imag(z).astype(jnp.float32)
+        pad = [(0, 0)] * (xl.ndim - 1) + [(0, hp - re.shape[-1])]
+        re, im = jnp.pad(re, pad), jnp.pad(im, pad)
+        re = _a2a(re, a1, -1, -2, wire_dtype)
+        im = _a2a(im, a1, -1, -2, wire_dtype)
+        re, im = fft_along(re, im, -2, backend=backend)      # y
+        re = _a2a(re, a0, -2, -3, wire_dtype)
+        im = _a2a(im, a0, -2, -3, wire_dtype)
+        return fft_along(re, im, -3, backend=backend)        # x
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=_bspec(nb, a0, a1, None),
+                     out_specs=(_bspec(nb, None, a0, a1),
+                                _bspec(nb, None, a0, a1)))(x)
+
+
+def irfft3_pencil(re, im, n2: int, mesh: Mesh,
+                  axes: Tuple[str, str] = ("data", "model"), *,
+                  backend: str = "auto", wire_dtype=None):
+    """Inverse of ``rfft3_pencil``: P(..., None, a0, a1) → real
+    (..., N0, N1, N2) P(..., a0, a1, None)."""
+    a0, a1 = axes
+    h = half_bins(n2)
+    nb = re.ndim - 3
+
+    def body(rl, il):
+        rl, il = fft_along(rl, il, -3, inverse=True, backend=backend)  # x
+        rl = _a2a(rl, a0, -3, -2, wire_dtype)
+        il = _a2a(il, a0, -3, -2, wire_dtype)
+        rl, il = fft_along(rl, il, -2, inverse=True, backend=backend)  # y
+        rl = _a2a(rl, a1, -2, -1, wire_dtype)
+        il = _a2a(il, a1, -2, -1, wire_dtype)
+        z = (rl + 1j * il)[..., :h]
+        return jnp.fft.irfft(z, n=n2, axis=-1).astype(jnp.float32)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(_bspec(nb, None, a0, a1),
+                               _bspec(nb, None, a0, a1)),
+                     out_specs=_bspec(nb, a0, a1, None))(re, im)
+
+
+# ---------------------------------------------------------------------------
+# Spectral-domain helpers
+# ---------------------------------------------------------------------------
 
 def half_mask(full_mask) -> jnp.ndarray:
-    """Slice a full-spectrum 2-D mask to the (padded) half-spectrum."""
-    return full_mask[:, : half_bins(full_mask.shape[1])]
+    """Slice a full-spectrum mask to the half-spectrum (last dim)."""
+    return full_mask[..., : half_bins(full_mask.shape[-1])]
 
 
 def rfft_chain_2d(x, full_mask, mesh: Mesh, axis_name: str = "data"):
     """The paper's fwd → bandpass → inv chain on the half-spectrum."""
     Pn = mesh.shape[axis_name]
-    n1 = x.shape[1]
+    n1 = x.shape[-1]
     hp = padded_half(n1, Pn)
     hm = half_mask(full_mask).astype(jnp.float32)
-    hm = jnp.pad(hm, [(0, 0), (0, hp - hm.shape[1])])
+    hm = jnp.pad(hm, [(0, 0)] * (hm.ndim - 1) + [(0, hp - hm.shape[-1])])
     re, im = rfft2_slab(x, mesh, axis_name)
     re, im = re * hm, im * hm
     return irfft2_slab(re, im, n1, mesh, axis_name)

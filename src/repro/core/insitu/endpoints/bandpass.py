@@ -46,7 +46,19 @@ class BandpassEndpoint(Endpoint):
         re, im = data.get_pair(self.array)
         mask = self.mask
         if mask is None:
-            mask = filters.lowpass_mask(re.shape, self.keep_frac)
+            # prefer the grid dims: re may be a padded half-spectrum
+            # and/or carry leading batch dims, neither of which are
+            # frequency axes
+            shape = data.grid.dims if data.grid is not None else re.shape
+            mask = filters.lowpass_mask(shape, self.keep_frac)
+        if data.layout.endswith("half") and mask.shape[-1] != re.shape[-1]:
+            # r2c path: the spectrum keeps only k_last <= N/2 (padded for
+            # the tiled all_to_all) — slice the full-grid mask to match
+            from repro.core.fft import rfft
+            hm = rfft.half_mask(mask)
+            pad = [(0, 0)] * (hm.ndim - 1) + \
+                [(0, re.shape[-1] - hm.shape[-1])]
+            mask = jnp.pad(hm, pad)
         arrays = dict(data.arrays)
         if self.use_kernel and re.ndim == 2 and not _is_sharded(re):
             from repro.kernels import ops as kops

@@ -3,9 +3,24 @@
 Configured exactly like the paper's XML (mesh / array / direction), it
 marshals the bridge's named array into split-plane spectral form, runs
 the planned distributed transform (slab / pencil / four-step by grid
-rank, FFTW's plan-execute lifecycle via ``FFTPlan``), and republishes the
-result on the bridge for downstream consumers. Forward sets
-``domain="spectral"`` + the layout tag; backward restores spatial data.
+rank, FFTW's plan-execute lifecycle via the cached ``FFTPlan``), and
+republishes the result on the bridge for downstream consumers. Forward
+sets ``domain="spectral"`` + the layout tag; backward restores spatial
+data.
+
+Beyond the paper's complex endpoint:
+
+* ``real=True`` uses the r2c/c2r half-spectrum plans (``plan_rfft``) —
+  half the local FFT work and half the all_to_all wire bytes for the
+  real simulation fields the paper actually targets. Forward publishes
+  the half-spectrum pair and tags the layout ``*-half``.
+* ``backend="measure"`` autotunes the plan on first use (FFTW_MEASURE).
+* ``batch_ndim=k`` transforms arrays with ``k`` leading batch dims
+  (many fields per step) under one compiled plan.
+
+Plans come from the process-wide plan cache, so chains rebuilt every
+step (or many endpoints over the same grid) share one compiled
+executable.
 """
 from __future__ import annotations
 
@@ -13,9 +28,12 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core.fft.plan import BACKWARD, FORWARD, plan_dft
+from repro.core.fft.plan import BACKWARD, FORWARD, plan_dft, plan_rfft
 from repro.core.insitu.bridge import BridgeData
 from repro.core.insitu.endpoint import Endpoint
+
+_LAYOUT = {"slab": "transposed", "pencil": "rotated",
+           "fourstep1d": "fourstep"}
 
 
 class FFTEndpoint(Endpoint):
@@ -23,7 +41,9 @@ class FFTEndpoint(Endpoint):
 
     def __init__(self, *, array: str = "field", direction: str = "forward",
                  backend: str = "auto", decomp: Optional[str] = None,
-                 overlap_chunks: int = 0, local: bool = False):
+                 overlap_chunks: int = 0, local: bool = False,
+                 real: bool = False, batch_ndim: int = 0,
+                 wire_dtype: Optional[str] = None):
         super().__init__(array=array, direction=direction)
         self.array = array
         self.direction = FORWARD if direction == "forward" else BACKWARD
@@ -31,32 +51,69 @@ class FFTEndpoint(Endpoint):
         self.decomp = decomp
         self.overlap_chunks = overlap_chunks
         self.local = local              # single-device jnp path (tests)
+        self.real = real
+        self.batch_ndim = batch_ndim
+        self.wire_dtype = wire_dtype
         self.plan = None
+        self._grid_dims = None
 
     def initialize(self, mesh=None, grid=None):
+        if grid is not None:
+            self._grid_dims = tuple(grid.dims)
         if self.local or mesh is None:
             return
         assert grid is not None, "FFTEndpoint needs grid dims to plan"
-        self.plan = plan_dft(grid.dims, self.direction, mesh,
-                             decomp=self.decomp, backend=self.backend,
-                             overlap_chunks=self.overlap_chunks)
+        planner = plan_rfft if self.real else plan_dft
+        self.plan = planner(grid.dims, self.direction, mesh,
+                            decomp=self.decomp, backend=self.backend,
+                            overlap_chunks=self.overlap_chunks,
+                            batch_ndim=self.batch_ndim,
+                            wire_dtype=self.wire_dtype)
+
+    # -- execution -------------------------------------------------------------
+    def _run_local(self, re, im):
+        # transform only the trailing grid dims — leading batch dims are
+        # independent fields, exactly like the distributed plans
+        nd = re.ndim - self.batch_ndim
+        axes = tuple(range(-nd, 0))
+        if self.real and self.direction == FORWARD:
+            z = jnp.fft.rfftn(re, axes=axes)
+            return (jnp.real(z).astype(jnp.float32),
+                    jnp.imag(z).astype(jnp.float32)), "natural-half"
+        if self.real and self.direction == BACKWARD:
+            s = self._grid_dims
+            y = jnp.fft.irfftn(re + 1j * im, s=s, axes=axes)
+            return (y.astype(jnp.float32),
+                    jnp.zeros_like(y, jnp.float32)), "natural"
+        x = re + 1j * im
+        out = (jnp.fft.ifftn(x, axes=axes)
+               if self.direction == BACKWARD
+               else jnp.fft.fftn(x, axes=axes))
+        return (jnp.real(out).astype(jnp.float32),
+                jnp.imag(out).astype(jnp.float32)), "natural"
 
     def execute(self, data: BridgeData) -> BridgeData:
-        re, im = data.get_pair(self.array)
         if self.plan is None:
-            x = re + 1j * im
-            out = (jnp.fft.ifftn(x) if self.direction == BACKWARD
-                   else jnp.fft.fftn(x))
-            r, i = (jnp.real(out).astype(jnp.float32),
-                    jnp.imag(out).astype(jnp.float32))
+            re, im = data.get_pair(self.array)
+            (r, i), layout = self._run_local(re, im)
+        elif self.real and self.direction == FORWARD:
+            x = data.arrays[self.array]
+            if isinstance(x, tuple):
+                x = x[0]              # real field traveling as (x, 0)
+            r, i = self.plan.execute(x)
+            layout = _LAYOUT[self.plan.decomp] + "-half"
+        elif self.real:               # c2r backward: returns the field
+            re, im = data.get_pair(self.array)
+            r = self.plan.execute(re, im)
+            i = jnp.zeros_like(r)
             layout = "natural"
         else:
             # already-compiled distributed transform; zero-copy handoff
-            r, i = self.plan._fn(re, im) if self.plan._fn else \
-                self.plan.execute(re, im)
-            layout = {"slab": "transposed", "pencil": "rotated",
-                      "fourstep1d": "fourstep"}[self.plan.decomp] \
+            re, im = data.get_pair(self.array)
+            r, i = self.plan.execute(re, im)
+            layout = _LAYOUT[self.plan.decomp] \
                 if self.direction == FORWARD else "natural"
+
         arrays = dict(data.arrays)
         if self.direction == FORWARD:
             arrays[self.array] = (r, i)

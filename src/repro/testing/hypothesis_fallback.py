@@ -1,0 +1,120 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` API the suite uses.
+
+Six test modules import ``from hypothesis import given, settings,
+strategies as st``; on machines without hypothesis installed that is a
+collection error for the whole module — including its plain
+parametrized tests. ``tests/conftest.py`` registers this module under
+the name ``hypothesis`` when the real package is absent, so those
+modules collect and run everywhere. The real package always wins when
+installed (see requirements.txt).
+
+Scope is intentionally tiny: only the strategies the suite draws
+(``integers``, ``floats``, ``sampled_from``, ``booleans``, ``lists``)
+and decorator-style ``given``/``settings`` with keyword strategies.
+Sampling is a fixed-seed random walk — deterministic across runs, no
+shrinking, no database. It is a smoke-level replacement, not a property
+-testing engine.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Sequence
+
+__version__ = "0.0-repro-fallback"
+
+_DEFAULT_MAX_EXAMPLES = 10
+_SEED = 0x5EED
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self):
+        return self._draw(random.Random(_SEED))
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+
+class strategies:  # noqa: N801 — mimics the hypothesis.strategies module
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1
+                 ) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_ignored) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+        elements = list(elements)
+        return SearchStrategy(lambda rng: elements[rng.randrange(
+            len(elements))])
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def lists(elem: SearchStrategy, *, min_size: int = 0, max_size: int = 5
+              ) -> SearchStrategy:
+        return SearchStrategy(lambda rng: [
+            elem._draw(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording ``max_examples``; other knobs are ignored."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Run the test ``max_examples`` times with freshly drawn values.
+
+    Works with ``@settings`` applied either above or below (the
+    attribute travels through ``functools.wraps``'s ``__dict__`` copy).
+    Positional strategies are passed positionally, keyword strategies by
+    name — matching how the suite calls the real API.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(_SEED)
+            for i in range(n):
+                drawn_args = tuple(s._draw(rng) for s in arg_strategies)
+                drawn_kw = {k: s._draw(rng)
+                            for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn_args, **{**kwargs, **drawn_kw})
+                except Exception as e:  # noqa: BLE001 — re-raise with context
+                    raise AssertionError(
+                        f"fallback-hypothesis example {i + 1}/{n} failed "
+                        f"with args={drawn_args} kwargs={drawn_kw}: {e}"
+                    ) from e
+
+        # Hide the drawn parameters from pytest's fixture resolution
+        # (the real hypothesis does the same): only params NOT supplied
+        # by a strategy remain visible.
+        sig = inspect.signature(fn)
+        visible = [p for name, p in sig.parameters.items()
+                   if name not in kw_strategies]
+        visible = visible[:len(visible) - len(arg_strategies)] \
+            if arg_strategies else visible
+        wrapper.__signature__ = sig.replace(parameters=visible)
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+    return deco

@@ -70,18 +70,16 @@ ELASTIC = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.ckpt import checkpoint as ckpt
+    from repro.compat import make_mesh
 
     tmp = sys.argv[1]
-    mesh8 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh8 = make_mesh((8,), ("data",))
     x = jnp.arange(64.0).reshape(8, 8)
     xs = jax.device_put(x, NamedSharding(mesh8, P("data", None)))
     ckpt.save(tmp, 1, {"x": xs})
 
     # elastic restore: a "restarted job" with a 4-device mesh
-    mesh4 = jax.make_mesh((4,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,),
-                          devices=jax.devices()[:4])
+    mesh4 = make_mesh((4,), ("data",), devices=jax.devices()[:4])
     sh4 = {"x": NamedSharding(mesh4, P("data", None))}
     out = ckpt.restore(tmp, 1, {"x": jnp.zeros((8, 8))}, shardings=sh4)
     ok = bool(np.array_equal(np.asarray(out["x"]), np.asarray(x)))

@@ -20,12 +20,12 @@ SCRIPT = textwrap.dedent("""
     import json
     import numpy as np, jax
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.compat import make_mesh
     from repro.core.fft import dft, distributed as D
     from repro.core.fft.plan import plan_dft, FORWARD, BACKWARD
     from repro.core.fft.filters import lowpass_mask, apply_filter
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     rng = np.random.default_rng(0)
     out = {}
 

@@ -1,0 +1,224 @@
+"""Planner subsystem: plan-cache identity, measure-mode autotuning,
+batched-vs-looped equivalence, distributed rfft vs numpy, and index-map
+properties for the four-step layout helpers.
+
+Distributed checks run in a subprocess with 8 host devices (per the
+repo's isolation rule); cache and index-map properties run in-process.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+# ---------------------------------------------------------------------------
+# Plan cache (single-device mesh: cache keying only, no collectives)
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_and_miss_identity():
+    from repro.compat import make_mesh
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, BACKWARD, plan_dft, plan_rfft
+
+    planmod.plan_cache_clear()
+    mesh = make_mesh((1, 1), ("data", "model"))
+
+    p1 = plan_dft((64, 96), FORWARD, mesh)
+    p2 = plan_dft((64, 96), FORWARD, mesh)
+    assert p1 is p2, "identical plan args must return the cached plan"
+    assert p1._fn is p2._fn
+    stats = planmod.plan_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+
+    # every compile-relevant knob is a cache-key dimension
+    assert plan_dft((64, 96), BACKWARD, mesh) is not p1
+    assert plan_dft((64, 128), FORWARD, mesh) is not p1
+    assert plan_dft((64, 96), FORWARD, mesh, backend="jnp") is not p1
+    assert plan_dft((64, 96), FORWARD, mesh, batch_ndim=1) is not p1
+    assert plan_dft((64, 96), FORWARD, mesh,
+                    wire_dtype="bfloat16") is not p1
+    assert plan_rfft((64, 96), FORWARD, mesh) is not p1
+    # ...and the rfft plan is itself cached
+    assert plan_rfft((64, 96), FORWARD, mesh) is \
+        plan_rfft((64, 96), FORWARD, mesh)
+
+    planmod.plan_cache_clear()
+    assert planmod.plan_cache_stats() == {"hits": 0, "misses": 0,
+                                          "size": 0}
+
+
+def test_plan_sharding_contracts():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh
+    from repro.core.fft.plan import BACKWARD, FORWARD, plan_dft, plan_rfft
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert plan_dft((8, 8), FORWARD, mesh).input_sharding().spec == \
+        P("data", None)
+    assert plan_dft((8, 8), BACKWARD, mesh).input_sharding().spec == \
+        P(None, "data")
+    assert plan_dft((8, 8, 8), FORWARD, mesh).input_sharding().spec == \
+        P("data", "model", None)
+    # batched plans replicate the leading batch dims
+    assert plan_dft((8, 8), FORWARD, mesh,
+                    batch_ndim=2).input_sharding().spec == \
+        P(None, None, "data", None)
+    # forward's output contract is backward's input contract
+    f = plan_rfft((8, 8), FORWARD, mesh)
+    b = plan_rfft((8, 8), BACKWARD, mesh)
+    assert f.output_sharding().spec == b.input_sharding().spec
+
+
+# ---------------------------------------------------------------------------
+# Four-step layout helpers: index-map properties
+# ---------------------------------------------------------------------------
+
+_CASES = [(16, 2), (16, 4), (64, 2), (64, 4), (64, 8), (256, 4),
+          (1024, 4), (1024, 8)]
+
+
+@given(case=st.sampled_from(_CASES), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_cyclic_order_roundtrip(case, seed):
+    from repro.core.fft.distributed import cyclic_inverse_order, cyclic_order
+    n, p = case
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    fwd = cyclic_order(n, p)
+    inv = cyclic_inverse_order(n, p)
+    assert sorted(fwd) == list(range(n)), "cyclic_order is a permutation"
+    np.testing.assert_array_equal(x[fwd][inv], x)
+    np.testing.assert_array_equal(x[inv][fwd], x)
+
+
+@given(case=st.sampled_from(_CASES))
+@settings(max_examples=10, deadline=None)
+def test_fourstep_freq_map_is_permutation(case):
+    from repro.core.fft.distributed import fourstep_freq_of_position
+    n, p = case
+    freq = fourstep_freq_of_position(n, p)
+    assert sorted(freq) == list(range(n))
+
+
+@given(case=st.sampled_from([(64, 4), (256, 4), (1024, 4)]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_fourstep_maps_consistent_with_local_algorithm(case, seed):
+    """The cyclic + freq maps agree with a pure-numpy four-step FFT."""
+    from repro.core.fft.distributed import (cyclic_order,
+                                            fourstep_freq_of_position)
+    n, p = case
+    m = n // p
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+    # numpy four-step mirror of fourstep_fft_1d on the cyclic layout
+    rows = x[cyclic_order(n, p)].reshape(p, m)       # shard s = row s
+    rows = np.fft.fft(rows, axis=1)
+    tw = np.exp(-2j * np.pi * np.outer(np.arange(p), np.arange(m)) / n)
+    rows = rows * tw
+    blocks = rows.reshape(p, p, m // p)              # a2a: (P, P, M/P)
+    blocks = np.swapaxes(blocks, 0, 1)
+    y = np.fft.fft(blocks, axis=1)                   # length-P FFT
+    out = np.swapaxes(y, 1, 2).reshape(n)            # column-major flatten
+    ref = np.fft.fft(x)[fourstep_freq_of_position(n, p)]
+    np.testing.assert_allclose(out, ref, atol=1e-6 * np.abs(ref).max())
+
+
+# ---------------------------------------------------------------------------
+# Distributed: batched == looped, rfft vs numpy, measure mode
+# ---------------------------------------------------------------------------
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.compat import make_mesh
+    from repro.core.fft import dft, rfft, distributed as D
+    from repro.core.fft.plan import (FORWARD, BACKWARD, plan_dft,
+                                     plan_rfft, plan_cache_stats)
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    out = {}
+
+    def relerr(got, ref):
+        return float(np.max(np.abs(got - ref)) / np.max(np.abs(ref)))
+
+    # batched slab == per-field loop, under ONE batched plan
+    B, N0, N1 = 3, 64, 96
+    xb = (rng.standard_normal((B, N0, N1))
+          + 1j * rng.standard_normal((B, N0, N1)))
+    pb = plan_dft((N0, N1), FORWARD, mesh, batch_ndim=1)
+    p1 = plan_dft((N0, N1), FORWARD, mesh)
+    br, bi = pb.execute(*pb.place(xb))
+    got = np.asarray(br) + 1j * np.asarray(bi)
+    looped = np.stack([np.asarray(p1.execute(*p1.place(xb[b]))[0])
+                       + 1j * np.asarray(p1.execute(*p1.place(xb[b]))[1])
+                       for b in range(B)])
+    out["batched_vs_looped"] = float(np.max(np.abs(got - looped)))
+    out["batched_vs_numpy"] = relerr(got, np.fft.fft2(xb, axes=(-2, -1)))
+
+    # batched pencil r2c vs numpy + roundtrip
+    B3, G = 2, (32, 16, 24)
+    x3 = rng.standard_normal((B3,) + G).astype(np.float32)
+    pr = plan_rfft(G, FORWARD, mesh, decomp="pencil", batch_ndim=1)
+    hr, hi = pr.execute(*pr.place(x3))
+    h = rfft.half_bins(G[2])
+    got = np.asarray(hr)[..., :h] + 1j * np.asarray(hi)[..., :h]
+    out["rfft_pencil"] = relerr(got, np.fft.rfftn(x3, axes=(-3, -2, -1)))
+    pinv = plan_rfft(G, BACKWARD, mesh, decomp="pencil", batch_ndim=1)
+    back = pinv.execute(hr, hi)
+    out["rfft_pencil_rt"] = float(np.max(np.abs(np.asarray(back) - x3)))
+
+    # slab r2c vs numpy (unbatched plan API)
+    x2 = rng.standard_normal((N0, N1)).astype(np.float32)
+    ps = plan_rfft((N0, N1), FORWARD, mesh)
+    sr, si = ps.execute(*ps.place(x2))
+    h2 = rfft.half_bins(N1)
+    got = np.asarray(sr)[..., :h2] + 1j * np.asarray(si)[..., :h2]
+    out["rfft_slab"] = relerr(got, np.fft.rfft2(x2))
+    psi = plan_rfft((N0, N1), BACKWARD, mesh)
+    out["rfft_slab_rt"] = float(np.max(np.abs(
+        np.asarray(psi.execute(sr, si)) - x2)))
+
+    # measure-mode autotuned plan stays correct (exact wire)
+    pm = plan_dft((N0, N1), FORWARD, mesh, backend="measure",
+                  allow_reduced_wire=False)
+    mr, mi = pm.execute(*pm.place(xb[0]))
+    out["measure_ok"] = relerr(np.asarray(mr) + 1j * np.asarray(mi),
+                               np.fft.fft2(xb[0]))
+    out["measure_backend"] = pm.backend
+    pm2 = plan_dft((N0, N1), FORWARD, mesh, backend="measure",
+                   allow_reduced_wire=False)
+    out["measure_cached"] = pm is pm2
+    print(json.dumps(out))
+""")
+
+
+def test_planner_distributed():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["batched_vs_looped"] < 1e-4, out
+    assert out["batched_vs_numpy"] < 1e-4, out
+    assert out["rfft_pencil"] < 1e-3, out
+    assert out["rfft_pencil_rt"] < 1e-3, out
+    assert out["rfft_slab"] < 1e-3, out
+    assert out["rfft_slab_rt"] < 1e-3, out
+    assert out["measure_ok"] < 1e-4, out
+    assert out["measure_cached"] is True, out
+    assert out["measure_backend"] != "measure", out

@@ -69,8 +69,8 @@ def test_logits_vocab_fallback():
 
 
 def test_make_policy_batch_degradation():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     # batch divisible: keeps the axis
     pol = make_policy(mesh, global_batch=16)
     assert pol.batch_axes == ("data",)

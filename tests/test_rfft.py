@@ -15,11 +15,11 @@ SCRIPT = textwrap.dedent("""
     import json
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.compat import make_mesh
     from repro.core.fft import rfft
     from repro.core.fft.filters import lowpass_mask
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     rng = np.random.default_rng(0)
     out = {}
     N0, N1 = 64, 96
