@@ -8,6 +8,9 @@ performance study as future work. The harness therefore covers:
                          timings, fused in-situ vs staged in-transit:
                          the marshaling-overhead comparison of §5)
   fft_local_*          — local FFT backends across sizes (vs jnp.fft)
+  fft_schedule_*       — the five stage-schedules head-to-head on the
+                         same hardware (slab 2-D ± overlap, slab 3-D,
+                         pencil, transpose-free pencil, four-step 1-D)
   fft_slab_scaling_*   — distributed slab FFT over 1/2/4/8 host devices
                          (the paper's future-work scaling study)
   fft_overlap_*        — chunked-pipeline slab variant (beyond-paper)
@@ -17,10 +20,17 @@ performance study as future work. The harness therefore covers:
   bandpass_*           — fused Pallas filter+energy vs two-pass jnp
   train_step / decode_step — model-substrate microbenches (reduced cfg)
 
-Output: ``name,us_per_call,derived`` CSV on stdout.
+Output: ``name,us_per_call,derived`` CSV on stdout and
+``results/bench.csv``. Flags:
+
+  --only PREFIX   run only bench groups whose name contains PREFIX
+  --json          additionally emit ``BENCH_fft.json`` at the repo root
+                  (per-schedule wall-times; uploaded as a CI artifact
+                  so the perf trajectory is tracked per commit)
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -31,7 +41,8 @@ from pathlib import Path
 
 import numpy as np
 
-SRC = str(Path(__file__).resolve().parents[1] / "src")
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
 sys.path.insert(0, SRC)
 
 import jax  # noqa: E402
@@ -248,6 +259,88 @@ def bench_fft_rfft():
     row("fft_rfft_looped8_p8", out["rfft_looped8"], "baseline")
 
 
+def bench_fft_schedules():
+    """The stage-schedule engine's decomposition sweep on one host:
+    every schedule on comparable grids, so per-schedule wall-times are
+    tracked commit over commit (BENCH_fft.json)."""
+    script = textwrap.dedent("""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core.fft.plan import plan_dft, plan_rfft, FORWARD
+
+        def timeit(fn, *args, iters=10):
+            jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        out = {}
+        rng = np.random.default_rng(0)
+        mesh1 = make_mesh((8,), ("data",))
+        mesh2 = make_mesh((4, 2), ("data", "model"))
+
+        # 2-D slab: plain / overlap / bf16-wire / r2c, 1024^2, 8-way
+        N = 1024
+        x2 = rng.standard_normal((N, N)).astype(np.float32)
+        for tag, kw in (("slab2d", {}),
+                        ("slab2d_ov4", {"overlap_chunks": 4}),
+                        ("slab2d_bf16", {"wire_dtype": "bfloat16"})):
+            p = plan_dft((N, N), FORWARD, mesh1, **kw)
+            out[tag] = timeit(p.execute, *p.place(x2))
+        pr = plan_rfft((N, N), FORWARD, mesh1, overlap_chunks=4)
+        out["slab2d_r2c_ov4"] = timeit(pr.execute, *pr.place(x2))
+
+        # 3-D, 64^3: pencil (4x2) vs transpose-free pencil (4x2) vs
+        # slab3d (8-way, one exchange)
+        G = (64, 64, 64)
+        x3 = rng.standard_normal(G).astype(np.float32)
+        for tag, pl in (
+            ("pencil", plan_dft(G, FORWARD, mesh2, decomp="pencil")),
+            ("pencil_tf", plan_dft(G, FORWARD, mesh2,
+                                   decomp="pencil_tf")),
+            ("slab3d", plan_dft(G, FORWARD, mesh1, decomp="slab3d")),
+        ):
+            out[tag] = timeit(pl.execute, *pl.place(x3))
+
+        # 1-D four-step, 2^20, 8-way
+        v = rng.standard_normal(1 << 20).astype(np.float32)
+        p1 = plan_dft((1 << 20,), FORWARD, mesh1, decomp="fourstep1d")
+        out["fourstep1d"] = timeit(p1.execute, *p1.place(v))
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        # this group feeds the CI perf artifact — surface the failure
+        # loudly instead of uploading an empty trajectory point
+        print(res.stderr[-3000:], file=sys.stderr)
+        row("fft_schedule_sweep", -1, "ERROR")
+        return
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    base2, base3 = out["slab2d"], out["pencil"]
+    row("fft_schedule_slab2d_p8", out["slab2d"], "N=1024^2;baseline2d")
+    row("fft_schedule_slab2d_ov4_p8", out["slab2d_ov4"],
+        f"vs_slab2d={base2/out['slab2d_ov4']:.2f}x")
+    row("fft_schedule_slab2d_bf16_p8", out["slab2d_bf16"],
+        f"vs_slab2d={base2/out['slab2d_bf16']:.2f}x;half-wire")
+    row("fft_schedule_slab2d_r2c_ov4_p8", out["slab2d_r2c_ov4"],
+        f"vs_slab2d={base2/out['slab2d_r2c_ov4']:.2f}x;r2c+overlap")
+    row("fft_schedule_pencil_4x2", out["pencil"], "N=64^3;baseline3d")
+    row("fft_schedule_pencil_tf_4x2", out["pencil_tf"],
+        f"vs_pencil={base3/out['pencil_tf']:.2f}x;transpose-free")
+    row("fft_schedule_slab3d_p8", out["slab3d"],
+        f"vs_pencil={base3/out['slab3d']:.2f}x;one-exchange")
+    row("fft_schedule_fourstep1d_p8", out["fourstep1d"], "N=2^20")
+
+
 def bench_bandpass():
     from repro.core.fft.filters import lowpass_mask
     from repro.kernels import ops, ref
@@ -305,19 +398,64 @@ def bench_model_steps():
         f"tokens_per_s={B/(us/1e6):.0f}")
 
 
-def main() -> None:
+BENCHES = [
+    ("fft_local", bench_fft_local),
+    ("fig2_workflow", bench_workflow_fig2),
+    ("bandpass", bench_bandpass),
+    ("fft_schedule", bench_fft_schedules),
+    ("fft_rfft", bench_fft_rfft),
+    ("fft_slab_scaling", bench_fft_slab_scaling),
+    ("fft_kernel", bench_fft_kernels),
+    ("model_steps", bench_model_steps),
+]
+
+
+def write_outputs(emit_json: bool, partial: bool = False) -> None:
+    if not partial:
+        # a --only subset must not clobber a previous full-suite CSV
+        out = ROOT / "results" / "bench.csv"
+        out.parent.mkdir(exist_ok=True)
+        out.write_text("name,us_per_call,derived\n" + "\n".join(
+            f"{n},{u:.1f},{d}" for n, u, d in ROWS) + "\n")
+    if emit_json:
+        # BENCH_fft.json at the repo root: the FFT perf trajectory, one
+        # file per commit via the CI artifact upload
+        fft_rows = {n: {"us_per_call": round(u, 1), "derived": d}
+                    for n, u, d in ROWS if n.startswith("fft")}
+        payload = {"rows": fft_rows,
+                   "unit": "us_per_call",
+                   "source": "benchmarks/run.py"}
+        (ROOT / "BENCH_fft.json").write_text(
+            json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, metavar="PREFIX",
+                    help="run only bench groups whose name contains "
+                         "PREFIX (e.g. fft_schedule)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit BENCH_fft.json at the repo root")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
-    bench_fft_local()
-    bench_workflow_fig2()
-    bench_bandpass()
-    bench_fft_rfft()
-    bench_fft_slab_scaling()
-    bench_fft_kernels()
-    bench_model_steps()
-    out = Path(__file__).resolve().parents[1] / "results" / "bench.csv"
-    out.parent.mkdir(exist_ok=True)
-    out.write_text("name,us_per_call,derived\n" + "\n".join(
-        f"{n},{u:.1f},{d}" for n, u, d in ROWS) + "\n")
+    ran = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        fn()
+        ran += 1
+    if args.only and not ran:
+        print(f"--only {args.only!r} matched no bench group "
+              f"(known: {', '.join(n for n, _ in BENCHES)})",
+              file=sys.stderr)
+        sys.exit(2)
+    write_outputs(args.json, partial=bool(args.only))
+    if (args.only or args.json) and any(u < 0 for _, u, _ in ROWS):
+        # an explicitly requested group errored, or an ERROR row just
+        # went into the BENCH_fft.json perf artifact — fail the run
+        # rather than going green on no data
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,80 +1,55 @@
-"""Distributed multi-dimensional FFT: slab + pencil decompositions.
+"""Distributed multi-dimensional FFTs as thin schedule wrappers.
 
-This is the scalable core of the reproduction. The paper's prototype
-delegates to ``fftw_mpi`` (slab / 1-D decomposition, MPI alltoall
-transposes) and names pencil decomposition and M→N redistribution as
-future work (§5); here both are first-class:
+The paper's prototype delegates to ``fftw_mpi`` (slab / 1-D
+decomposition, MPI alltoall transposes) and names pencil decomposition
+and M→N redistribution as future work (§5). Here every decomposition
+is a ~20-line *schedule builder* (see ``schedule.py`` for the stage IR
+and the one generic executor); this module keeps the stable functional
+API plus the index-map helpers:
 
-* ``slab_fft_2d``    — FFTW-MPI's algorithm on one mesh axis: local FFT
-  along the unsharded dim, one ``all_to_all`` distribution transpose,
-  local FFT along the other dim. Forward maps sharding P(ax, None) →
-  P(None, ax) (FFTW_MPI_TRANSPOSED_OUT-style: no transpose back);
-  inverse maps P(None, ax) → P(ax, None), so forward → spectral ops →
-  inverse is exactly the paper's processing chain with zero extra
-  redistribution.
-* ``pencil_fft_3d``  — 2-D (pencil) decomposition over two mesh axes:
-  three local 1-D FFT passes separated by two all_to_all rotations;
-  P(a0, a1, None) → P(None, a0, a1). Scales to P_d·P_m chips for N³
-  grids (the paper's §5 scalability goal).
-* ``fourstep_fft_1d`` — distributed 1-D FFT of length N = P·M via
-  Bailey's four-step across the mesh (local FFT → twiddle → all_to_all
-  → local FFT); output in transposed digit order, inverted exactly by
-  ``fourstep_ifft_1d``.
-* ``slab_fft_2d_overlap`` — chunked pipelining: row-chunk i's local FFT
-  overlaps row-chunk i−1's all_to_all (the dependency slack XLA async
-  collectives need). Beyond-paper optimization, measured in §Perf.
+* ``slab_fft_2d``      — FFTW-MPI's algorithm on one mesh axis;
+  forward P(ax, None) → P(None, ax) (FFTW_MPI_TRANSPOSED_OUT-style).
+* ``slab_fft_3d``      — 3-D grids on ONE mesh axis: three local
+  passes, one all_to_all; P(ax, None, None) → P(None, ax, None).
+* ``pencil_fft_3d``    — 2-D (pencil) decomposition over two mesh
+  axes, two rotations; P(a0, a1, None) → P(None, a0, a1).
+* ``pencil_tf_fft_3d`` — transpose-free pencil (Chatterjee-Verma-style,
+  arXiv:1406.5597): the second rotation becomes a four-step exchange,
+  the x-sharding never moves; P(a0, a1, None) → P(a0, None, a1) with
+  axis 0 in the documented digit-permuted order (see below).
+* ``fourstep_fft_1d``  — Bailey's four-step across the mesh; cyclic
+  input layout, transposed-digit output order.
+* ``slab_fft_2d_overlap`` — the slab with executor-level chunked
+  overlap (communication/compute pipelining). Overlap is an executor
+  knob available to every eligible schedule — including batched and
+  real transforms — via ``plan_dft(..., overlap_chunks=C)``.
 
 All functions take/return split (re, im) float32 pairs (TPU-native; no
-complex dtype in Pallas) and build on ``shard_map``.
+complex dtype in Pallas), transform the TRAILING grid dims (leading
+dims are batch), and build on ``shard_map`` via ``execute_schedule``.
+
+Layout maps (pure-numpy, used by tests, masks, and consumers of the
+1-D four-step and transpose-free pencil outputs):
+
+* ``cyclic_order`` / ``cyclic_inverse_order`` — natural ↔ cyclic input
+  layouts.
+* ``fourstep_freq_of_position`` — output position → DFT bin for the
+  four-step digit order (also the axis-0 map of the transpose-free
+  pencil output).
+* ``fourstep_position_of_freq`` — its exact inverse (DFT bin → output
+  position), for scattering spectral-domain masks into the permuted
+  layout.
 """
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.compat import shard_map
-from repro.core.fft.dft import Pair, cmul, fft_along, local_fft
-
-
-def _a2a(x, axis_name, split, concat, wire_dtype=None):
-    """all_to_all with optional reduced-precision transport (§Perf:
-    casting the spectral planes to bf16 for the wire halves the
-    distributed FFT's dominant collective bytes; compute stays f32).
-
-    ``split``/``concat`` may be negative (counted from the trailing
-    transform dims) so bodies stay valid under leading batch dims."""
-    split = split % x.ndim
-    concat = concat % x.ndim
-    if wire_dtype is not None and x.dtype != wire_dtype:
-        orig = x.dtype
-        y = jax.lax.all_to_all(x.astype(wire_dtype), axis_name,
-                               split_axis=split, concat_axis=concat,
-                               tiled=True)
-        return y.astype(orig)
-    return jax.lax.all_to_all(x, axis_name, split_axis=split,
-                              concat_axis=concat, tiled=True)
-
-
-def _batch_ndim(x, rank: int) -> int:
-    """Leading batch dims of ``x`` given the transform rank.
-
-    Every decomposition here transforms the TRAILING ``rank`` dims;
-    anything in front is a batch of independent fields sharing one
-    compiled plan (the in-situ chain transforms many fields per step
-    this way)."""
-    nb = x.ndim - rank
-    if nb < 0:
-        raise ValueError(f"rank-{x.ndim} input for a rank-{rank} transform")
-    return nb
-
-
-def _bspec(nb: int, *tail) -> P:
-    """PartitionSpec with ``nb`` replicated leading (batch) dims."""
-    return P(*((None,) * nb), *tail)
+from repro.core.fft import schedule as S
+from repro.core.fft.dft import Pair
+from repro.core.fft.schedule import execute_schedule
 
 
 # ---------------------------------------------------------------------------
@@ -89,94 +64,37 @@ def slab_fft_2d(re, im, mesh: Mesh, axis_name: str = "data", *,
     forward:  input P(..., ax, None)  → output P(..., None, ax)
     inverse:  input P(..., None, ax)  → output P(..., ax, None)
     """
-    nb = _batch_ndim(re, 2)
-    if inverse:
-        in_spec, out_spec = _bspec(nb, None, axis_name), \
-            _bspec(nb, axis_name, None)
-
-        def body(r, i):
-            r, i = fft_along(r, i, -2, inverse=True, backend=backend)
-            r = _a2a(r, axis_name, -2, -1, wire_dtype)
-            i = _a2a(i, axis_name, -2, -1, wire_dtype)
-            return fft_along(r, i, -1, inverse=True, backend=backend)
-    else:
-        in_spec, out_spec = _bspec(nb, axis_name, None), \
-            _bspec(nb, None, axis_name)
-
-        def body(r, i):
-            r, i = fft_along(r, i, -1, inverse=False, backend=backend)
-            r = _a2a(r, axis_name, -1, -2, wire_dtype)
-            i = _a2a(i, axis_name, -1, -2, wire_dtype)
-            return fft_along(r, i, -2, inverse=False, backend=backend)
-
-    return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
-                     out_specs=(out_spec, out_spec))(re, im)
+    sched = S.slab_2d(mesh, axis_name, inverse=inverse, backend=backend,
+                      wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
 
 
 def slab_fft_2d_overlap(re, im, mesh: Mesh, axis_name: str = "data", *,
                         inverse: bool = False, backend: str = "auto",
                         chunks: int = 4, wire_dtype=None) -> Pair:
-    """Same contract as ``slab_fft_2d``; the first FFT+all_to_all stage is
-    split into row chunks so communication pipelines with compute."""
-    if re.ndim != 2:
-        raise ValueError("slab_fft_2d_overlap is rank-2 only; use "
-                         "slab_fft_2d for batched transforms")
-    if inverse:
-        in_spec, out_spec = P(None, axis_name), P(axis_name, None)
+    """Same contract as ``slab_fft_2d`` with executor-level chunked
+    overlap: chunk i's local FFT overlaps chunk i−1's all_to_all (the
+    dependency slack XLA async collectives need). Batched inputs are
+    fine — overlap is generic in the executor."""
+    sched = S.slab_2d(mesh, axis_name, inverse=inverse, backend=backend,
+                      wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im, overlap_chunks=chunks)
 
-        Pn = mesh.shape[axis_name]
 
-        def body(r, i):
-            # exact mirror of the forward body
-            r, i = fft_along(r, i, 0, inverse=True, backend=backend)
-            n0, n1l = r.shape                 # n0 = N0 (rows complete)
-            c = n0 // (Pn * chunks)           # forward's per-chunk rows
-            assert c * Pn * chunks == n0
-            # interleave rows (shard, chunk, row) -> (chunk, shard, row):
-            # each chunk's a2a then returns contiguous local rows
-            r = r.reshape(Pn, chunks, c, n1l).swapaxes(0, 1) \
-                 .reshape(n0, n1l)
-            i = i.reshape(Pn, chunks, c, n1l).swapaxes(0, 1) \
-                 .reshape(n0, n1l)
-            cp = Pn * c                       # rows per chunk block
-            parts = []
-            for j in range(chunks):
-                rj = jax.lax.dynamic_slice_in_dim(r, j * cp, cp, axis=0)
-                ij = jax.lax.dynamic_slice_in_dim(i, j * cp, cp, axis=0)
-                rj = _a2a(rj, axis_name, 0, 1, wire_dtype)
-                ij = _a2a(ij, axis_name, 0, 1, wire_dtype)
-                rj, ij = fft_along(rj, ij, 1, inverse=True, backend=backend)
-                parts.append((rj, ij))
-            return (jnp.concatenate([p[0] for p in parts], axis=0),
-                    jnp.concatenate([p[1] for p in parts], axis=0))
-    else:
-        in_spec, out_spec = P(axis_name, None), P(None, axis_name)
+# ---------------------------------------------------------------------------
+# 3-D slab (one mesh axis — no pencil mesh required)
+# ---------------------------------------------------------------------------
 
-        def body(r, i):
-            n0l, N1 = r.shape
-            assert n0l % chunks == 0
-            c = n0l // chunks
-            parts = []
-            for j in range(chunks):
-                rj = jax.lax.dynamic_slice_in_dim(r, j * c, c, axis=0)
-                ij = jax.lax.dynamic_slice_in_dim(i, j * c, c, axis=0)
-                rj, ij = fft_along(rj, ij, 1, inverse=False, backend=backend)
-                rj = _a2a(rj, axis_name, 1, 0, wire_dtype)
-                ij = _a2a(ij, axis_name, 1, 0, wire_dtype)
-                parts.append((rj, ij))
-            r = jnp.concatenate([p[0] for p in parts], axis=0)
-            i = jnp.concatenate([p[1] for p in parts], axis=0)
-            # un-interleave rows: concat order is (chunk, shard, row) but
-            # global row order is (shard, chunk, row)
-            n1l = r.shape[1]
-            r = r.reshape(chunks, -1, c, n1l).swapaxes(0, 1) \
-                 .reshape(-1, n1l)
-            i = i.reshape(chunks, -1, c, n1l).swapaxes(0, 1) \
-                 .reshape(-1, n1l)
-            return fft_along(r, i, 0, inverse=False, backend=backend)
+def slab_fft_3d(re, im, mesh: Mesh, axis_name: str = "data", *,
+                inverse: bool = False, backend: str = "auto",
+                wire_dtype=None) -> Pair:
+    """3-D FFT on a 1-axis mesh: three local passes, ONE all_to_all.
 
-    return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
-                     out_specs=(out_spec, out_spec))(re, im)
+    forward:  input P(..., ax, None, None) → output P(..., None, ax, None)
+    inverse:  the mirror map."""
+    sched = S.slab_3d(mesh, axis_name, inverse=inverse, backend=backend,
+                      wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
 
 
 # ---------------------------------------------------------------------------
@@ -189,22 +107,9 @@ def pencil_fft_3d(re, im, mesh: Mesh,
     """3-D FFT: input x[..., n0, n1, n2] P(..., a0, a1, None)
     (z-pencils) → output Y[..., k0, k1, k2] P(..., None, a0, a1)
     (x-pencils). Leading dims = batch."""
-    a0, a1 = axes
-    nb = _batch_ndim(re, 3)
-    in_spec, out_spec = _bspec(nb, a0, a1, None), _bspec(nb, None, a0, a1)
-
-    def body(r, i):
-        r, i = fft_along(r, i, -1, inverse=False, backend=backend)  # z
-        r = _a2a(r, a1, -1, -2, wire_dtype)
-        i = _a2a(i, a1, -1, -2, wire_dtype)
-        r, i = fft_along(r, i, -2, inverse=False, backend=backend)  # y
-        r = _a2a(r, a0, -2, -3, wire_dtype)
-        i = _a2a(i, a0, -2, -3, wire_dtype)
-        r, i = fft_along(r, i, -3, inverse=False, backend=backend)  # x
-        return r, i
-
-    return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
-                     out_specs=(out_spec, out_spec))(re, im)
+    sched = S.pencil_3d(mesh, tuple(axes), backend=backend,
+                        wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
 
 
 def pencil_ifft_3d(re, im, mesh: Mesh,
@@ -212,22 +117,40 @@ def pencil_ifft_3d(re, im, mesh: Mesh,
                    backend: str = "auto", wire_dtype=None) -> Pair:
     """Inverse of ``pencil_fft_3d``: P(..., None, a0, a1) →
     P(..., a0, a1, None)."""
-    a0, a1 = axes
-    nb = _batch_ndim(re, 3)
-    in_spec, out_spec = _bspec(nb, None, a0, a1), _bspec(nb, a0, a1, None)
+    sched = S.pencil_3d(mesh, tuple(axes), inverse=True, backend=backend,
+                        wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
 
-    def body(r, i):
-        r, i = fft_along(r, i, -3, inverse=True, backend=backend)   # x
-        r = _a2a(r, a0, -3, -2, wire_dtype)
-        i = _a2a(i, a0, -3, -2, wire_dtype)
-        r, i = fft_along(r, i, -2, inverse=True, backend=backend)   # y
-        r = _a2a(r, a1, -2, -1, wire_dtype)
-        i = _a2a(i, a1, -2, -1, wire_dtype)
-        r, i = fft_along(r, i, -1, inverse=True, backend=backend)   # z
-        return r, i
 
-    return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
-                     out_specs=(out_spec, out_spec))(re, im)
+# ---------------------------------------------------------------------------
+# Transpose-free pencil (Chatterjee-Verma-style second exchange)
+# ---------------------------------------------------------------------------
+
+def pencil_tf_fft_3d(re, im, mesh: Mesh,
+                     axes: Tuple[str, str] = ("data", "model"), *,
+                     backend: str = "auto", wire_dtype=None) -> Pair:
+    """Transpose-free 3-D pencil FFT: P(..., a0, a1, None) →
+    P(..., a0, None, a1).
+
+    Input axis 0 must be in CYCLIC order over ``a0`` (global element
+    g = m·P0 + p on shard p — apply ``cyclic_order(n0, P0)`` to a
+    natural field). Output position g' along axis 0 holds DFT bin
+    ``fourstep_freq_of_position(n0, P0)[g']``; axes 1, 2 are natural.
+    Requires P0 | (n0/P0). The first grid axis stays sharded on a0
+    throughout — no second distribution transpose."""
+    sched = S.pencil_tf_3d(mesh, tuple(axes), backend=backend,
+                           wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
+
+
+def pencil_tf_ifft_3d(re, im, mesh: Mesh,
+                      axes: Tuple[str, str] = ("data", "model"), *,
+                      backend: str = "auto", wire_dtype=None) -> Pair:
+    """Exact inverse of ``pencil_tf_fft_3d`` (back to the cyclic
+    spatial layout)."""
+    sched = S.pencil_tf_3d(mesh, tuple(axes), inverse=True,
+                           backend=backend, wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
 
 
 # ---------------------------------------------------------------------------
@@ -243,66 +166,24 @@ def fourstep_fft_1d(re, im, mesh: Mesh, axis_name: str = "data", *,
     jit-visible array is the cyclic reordering x[(g % P)·M + g // P]).
     Output position p₀·M + j·P + q holds X[c + q·M] with c = p₀·M/P + j
     ("transposed digit order"). ``fourstep_ifft_1d`` is the exact
-    inverse on this layout; ``filters.fourstep_freq_of_position`` maps
+    inverse on this layout; ``fourstep_freq_of_position`` maps
     positions → true frequency indices for spectral-domain ops, and
     ``cyclic_order``/``cyclic_inverse_order`` convert natural ↔ cyclic.
     """
-    Pn = mesh.shape[axis_name]
-    nb = _batch_ndim(re, 1)
-    spec = _bspec(nb, axis_name)
-
-    def body(r, i):
-        M = r.shape[-1]
-        N = M * Pn
-        lead = r.shape[:-1]
-        # x viewed globally as rows p of length M: this shard = row p.
-        # 1) length-M FFT per row
-        r, i = local_fft(r, i, inverse=False, backend=backend)
-        # 2) twiddle exp(-2πi p k / N)
-        p = jax.lax.axis_index(axis_name).astype(jnp.float32)
-        k = jnp.arange(M, dtype=jnp.float32)
-        ang = -2.0 * math.pi * p * k / N
-        r, i = cmul(r, i, jnp.cos(ang), jnp.sin(ang))
-        # 3) global transpose
-        r = _a2a(r[..., None, :], axis_name, -1, -2)    # (..., P, M/P)
-        i = _a2a(i[..., None, :], axis_name, -1, -2)
-        # 4) length-P FFT across rows
-        r, i = fft_along(r, i, -2, inverse=False, backend=backend)
-        # local (..., P, M/P): flatten column-major so it inverts cleanly
-        return (jnp.swapaxes(r, -1, -2).reshape(*lead, M),
-                jnp.swapaxes(i, -1, -2).reshape(*lead, M))
-
-    return shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                     out_specs=(spec, spec))(re, im)
+    sched = S.fourstep_1d(mesh, axis_name, backend=backend)
+    return execute_schedule(sched, mesh, re, im)
 
 
 def fourstep_ifft_1d(re, im, mesh: Mesh, axis_name: str = "data", *,
                      backend: str = "auto") -> Pair:
     """Exact inverse of ``fourstep_fft_1d``."""
-    Pn = mesh.shape[axis_name]
-    nb = _batch_ndim(re, 1)
-    spec = _bspec(nb, axis_name)
+    sched = S.fourstep_1d(mesh, axis_name, inverse=True, backend=backend)
+    return execute_schedule(sched, mesh, re, im)
 
-    def body(r, i):
-        Mp = r.shape[-1] // Pn
-        lead = r.shape[:-1]
-        # undo step 4's column-major flatten, then invert the P-FFT
-        r = jnp.swapaxes(r.reshape(*lead, Mp, Pn), -1, -2)   # (..., P, M/P)
-        i = jnp.swapaxes(i.reshape(*lead, Mp, Pn), -1, -2)
-        r, i = fft_along(r, i, -2, inverse=True, backend=backend)
-        r = _a2a(r, axis_name, -2, -1).reshape(*lead, -1)    # (..., M)
-        i = _a2a(i, axis_name, -2, -1).reshape(*lead, -1)
-        M = r.shape[-1]
-        N = M * Pn
-        p = jax.lax.axis_index(axis_name).astype(jnp.float32)
-        k = jnp.arange(M, dtype=jnp.float32)
-        ang = 2.0 * math.pi * p * k / N
-        r, i = cmul(r, i, jnp.cos(ang), jnp.sin(ang))
-        return local_fft(r, i, inverse=True, backend=backend)
 
-    return shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                     out_specs=(spec, spec))(re, im)
-
+# ---------------------------------------------------------------------------
+# Layout index maps (pure numpy)
+# ---------------------------------------------------------------------------
 
 def cyclic_order(n: int, p: int):
     """Index map natural → cyclic: x_cyclic = x[cyclic_order(N, P)].
@@ -321,13 +202,24 @@ def cyclic_inverse_order(n: int, p: int):
 
 
 def fourstep_freq_of_position(n: int, p: int):
-    """freq[g'] = the DFT bin stored at global output position g'."""
+    """freq[g'] = the DFT bin stored at global output position g' (for
+    ``fourstep_fft_1d`` and axis 0 of ``pencil_tf_fft_3d``)."""
     import numpy as np
     m = n // p
     g = np.arange(n)
     p0, rem = g // m, g % m
     j, q = rem // p, rem % p
     return p0 * (m // p) + j + q * m
+
+
+def fourstep_position_of_freq(n: int, p: int):
+    """pos[k] = the output position holding DFT bin k — the exact
+    inverse permutation of ``fourstep_freq_of_position`` (scatters a
+    natural-order spectral mask into the permuted layout)."""
+    import numpy as np
+    pos = np.empty(n, dtype=int)
+    pos[fourstep_freq_of_position(n, p)] = np.arange(n)
+    return pos
 
 
 # ---------------------------------------------------------------------------

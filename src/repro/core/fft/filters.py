@@ -71,8 +71,26 @@ def mask_transposed_2d(n0: int, n1: int, build=lowpass_mask, **kw):
     return build((n0, n1), **kw)
 
 
+def permute_mask_first_axis(mask, p: int) -> jnp.ndarray:
+    """Gather a natural-order spectral mask into the four-step digit
+    order along its FIRST axis (the layout of ``fourstep_fft_1d``
+    output and of axis 0 of the transpose-free pencil output): position
+    g' keeps what the natural mask says about bin
+    ``fourstep_freq_of_position[g']``. The single shared implementation
+    for mask builders and the bandpass endpoint."""
+    from repro.core.fft.distributed import fourstep_freq_of_position
+    base = np.asarray(mask)
+    return jnp.asarray(base[fourstep_freq_of_position(base.shape[0], p)])
+
+
 def mask_fourstep_1d(n: int, p: int, build=lowpass_mask, **kw):
     """Mask permuted into the four-step transposed digit order."""
-    from repro.core.fft.distributed import fourstep_freq_of_position
-    base = np.asarray(build((n,), **kw))
-    return jnp.asarray(base[fourstep_freq_of_position(n, p)])
+    return permute_mask_first_axis(build((n,), **kw), p)
+
+
+def mask_pencil_tf_3d(shape: Sequence[int], p0: int, build=lowpass_mask,
+                      **kw):
+    """Mask for the transpose-free pencil output layout: axis 0 is in
+    four-step digit order over the ``p0``-way mesh axis (axes 1, 2 are
+    natural)."""
+    return permute_mask_first_axis(build(tuple(shape), **kw), p0)

@@ -3,8 +3,9 @@
 The paper's endpoint wraps FFTW's ``allocate - plan - execute - destroy``
 paradigm (Listing 3). The JAX analogue: *planning is compilation*. An
 ``FFTPlan`` captures (global shape, mesh, decomposition, direction,
-backend, real/complex, batch rank, wire dtype), lowers + compiles the
-distributed transform once, and ``execute`` runs it on device arrays.
+backend, real/complex, batch rank, wire dtype), builds the matching
+``Schedule`` (see ``schedule.py``), compiles the generic executor over
+it once, and ``execute`` runs it on device arrays.
 
 Three FFTW behaviors are reproduced on top of that:
 
@@ -13,49 +14,67 @@ Three FFTW behaviors are reproduced on top of that:
   process-wide cache keyed by every compile-relevant field (including
   the mesh's axis extents and device ids), so in-situ chains that
   re-create endpoints every step still reuse one compiled plan.
-  ``plan_cache_stats()`` exposes hit/miss counters;
+  ``plan_cache_stats()`` exposes hit/miss/skip counters;
   ``plan_cache_clear()`` empties it (e.g. after ``jax.clear_caches``).
 
 * **FFTW_ESTIMATE** — ``backend="auto"`` picks a reasonable algorithm
   from the dispatch heuristics in ``dft.local_fft`` without measuring.
 
-* **FFTW_MEASURE** — ``backend="measure"`` sweeps the variant space on
-  first use and pins the fastest:
+* **FFTW_MEASURE** — ``backend="measure"`` sweeps the *schedule
+  variant space* on first use and pins the fastest: every combination
+  of local-FFT backend × overlap chunking × wire dtype the requested
+  decomposition's schedule supports (``schedule.CAPS``), for batched
+  and real plans too:
 
       backend        ∈ {fourstep, stockham (pow-2 grids), jnp}
-      overlap_chunks ∈ {0, 2, 4}   (slab, unbatched complex only)
+      overlap_chunks ∈ {0, 2, 4}   (any overlap-capable schedule)
       wire_dtype     ∈ {None, bfloat16}
 
   Each candidate is compiled and timed on a zero input of the right
   sharded shape; the winner's knobs are cached per (shape, mesh,
   decomp, direction, real, batch) so later ``measure`` plans skip the
-  sweep. Note ``wire_dtype="bfloat16"`` trades ~3 decimal digits of
-  accuracy for half the collective bytes; pass
-  ``allow_reduced_wire=False`` to keep the sweep exact.
+  sweep. Candidates that fail to build (e.g. a chunk count that does
+  not divide the local extent, or a schedule with no overlap site) are
+  RECORDED, not silently dropped: ``autotune_skips()`` returns the
+  skipped variants with their errors and ``plan_cache_stats()`` counts
+  them, so a mis-tuned plan is debuggable. Note
+  ``wire_dtype="bfloat16"`` trades ~3 decimal digits of accuracy for
+  half the collective bytes; pass ``allow_reduced_wire=False`` to keep
+  the sweep exact.
+
+Decompositions (``decomp=``): ``slab`` (2-D, 1 mesh axis), ``slab3d``
+(3-D, 1 mesh axis), ``pencil`` (3-D, 2 mesh axes), ``pencil_tf``
+(transpose-free pencil — output in the documented digit-permuted
+x-layout), ``fourstep1d`` (1-D). ``_infer`` picks by grid rank, and
+for 3-D grids picks ``pencil`` on ≥2-axis meshes and ``slab3d`` on
+1-axis meshes.
 
 Real-input plans (``plan_rfft``, or ``real=True``) use the Hermitian
-half-spectrum paths in ``rfft.py``: forward ``execute(x)`` maps a real
-field to a half-spectrum (re, im) pair, backward ``execute(re, im)``
-maps it back to a real field. Half the local FFT work, half the
+half-spectrum schedules in ``rfft.py``: forward ``execute(x)`` maps a
+real field to a half-spectrum (re, im) pair, backward ``execute(re,
+im)`` maps it back to a real field. Half the local FFT work, half the
 all_to_all wire bytes.
 
 Batched plans (``batch_ndim=k``) transform arrays with ``k`` extra
 leading dims — a whole stack of fields per step under ONE compiled
-plan, the in-situ chain's steady-state shape.
+plan, the in-situ chain's steady-state shape. Overlap chunking
+composes with both (it is an executor property, not a per-schedule
+special case).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.fft import distributed as dist
 from repro.core.fft import rfft as rfft_mod
-from repro.core.fft.dft import Pair, to_complex, to_pair
+from repro.core.fft.dft import to_complex, to_pair
+from repro.core.fft.schedule import (CAPS, Schedule, build_schedule,
+                                     execute_schedule, overlap_site)
 
 FORWARD = "forward"
 BACKWARD = "backward"
@@ -68,6 +87,7 @@ MEASURE = "measure"                   # backend sentinel: autotune
 
 _PLAN_CACHE: Dict[tuple, "FFTPlan"] = {}
 _TUNE_CACHE: Dict[tuple, dict] = {}
+_TUNE_SKIPS: List[dict] = []
 _STATS = {"hits": 0, "misses": 0}
 
 
@@ -76,14 +96,13 @@ def _mesh_key(mesh: Mesh) -> tuple:
             tuple(d.id for d in mesh.devices.flat))
 
 
-def _wire_name(wire_dtype) -> Optional[str]:
+def _wire_name(wire_dtype):
     if wire_dtype is None:
         return None
+    if isinstance(wire_dtype, tuple):
+        return tuple(None if w is None else jnp.dtype(w).name
+                     for w in wire_dtype)
     return jnp.dtype(wire_dtype).name
-
-
-def _wire_dtype(name: Optional[str]):
-    return None if name is None else jnp.dtype(name)
 
 
 def _plan_key(shape, direction, mesh, decomp, axis_names, backend,
@@ -94,12 +113,20 @@ def _plan_key(shape, direction, mesh, decomp, axis_names, backend,
 
 
 def plan_cache_stats() -> Dict[str, int]:
-    return dict(_STATS, size=len(_PLAN_CACHE))
+    return dict(_STATS, size=len(_PLAN_CACHE),
+                autotune_skipped=len(_TUNE_SKIPS))
+
+
+def autotune_skips() -> List[dict]:
+    """Variants the FFTW_MEASURE sweep could not build/run, with the
+    error that excluded each — the anti-silent-mis-tuning record."""
+    return list(_TUNE_SKIPS)
 
 
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
     _TUNE_CACHE.clear()
+    _TUNE_SKIPS.clear()
     _STATS["hits"] = _STATS["misses"] = 0
 
 
@@ -112,76 +139,35 @@ class FFTPlan:
     shape: Tuple[int, ...]            # transform (grid) shape, no batch dims
     direction: str
     mesh: Mesh
-    decomp: str                       # "slab" | "pencil" | "fourstep1d"
+    decomp: str                       # key into schedule.CAPS
     axis_names: Tuple[str, ...]
     backend: str = "auto"
-    overlap_chunks: int = 0           # >0: pipelined slab variant
+    overlap_chunks: int = 0           # >1: chunked overlap pipelining
     real: bool = False                # r2c (fwd) / c2r (bwd) half-spectrum
     batch_ndim: int = 0               # extra leading batch dims at execute
-    wire_dtype: Optional[str] = None  # e.g. "bfloat16": reduced a2a wire
+    wire_dtype: Optional[object] = None  # name or per-stage name tuple
     _fn: Optional[Callable] = None
+    _sched: Optional[Schedule] = None
 
     # -- plan ---------------------------------------------------------------
-    def compile(self) -> "FFTPlan":
-        inverse = self.direction == BACKWARD
-        mesh, backend = self.mesh, self.backend
-        wire = _wire_dtype(self.wire_dtype)
+    def schedule(self) -> Schedule:
+        """The stage schedule this plan runs (built lazily, no jit)."""
+        if self._sched is None:
+            self._sched = build_schedule(
+                self.decomp, self.shape, self.mesh, self.axis_names,
+                inverse=self.direction == BACKWARD, backend=self.backend,
+                wire_dtype=self.wire_dtype, real=self.real)
+        return self._sched
 
-        if self.real:
-            if self.overlap_chunks:
-                raise ValueError(
-                    "overlap_chunks is not supported on real plans")
-            if self.decomp == "slab":
-                ax = self.axis_names[0]
-                if inverse:
-                    n1 = self.shape[-1]
-                    fn = lambda r, i: rfft_mod.irfft2_slab(
-                        r, i, n1, mesh, ax, backend=backend, wire_dtype=wire)
-                else:
-                    fn = lambda x: rfft_mod.rfft2_slab(
-                        x, mesh, ax, backend=backend, wire_dtype=wire)
-            elif self.decomp == "pencil":
-                axes = self.axis_names
-                if inverse:
-                    n2 = self.shape[-1]
-                    fn = lambda r, i: rfft_mod.irfft3_pencil(
-                        r, i, n2, mesh, axes, backend=backend,
-                        wire_dtype=wire)
-                else:
-                    fn = lambda x: rfft_mod.rfft3_pencil(
-                        x, mesh, axes, backend=backend, wire_dtype=wire)
-            else:
-                raise ValueError(
-                    f"real plans support slab/pencil, not {self.decomp!r}")
-        elif self.decomp == "slab":
-            ax = self.axis_names[0]
-            if self.overlap_chunks:
-                fn = lambda r, i: dist.slab_fft_2d_overlap(
-                    r, i, mesh, ax, inverse=inverse, backend=backend,
-                    chunks=self.overlap_chunks, wire_dtype=wire)
-            else:
-                fn = lambda r, i: dist.slab_fft_2d(
-                    r, i, mesh, ax, inverse=inverse, backend=backend,
-                    wire_dtype=wire)
-        elif self.decomp == "pencil":
-            if inverse:
-                fn = lambda r, i: dist.pencil_ifft_3d(
-                    r, i, mesh, self.axis_names, backend=backend,
-                    wire_dtype=wire)
-            else:
-                fn = lambda r, i: dist.pencil_fft_3d(
-                    r, i, mesh, self.axis_names, backend=backend,
-                    wire_dtype=wire)
-        elif self.decomp == "fourstep1d":
-            ax = self.axis_names[0]
-            if inverse:
-                fn = lambda r, i: dist.fourstep_ifft_1d(r, i, mesh, ax,
-                                                        backend=backend)
-            else:
-                fn = lambda r, i: dist.fourstep_fft_1d(r, i, mesh, ax,
-                                                       backend=backend)
-        else:
-            raise ValueError(self.decomp)
+    def compile(self) -> "FFTPlan":
+        sched = self.schedule()
+        if self.overlap_chunks and self.overlap_chunks > 1:
+            overlap_site(sched)       # raise a clear error at plan time
+        mesh, chunks = self.mesh, self.overlap_chunks
+
+        def fn(*arrays):
+            return execute_schedule(sched, mesh, *arrays,
+                                    overlap_chunks=chunks)
 
         self._fn = jax.jit(fn)
         return self
@@ -191,24 +177,12 @@ class FFTPlan:
         return P(*((None,) * self.batch_ndim), *tail)
 
     def input_sharding(self) -> NamedSharding:
-        inverse = self.direction == BACKWARD
-        if self.decomp == "slab":
-            ax = self.axis_names[0]
-            spec = self._spec(None, ax) if inverse else self._spec(ax, None)
-        elif self.decomp == "pencil":
-            a0, a1 = self.axis_names
-            spec = self._spec(None, a0, a1) if inverse \
-                else self._spec(a0, a1, None)
-        else:
-            spec = self._spec(self.axis_names[0])
-        return NamedSharding(self.mesh, spec)
+        return NamedSharding(self.mesh, self._spec(*self.schedule().in_spec))
 
     def output_sharding(self) -> NamedSharding:
         """Where ``execute`` leaves the data (the next stage's input)."""
-        mirror = dataclasses.replace(
-            self, direction=BACKWARD if self.direction == FORWARD
-            else FORWARD)
-        return mirror.input_sharding()
+        return NamedSharding(self.mesh,
+                             self._spec(*self.schedule().out_spec))
 
     def place(self, x):
         """Device-put onto the plan's input sharding. Real forward plans
@@ -242,10 +216,19 @@ class FFTPlan:
 
 def _infer(shape, decomp, axis_names, mesh):
     if decomp is None:
-        decomp = {1: "fourstep1d", 2: "slab", 3: "pencil"}[len(shape)]
+        if len(shape) == 1:
+            decomp = "fourstep1d"
+        elif len(shape) == 2:
+            decomp = "slab"
+        else:
+            # pencil wants two mesh axes; a 1-axis mesh still gets 3-D
+            # grids via the one-exchange slab3d schedule
+            decomp = "pencil" if len(mesh.axis_names) >= 2 else "slab3d"
     if axis_names is None:
         names = tuple(mesh.axis_names)
-        axis_names = names[:2] if decomp == "pencil" else names[:1]
+        caps = CAPS.get(decomp)
+        take = caps.mesh_axes if caps is not None else 1
+        axis_names = names[:take]
     return decomp, tuple(axis_names)
 
 
@@ -293,7 +276,7 @@ def plan_rfft(shape, direction: str, mesh: Mesh, **kw) -> FFTPlan:
 
 
 # ---------------------------------------------------------------------------
-# FFTW_MEASURE-style autotuner
+# FFTW_MEASURE-style autotuner — sweeps schedule variants
 # ---------------------------------------------------------------------------
 
 def _pow2(n: int) -> bool:
@@ -325,42 +308,54 @@ def _dummy_args(shape, direction, mesh, decomp, axis_names, real,
     return (zero, zero)
 
 
+def _schedule_variants(shape, decomp, *, allow_reduced_wire) -> List[dict]:
+    """The sweep space: every (backend, overlap_chunks, wire_dtype) the
+    decomposition's schedules might support, straight from
+    ``schedule.CAPS``. Ineligible combinations are discovered by
+    *trying* them — failures are recorded in ``autotune_skips()``
+    rather than pre-filtered, so the record shows what was ruled out
+    and why."""
+    caps = CAPS[decomp]
+    backends = ["fourstep", "jnp"]
+    if all(_pow2(s) for s in shape):
+        backends.append("stockham")
+    overlaps = [0, 2, 4] if caps.overlap else [0]
+    wires = [None]
+    if allow_reduced_wire and caps.wire:
+        wires.append("bfloat16")
+    return [{"backend": be, "overlap_chunks": ov, "wire_dtype": wr}
+            for be in backends for ov in overlaps for wr in wires]
+
+
 def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
               batch_ndim, allow_reduced_wire) -> dict:
-    """Sweep backend × overlap_chunks × wire_dtype, return the fastest
-    knob setting. Results cache per (shape, mesh, decomp, direction,
-    real, batch) so only the first measure-plan pays the sweep."""
+    """Sweep the schedule variant space, return the fastest knob
+    setting. Results cache per (shape, mesh, decomp, direction, real,
+    batch) so only the first measure-plan pays the sweep; skipped
+    variants land in ``autotune_skips()``."""
     tkey = (shape, direction, _mesh_key(mesh), decomp, axis_names, real,
             batch_ndim, allow_reduced_wire)
     if tkey in _TUNE_CACHE:
         return _TUNE_CACHE[tkey]
 
-    backends = ["fourstep", "jnp"]
-    if all(_pow2(s) for s in shape):
-        backends.append("stockham")
-    overlaps = [0]
-    if decomp == "slab" and not real and batch_ndim == 0:
-        overlaps += [2, 4]
-    wires = [None]
-    if allow_reduced_wire and decomp in ("slab", "pencil"):
-        wires.append("bfloat16")
-
     args = _dummy_args(shape, direction, mesh, decomp, axis_names, real,
                        batch_ndim)
     best, best_t, best_plan = None, float("inf"), None
-    for be in backends:
-        for ov in overlaps:
-            for wr in wires:
-                cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
-                               be, ov, real, batch_ndim, wr)
-                try:
-                    t = _time_plan(cand.compile(), args)
-                except Exception:     # noqa: BLE001 — variant unsupported
-                    continue
-                if t < best_t:
-                    best, best_t, best_plan = \
-                        {"backend": be, "overlap_chunks": ov,
-                         "wire_dtype": wr}, t, cand
+    for variant in _schedule_variants(shape, decomp,
+                                      allow_reduced_wire=allow_reduced_wire):
+        cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
+                       variant["backend"], variant["overlap_chunks"],
+                       real, batch_ndim, variant["wire_dtype"])
+        try:
+            t = _time_plan(cand.compile(), args)
+        except Exception as err:  # noqa: BLE001 — variant unsupported
+            _TUNE_SKIPS.append({
+                "shape": shape, "direction": direction, "decomp": decomp,
+                "real": real, "batch_ndim": batch_ndim, **variant,
+                "error": f"{type(err).__name__}: {err}"})
+            continue
+        if t < best_t:
+            best, best_t, best_plan = dict(variant), t, cand
     if best is None:
         best = {"backend": "auto", "overlap_chunks": 0, "wire_dtype": None}
     else:

@@ -11,31 +11,34 @@ spectrum along the *last* grid dim (Hermitian symmetry):
     is the single biggest lever)
   * full complex FFT along the remaining dim(s)
 
-Two decompositions, mirroring ``distributed.py``:
+The real paths are ordinary *schedules* (see ``schedule.py``): the r2c
+direction is ``LocalRFFT`` (real field → padded half-spectrum pair)
+followed by the same exchange/FFT stages as the complex decomposition;
+c2r mirrors it and ends in ``LocalIRFFT``. Because they run through
+the one generic executor they inherit everything the complex schedules
+have — batching, reduced-precision wire, and chunked overlap
+pipelining (``plan_rfft(..., overlap_chunks=C)``).
 
-  * ``rfft2_slab``/``irfft2_slab``   — 2-D slab, one mesh axis
+Two decompositions, mirroring ``schedule.py``'s complex builders:
+
+  * ``rfft2_slab``/``irfft2_slab``     — 2-D slab, one mesh axis
   * ``rfft3_pencil``/``irfft3_pencil`` — 3-D pencil, two mesh axes,
     two all_to_all rotations on half-width planes
 
-All entry points accept arbitrary LEADING batch dims (a batch of
-fields transforms under one compiled plan — see ``plan.plan_rfft``)
-and an optional reduced-precision ``wire_dtype`` for the collectives.
-
 The half-spectrum is zero-padded up to a multiple of the shard count
-for the tiled all_to_all and sliced back on inversion. §Perf measures
-the wire/HBM reduction on the Fig-2 chain workload.
+for the tiled all_to_all and sliced back on inversion.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
-from repro.core.fft.dft import Pair, fft_along
-from repro.core.fft.distributed import _a2a, _bspec
+from repro.core.fft.dft import Pair
+from repro.core.fft.schedule import (AllToAll, LocalFFT, LocalIRFFT,
+                                     LocalRFFT, Schedule, WireSpec,
+                                     _wire_tuple, execute_schedule)
 
 
 def half_bins(n1: int) -> int:
@@ -48,7 +51,66 @@ def padded_half(n1: int, p: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# 2-D slab r2c / c2r
+# Schedule builders (registered with schedule.build_schedule via
+# plan.py's ``real=True`` dispatch)
+# ---------------------------------------------------------------------------
+
+def rfft_slab_schedule(n1: int, mesh: Mesh, axis_name: str = "data", *,
+                       inverse: bool = False, backend: str = "auto",
+                       wire_dtype: WireSpec = None) -> Schedule:
+    """2-D slab r2c/c2r as a schedule. ``n1`` is the full (real) extent
+    of the last grid dim; forward maps real P(ax, None) → half-spectrum
+    pair (..., N0, Hp) P(None, ax) with Hp = N1/2+1 padded to a
+    multiple of the shard count."""
+    pn = mesh.shape[axis_name]
+    (w,) = _wire_tuple(wire_dtype, 1)
+    hp = padded_half(n1, pn)
+    if inverse:
+        stages = (LocalFFT(-2, True, backend),
+                  AllToAll(axis_name, -2, -1, pn, w),
+                  LocalIRFFT(n1, half_bins(n1)))
+        return Schedule("rfft_slab_inv", 2, stages,
+                        (None, axis_name), (axis_name, None),
+                        in_arity=2, out_arity=1)
+    stages = (LocalRFFT(hp),
+              AllToAll(axis_name, -1, -2, pn, w),
+              LocalFFT(-2, False, backend))
+    return Schedule("rfft_slab", 2, stages,
+                    (axis_name, None), (None, axis_name),
+                    in_arity=1, out_arity=2)
+
+
+def rfft_pencil_schedule(n2: int, mesh: Mesh,
+                         axes: Tuple[str, str] = ("data", "model"), *,
+                         inverse: bool = False, backend: str = "auto",
+                         wire_dtype: WireSpec = None) -> Schedule:
+    """3-D pencil r2c/c2r as a schedule: same two-rotation dataflow as
+    the complex pencil but every all_to_all moves half-width planes."""
+    a0, a1 = axes
+    p0, p1 = mesh.shape[a0], mesh.shape[a1]
+    wa, wb = _wire_tuple(wire_dtype, 2)
+    hp = padded_half(n2, p1)
+    if inverse:
+        stages = (LocalFFT(-3, True, backend),
+                  AllToAll(a0, -3, -2, p0, wa),
+                  LocalFFT(-2, True, backend),
+                  AllToAll(a1, -2, -1, p1, wb),
+                  LocalIRFFT(n2, half_bins(n2)))
+        return Schedule("rfft_pencil_inv", 3, stages,
+                        (None, a0, a1), (a0, a1, None),
+                        in_arity=2, out_arity=1)
+    stages = (LocalRFFT(hp),
+              AllToAll(a1, -1, -2, p1, wa),
+              LocalFFT(-2, False, backend),
+              AllToAll(a0, -2, -3, p0, wb),
+              LocalFFT(-3, False, backend))
+    return Schedule("rfft_pencil", 3, stages,
+                    (a0, a1, None), (None, a0, a1),
+                    in_arity=1, out_arity=2)
+
+
+# ---------------------------------------------------------------------------
+# Functional API (thin executor wrappers, signatures stable)
 # ---------------------------------------------------------------------------
 
 def rfft2_slab(x, mesh: Mesh, axis_name: str = "data", *,
@@ -57,82 +119,29 @@ def rfft2_slab(x, mesh: Mesh, axis_name: str = "data", *,
     Y[..., k0, k1≤N1/2] (re, im) of shape (..., N0, Hp) with
     P(..., None, ax); Hp = N1/2+1 padded to a multiple of the shard
     count. Leading dims are batch."""
-    Pn = mesh.shape[axis_name]
-    n1 = x.shape[-1]
-    hp = padded_half(n1, Pn)
-    nb = x.ndim - 2
-
-    def body(xl):
-        z = jnp.fft.rfft(xl.astype(jnp.float32), axis=-1)  # (..., n0l, H)
-        re = jnp.real(z).astype(jnp.float32)
-        im = jnp.imag(z).astype(jnp.float32)
-        pad = [(0, 0)] * (xl.ndim - 1) + [(0, hp - re.shape[-1])]
-        re, im = jnp.pad(re, pad), jnp.pad(im, pad)
-        re = _a2a(re, axis_name, -1, -2, wire_dtype)
-        im = _a2a(im, axis_name, -1, -2, wire_dtype)
-        return fft_along(re, im, -2, backend=backend)      # (..., N0, hp/P)
-
-    return shard_map(body, mesh=mesh, in_specs=_bspec(nb, axis_name, None),
-                     out_specs=(_bspec(nb, None, axis_name),
-                                _bspec(nb, None, axis_name)))(x)
+    sched = rfft_slab_schedule(x.shape[-1], mesh, axis_name,
+                               backend=backend, wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, x)
 
 
 def irfft2_slab(re, im, n1: int, mesh: Mesh, axis_name: str = "data", *,
                 backend: str = "auto", wire_dtype=None):
     """Inverse of ``rfft2_slab``: half-spectrum P(..., None, ax) → real
     (..., N0, N1) P(..., ax, None)."""
-    h = half_bins(n1)
-    nb = re.ndim - 2
+    sched = rfft_slab_schedule(n1, mesh, axis_name, inverse=True,
+                               backend=backend, wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
 
-    def body(rl, il):
-        rl, il = fft_along(rl, il, -2, inverse=True, backend=backend)
-        rl = _a2a(rl, axis_name, -2, -1, wire_dtype)
-        il = _a2a(il, axis_name, -2, -1, wire_dtype)
-        z = (rl + 1j * il)[..., :h]
-        return jnp.fft.irfft(z, n=n1, axis=-1).astype(jnp.float32)
-
-    return shard_map(body, mesh=mesh,
-                     in_specs=(_bspec(nb, None, axis_name),
-                               _bspec(nb, None, axis_name)),
-                     out_specs=_bspec(nb, axis_name, None))(re, im)
-
-
-# ---------------------------------------------------------------------------
-# 3-D pencil r2c / c2r (half-spectrum along z, two rotations)
-# ---------------------------------------------------------------------------
 
 def rfft3_pencil(x, mesh: Mesh, axes: Tuple[str, str] = ("data", "model"),
                  *, backend: str = "auto", wire_dtype=None) -> Pair:
     """Real (..., n0, n1, n2) P(..., a0, a1, None) (z-pencils) →
     half-spectrum Y[..., k0, k1, k2≤N2/2] of global shape
     (..., N0, N1, Hp) with P(..., None, a0, a1) (x-pencils);
-    Hp = N2/2+1 padded to a multiple of the a1 shard count.
-
-    Same two-rotation dataflow as ``pencil_fft_3d`` but every
-    all_to_all moves half-width planes — collective bytes drop ~2×."""
-    a0, a1 = axes
-    P1 = mesh.shape[a1]
-    n2 = x.shape[-1]
-    hp = padded_half(n2, P1)
-    nb = x.ndim - 3
-
-    def body(xl):
-        z = jnp.fft.rfft(xl.astype(jnp.float32), axis=-1)   # z (half)
-        re = jnp.real(z).astype(jnp.float32)
-        im = jnp.imag(z).astype(jnp.float32)
-        pad = [(0, 0)] * (xl.ndim - 1) + [(0, hp - re.shape[-1])]
-        re, im = jnp.pad(re, pad), jnp.pad(im, pad)
-        re = _a2a(re, a1, -1, -2, wire_dtype)
-        im = _a2a(im, a1, -1, -2, wire_dtype)
-        re, im = fft_along(re, im, -2, backend=backend)      # y
-        re = _a2a(re, a0, -2, -3, wire_dtype)
-        im = _a2a(im, a0, -2, -3, wire_dtype)
-        return fft_along(re, im, -3, backend=backend)        # x
-
-    return shard_map(body, mesh=mesh,
-                     in_specs=_bspec(nb, a0, a1, None),
-                     out_specs=(_bspec(nb, None, a0, a1),
-                                _bspec(nb, None, a0, a1)))(x)
+    Hp = N2/2+1 padded to a multiple of the a1 shard count."""
+    sched = rfft_pencil_schedule(x.shape[-1], mesh, tuple(axes),
+                                 backend=backend, wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, x)
 
 
 def irfft3_pencil(re, im, n2: int, mesh: Mesh,
@@ -140,24 +149,9 @@ def irfft3_pencil(re, im, n2: int, mesh: Mesh,
                   backend: str = "auto", wire_dtype=None):
     """Inverse of ``rfft3_pencil``: P(..., None, a0, a1) → real
     (..., N0, N1, N2) P(..., a0, a1, None)."""
-    a0, a1 = axes
-    h = half_bins(n2)
-    nb = re.ndim - 3
-
-    def body(rl, il):
-        rl, il = fft_along(rl, il, -3, inverse=True, backend=backend)  # x
-        rl = _a2a(rl, a0, -3, -2, wire_dtype)
-        il = _a2a(il, a0, -3, -2, wire_dtype)
-        rl, il = fft_along(rl, il, -2, inverse=True, backend=backend)  # y
-        rl = _a2a(rl, a1, -2, -1, wire_dtype)
-        il = _a2a(il, a1, -2, -1, wire_dtype)
-        z = (rl + 1j * il)[..., :h]
-        return jnp.fft.irfft(z, n=n2, axis=-1).astype(jnp.float32)
-
-    return shard_map(body, mesh=mesh,
-                     in_specs=(_bspec(nb, None, a0, a1),
-                               _bspec(nb, None, a0, a1)),
-                     out_specs=_bspec(nb, a0, a1, None))(re, im)
+    sched = rfft_pencil_schedule(n2, mesh, tuple(axes), inverse=True,
+                                 backend=backend, wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,9 @@ class BridgeData:
     step: int = 0
     time: float = 0.0
     domain: str = "spatial"                 # spatial | spectral
-    layout: str = "natural"                 # natural | transposed | fourstep
+    layout: str = "natural"        # spatial: natural | cyclic; spectral:
+                                   # transposed | rotated | fourstep |
+                                   # rotated-fourstep (each "+-half" for r2c)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "BridgeData":

@@ -32,11 +32,17 @@ class InSituChain:
         self.mesh = mesh
         self.mode = mode
         self._compiled = None
+        self._staged_fns: Dict[int, Any] = {}   # endpoint idx -> jitted
         self._reshard_bytes = 0
         self._timings: Dict[str, float] = {}
 
     # -- lifecycle -------------------------------------------------------------
     def initialize(self, grid=None):
+        # endpoint state (plans, masks) is baked into traced programs as
+        # constants — drop every compiled callable so re-initialization
+        # can't silently run against stale endpoint state
+        self._compiled = None
+        self._staged_fns.clear()
         for ep in self.endpoints:
             ep.initialize(self.mesh, grid)
         return self
@@ -82,9 +88,19 @@ class InSituChain:
             self._timings[ep.name] = time.perf_counter() - t0
         return out
 
+    def _staged_fn(self, idx: int, ep: Endpoint):
+        """Per-endpoint jitted execute, built once per chain — NOT per
+        ``execute()`` call. ``jax.jit(ep.execute)`` returns a fresh
+        wrapper each time, so rebuilding it every step forced a
+        re-trace/compile on every chain execution."""
+        fn = self._staged_fns.get(idx)
+        if fn is None:
+            fn = self._staged_fns[idx] = jax.jit(ep.execute)
+        return fn
+
     def _execute_staged(self, data: BridgeData) -> BridgeData:
         out = data
-        for ep in self.endpoints:
+        for idx, ep in enumerate(self.endpoints):
             want = ep.in_sharding(self.mesh)
             if want is not None and not ep.host:
                 out = out.replace(arrays={
@@ -94,7 +110,7 @@ class InSituChain:
             if ep.host:
                 out = ep.execute(out)
             else:
-                out = jax.jit(ep.execute)(out)
+                out = self._staged_fn(idx, ep)(out)
                 jax.block_until_ready(jax.tree.leaves(out.arrays))
             self._timings[ep.name] = (self._timings.get(ep.name, 0.0)
                                       + time.perf_counter() - t0)

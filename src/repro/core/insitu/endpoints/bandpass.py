@@ -28,8 +28,12 @@ class BandpassEndpoint(Endpoint):
         self.kind = kind
         self.use_kernel = use_kernel
         self.mask = None
+        self._mesh = None
+        self._permuted_cache = {}
 
     def initialize(self, mesh=None, grid=None):
+        self._mesh = mesh
+        self._permuted_cache.clear()    # mesh/grid may have changed
         if grid is None:
             return
         shape = grid.dims
@@ -41,6 +45,25 @@ class BandpassEndpoint(Endpoint):
             self.mask = filters.bandpass_mask(shape, self.low_frac,
                                               self.keep_frac)
 
+    def _permute_for_layout(self, mask, layout: str):
+        """Digit-permuted layouts ("fourstep" 1-D, "rotated-fourstep"
+        pencil_tf) hold bin ``fourstep_freq_of_position[g']`` at
+        position g' along the first grid axis — gather the natural mask
+        through that map so the RIGHT frequencies are kept."""
+        key = (layout, tuple(mask.shape))
+        cached = self._permuted_cache.get(key)
+        if cached is not None:
+            return cached
+        if self._mesh is None:
+            raise ValueError(
+                f"bandpass on layout={layout!r} needs the mesh (shard "
+                f"count of the permuted axis) — initialize(mesh, grid) "
+                f"it, or pre-permute the mask")
+        p0 = self._mesh.shape[self._mesh.axis_names[0]]
+        out = filters.permute_mask_first_axis(mask, p0)
+        self._permuted_cache[key] = out
+        return out
+
     def execute(self, data: BridgeData) -> BridgeData:
         assert data.domain == "spectral", "bandpass needs spectral input"
         re, im = data.get_pair(self.array)
@@ -51,6 +74,8 @@ class BandpassEndpoint(Endpoint):
             # frequency axes
             shape = data.grid.dims if data.grid is not None else re.shape
             mask = filters.lowpass_mask(shape, self.keep_frac)
+        if data.layout in ("fourstep", "rotated-fourstep"):
+            mask = self._permute_for_layout(mask, data.layout)
         if data.layout.endswith("half") and mask.shape[-1] != re.shape[-1]:
             # r2c path: the spectrum keeps only k_last <= N/2 (padded for
             # the tiled all_to_all) — slice the full-grid mask to match

@@ -2,10 +2,12 @@
 
 Configured exactly like the paper's XML (mesh / array / direction), it
 marshals the bridge's named array into split-plane spectral form, runs
-the planned distributed transform (slab / pencil / four-step by grid
-rank, FFTW's plan-execute lifecycle via the cached ``FFTPlan``), and
-republishes the result on the bridge for downstream consumers. Forward
-sets ``domain="spectral"`` + the layout tag; backward restores spatial
+the planned distributed transform (any ``schedule.CAPS`` decomposition
+— slab / slab3d / pencil / pencil_tf / fourstep1d, inferred by grid
+rank and mesh when ``decomp`` is omitted; FFTW's plan-execute
+lifecycle via the cached ``FFTPlan``), and republishes the result on
+the bridge for downstream consumers. Forward sets
+``domain="spectral"`` + the layout tag; backward restores spatial
 data.
 
 Beyond the paper's complex endpoint:
@@ -32,8 +34,15 @@ from repro.core.fft.plan import BACKWARD, FORWARD, plan_dft, plan_rfft
 from repro.core.insitu.bridge import BridgeData
 from repro.core.insitu.endpoint import Endpoint
 
-_LAYOUT = {"slab": "transposed", "pencil": "rotated",
+_LAYOUT = {"slab": "transposed", "slab3d": "transposed",
+           "pencil": "rotated", "pencil_tf": "rotated-fourstep",
            "fourstep1d": "fourstep"}
+
+# decompositions whose SPATIAL side is the cyclic layout (global element
+# g = m·P + p on shard p along the first sharded grid axis) — their
+# forward input must be cyclic-ordered, and their backward output IS
+# cyclic, not natural
+_CYCLIC_DECOMPS = ("pencil_tf", "fourstep1d")
 
 
 class FFTEndpoint(Endpoint):
@@ -93,6 +102,15 @@ class FFTEndpoint(Endpoint):
                 jnp.imag(out).astype(jnp.float32)), "natural"
 
     def execute(self, data: BridgeData) -> BridgeData:
+        if (self.plan is not None and self.direction == FORWARD
+                and self.plan.decomp in _CYCLIC_DECOMPS
+                and data.layout != "cyclic"):
+            raise ValueError(
+                f"decomp={self.plan.decomp!r} transforms the CYCLIC "
+                f"spatial layout (got layout={data.layout!r}): reorder "
+                f"the field with distributed.cyclic_order along the "
+                f"first sharded grid axis and publish it with "
+                f"BridgeData.layout='cyclic'")
         if self.plan is None:
             re, im = data.get_pair(self.array)
             (r, i), layout = self._run_local(re, im)
@@ -121,5 +139,8 @@ class FFTEndpoint(Endpoint):
                                 layout=layout)
         arrays[self.array] = r        # real field (imag ~ 0 for real input)
         arrays[self.array + "_imag"] = i
+        spatial = "cyclic" if (self.plan is not None
+                               and self.plan.decomp in _CYCLIC_DECOMPS) \
+            else "natural"
         return data.replace(arrays=arrays, domain="spatial",
-                            layout="natural")
+                            layout=spatial)

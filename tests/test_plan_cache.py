@@ -51,7 +51,34 @@ def test_plan_cache_hit_and_miss_identity():
 
     planmod.plan_cache_clear()
     assert planmod.plan_cache_stats() == {"hits": 0, "misses": 0,
-                                          "size": 0}
+                                          "size": 0,
+                                          "autotune_skipped": 0}
+
+
+def test_autotune_records_skipped_variants():
+    """The FFTW_MEASURE sweep must not silently swallow failing
+    candidates: each skip lands in autotune_skips() with its error.
+    A (6, 96) slab grid forces deterministic skips — overlap chunks=4
+    cannot divide the 6-row chunk axis, so those variants fail to
+    build and must be recorded."""
+    from repro.compat import make_mesh
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, MEASURE, plan_dft
+
+    planmod.plan_cache_clear()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    p = plan_dft((6, 96), FORWARD, mesh, backend=MEASURE,
+                 allow_reduced_wire=False)
+    assert p.backend != MEASURE
+    skips = planmod.autotune_skips()
+    assert skips, "chunks=4 over 6 rows must have been tried and skipped"
+    assert planmod.plan_cache_stats()["autotune_skipped"] == len(skips)
+    for s in skips:
+        assert s["error"], s
+        assert s["decomp"] == "slab"
+    assert any(s["overlap_chunks"] == 4 for s in skips)
+    planmod.plan_cache_clear()
+    assert planmod.plan_cache_stats()["autotune_skipped"] == 0
 
 
 def test_plan_sharding_contracts():
