@@ -7,6 +7,10 @@ performance study as future work. The harness therefore covers:
   fig2_workflow_*      — the paper's workflow end-to-end (MSE + stage
                          timings, fused in-situ vs staged in-transit:
                          the marshaling-overhead comparison of §5)
+  chain_pipeline_*     — multi-field chain with a host writer attached:
+                         staged (serial oracle) vs pipelined (async
+                         double-buffered device launch + background host
+                         offload), with overlap-efficiency accounting
   fft_local_*          — local FFT backends across sizes (vs jnp.fft)
   fft_schedule_*       — the five stage-schedules head-to-head on the
                          same hardware (slab 2-D ± overlap, slab 3-D,
@@ -121,6 +125,63 @@ def bench_workflow_fig2():
                     / np.mean((den - clean) ** 2))
         row(f"fig2_workflow_{mode}_200x200", us,
             f"mse_improvement={imp:.2f}x")
+
+
+def bench_chain_pipeline():
+    """Staged vs pipelined over a multi-field sequence with a host
+    writer attached — the win the pipelined mode exists for. Both rows
+    land in BENCH_fft.json; the pipelined row carries the
+    overlap-efficiency number backing the speedup."""
+    import tempfile
+
+    from repro.core.insitu.adaptors import RadiatingSourceAdaptor
+    from repro.core.insitu.config import build_chain
+
+    F, dims = 12, (256, 256)
+    src = RadiatingSourceAdaptor(dims=dims)
+    fields = [src.produce(s) for s in range(F + 1)]   # +1 warm-up field
+    base = [
+        {"endpoint": "fft", "array": "field", "direction": "forward",
+         "local": True},
+        {"endpoint": "bandpass", "array": "field", "keep_frac": 0.1},
+        {"endpoint": "fft", "array": "field", "direction": "backward",
+         "local": True},
+    ]
+    results = {}
+    for mode in ("intransit", "insitu", "pipelined"):
+        with tempfile.TemporaryDirectory() as td:
+            chain = build_chain(
+                {"mode": mode,
+                 "chain": base + [{"endpoint": "writer", "array": "field",
+                                   "out_dir": td}]},
+                None, fields[0].grid)
+            chain.execute(fields[0])               # compile + warm
+            chain.drain()
+            chain.reset_stats()
+            t0 = time.perf_counter()
+            for d in fields[1:]:
+                chain.execute(d)
+            chain.drain()
+            wall = time.perf_counter() - t0
+            rep = chain.marshaling_report()
+            nwritten = len(chain.finalize()["writer"]["files"])
+            assert nwritten == F + 1, f"writer saw {nwritten} fields"
+            results[mode] = (wall / F * 1e6, rep)
+    us_staged = results["intransit"][0]
+    us_fused = results["insitu"][0]
+    us_piped, rep = results["pipelined"]
+    row("chain_pipeline_staged_12f_256", us_staged,
+        "per-endpoint-jit-oracle;host-writer")
+    # the fused row is the honest no-overlap baseline: same ONE-jit
+    # device prefix as pipelined, host writer inline — vs_fused isolates
+    # the pipelining win from the fusion win
+    row("chain_pipeline_fused_12f_256", us_fused,
+        f"fused-serial-oracle;vs_staged={us_staged/us_fused:.2f}x")
+    row("chain_pipeline_pipelined_12f_256", us_piped,
+        f"vs_fused={us_fused/us_piped:.2f}x"
+        f";vs_staged={us_staged/us_piped:.2f}x"
+        f";overlap_eff={rep['pipeline']['overlap_efficiency']:.2f}"
+        f";qmax={rep['pipeline']['queue_depth_max']}")
 
 
 def bench_fft_slab_scaling():
@@ -401,6 +462,7 @@ def bench_model_steps():
 BENCHES = [
     ("fft_local", bench_fft_local),
     ("fig2_workflow", bench_workflow_fig2),
+    ("chain_pipeline", bench_chain_pipeline),
     ("bandpass", bench_bandpass),
     ("fft_schedule", bench_fft_schedules),
     ("fft_rfft", bench_fft_rfft),
@@ -421,7 +483,8 @@ def write_outputs(emit_json: bool, partial: bool = False) -> None:
         # BENCH_fft.json at the repo root: the FFT perf trajectory, one
         # file per commit via the CI artifact upload
         fft_rows = {n: {"us_per_call": round(u, 1), "derived": d}
-                    for n, u, d in ROWS if n.startswith("fft")}
+                    for n, u, d in ROWS
+                    if n.startswith(("fft", "chain_pipeline"))}
         payload = {"rows": fft_rows,
                    "unit": "us_per_call",
                    "source": "benchmarks/run.py"}
@@ -431,21 +494,23 @@ def write_outputs(emit_json: bool, partial: bool = False) -> None:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--only", default=None, metavar="PREFIX",
-                    help="run only bench groups whose name contains "
-                         "PREFIX (e.g. fft_schedule)")
+    ap.add_argument("--only", default=None, metavar="PREFIX[,PREFIX...]",
+                    help="run only bench groups whose name contains one "
+                         "of the comma-separated PREFIXes (e.g. "
+                         "fft_schedule,chain_pipeline)")
     ap.add_argument("--json", action="store_true",
                     help="emit BENCH_fft.json at the repo root")
     args = ap.parse_args(argv)
 
+    wanted = [p for p in (args.only or "").split(",") if p]
     print("name,us_per_call,derived")
     ran = 0
     for name, fn in BENCHES:
-        if args.only and args.only not in name:
+        if wanted and not any(p in name for p in wanted):
             continue
         fn()
         ran += 1
-    if args.only and not ran:
+    if wanted and not ran:
         print(f"--only {args.only!r} matched no bench group "
               f"(known: {', '.join(n for n, _ in BENCHES)})",
               file=sys.stderr)

@@ -1,0 +1,120 @@
+"""Bench-trend gate: fail CI on >20% wall-time regressions.
+
+Compares the current ``BENCH_fft.json`` against the previous
+main-branch artifact (downloaded by CI; see .github/workflows/ci.yml)
+row by row and exits non-zero when any shared row regressed beyond the
+threshold — the ROADMAP's "perf trajectory discipline".
+
+Rules:
+
+* only rows present in BOTH files are compared (new benches are free,
+  removed benches are reported informationally);
+* rows with non-positive timings (ERROR markers) are skipped;
+* a missing/unreadable baseline is a SKIP, not a failure — the first
+  run on a fresh branch has nothing to compare against;
+* inherently noisy rows (thread-scheduling/host-I/O dependent, e.g.
+  the ``chain_pipeline_*`` wall-times) can be gated at a looser
+  threshold via ``--noisy PREFIX=THRESH`` instead of going red on
+  runner jitter.
+
+Usage:  python benchmarks/trend_check.py --baseline prev/BENCH_fft.json \
+            --current BENCH_fft.json [--threshold 0.20] \
+            [--noisy chain_pipeline=0.5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+
+def load_rows(path: Path) -> Dict[str, float]:
+    """Row name -> us_per_call, dropping error (non-positive) rows."""
+    payload = json.loads(path.read_text())
+    out = {}
+    for name, row in payload.get("rows", {}).items():
+        us = float(row.get("us_per_call", -1))
+        if us > 0:
+            out[name] = us
+    return out
+
+
+def compare(baseline: Dict[str, float], current: Dict[str, float],
+            threshold: float,
+            noisy: Optional[Dict[str, float]] = None
+            ) -> Tuple[List[str], List[str]]:
+    """Return (regressions, notes); a regression is current/baseline
+    exceeding 1 + threshold (per-row overridden by the loosest matching
+    ``noisy`` prefix threshold)."""
+    regressions, notes = [], []
+    for name in sorted(set(baseline) | set(current)):
+        b, c = baseline.get(name), current.get(name)
+        if b is None:
+            notes.append(f"NEW      {name}: {c:.1f} us")
+            continue
+        if c is None:
+            notes.append(f"REMOVED  {name} (was {b:.1f} us)")
+            continue
+        thresh = threshold
+        for prefix, t in (noisy or {}).items():
+            if name.startswith(prefix):
+                thresh = max(thresh, t)
+        ratio = c / b
+        line = f"{name}: {b:.1f} -> {c:.1f} us ({ratio:.2f}x, " \
+               f"limit {1 + thresh:.2f}x)"
+        if ratio > 1.0 + thresh:
+            regressions.append("REGRESSED " + line)
+        else:
+            notes.append(("improved " if ratio < 1.0 else "ok       ")
+                         + line)
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="previous main-branch BENCH_fft.json")
+    ap.add_argument("--current", required=True,
+                    help="this run's BENCH_fft.json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed fractional slowdown (0.20 = +20%%)")
+    ap.add_argument("--noisy", action="append", default=[],
+                    metavar="PREFIX=THRESH",
+                    help="looser threshold for rows starting with "
+                         "PREFIX (repeatable)")
+    args = ap.parse_args(argv)
+    noisy = {}
+    for spec in args.noisy:
+        prefix, _, t = spec.partition("=")
+        noisy[prefix] = float(t)
+
+    base_path = Path(args.baseline)
+    if not base_path.is_file():
+        print(f"trend-check SKIP: no baseline at {base_path} "
+              f"(first run on this branch?)")
+        return 0
+    try:
+        baseline = load_rows(base_path)
+    except (json.JSONDecodeError, OSError) as err:
+        print(f"trend-check SKIP: unreadable baseline ({err})")
+        return 0
+    current = load_rows(Path(args.current))
+
+    regressions, notes = compare(baseline, current, args.threshold, noisy)
+    for line in notes:
+        print(line)
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed more than "
+              f"{args.threshold:.0%}:")
+        for line in regressions:
+            print(line)
+        return 1
+    print(f"\ntrend-check OK: no row regressed more than "
+          f"{args.threshold:.0%} ({len(current)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,22 +3,27 @@
 Producer (noisy radiating source) → forward FFT → bandpass (keep the
 low-frequency corners) → inverse FFT → visualize. Every stage is a
 configured endpoint; swap the config dict to rewire the chain at runtime
-(the paper's XML role).
+(the paper's XML role). Because host visualization interleaves the
+device stages here, the chain is built in staged ("intransit") mode —
+a pure-device chain would fuse into one XLA program, and a multi-field
+producer would use mode="pipelined" (see docs/architecture.md).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import numpy as np
 
 from repro.core.insitu.adaptors import RadiatingSourceAdaptor
 from repro.core.insitu.config import build_chain
 
-OUT = "results/quickstart"
+OUT = os.environ.get("QUICKSTART_OUT", "results/quickstart")
 
 producer = RadiatingSourceAdaptor(dims=(200, 200))
 data = producer.produce(step=0)
 
 chain = build_chain({
-    "mode": "insitu",
+    "mode": "intransit",          # host viz interleaves device stages
     "chain": [
         {"endpoint": "visualize", "array": "field", "out_dir": OUT,
          "prefix": "a_noisy"},                             # Fig. 2a
@@ -37,9 +42,6 @@ chain = build_chain({
     ],
 }, mesh=None, grid=data.grid)
 
-# NOTE: host endpoints interleave device stages here, so the chain runs
-# staged; a pure-device chain would fuse into one XLA program.
-chain.mode = "intransit"
 out = chain.execute(data)
 
 clean = np.asarray(data.arrays["clean_reference"])
@@ -47,10 +49,16 @@ noisy = np.asarray(data.arrays["field"])
 denoised = np.asarray(out.arrays["field"])
 mse0 = float(np.mean((noisy - clean) ** 2))
 mse1 = float(np.mean((denoised - clean) ** 2))
+files = chain.finalize()       # every endpoint reports (dup names keyed #idx)
+n_images = sum(len(v.get("files", ())) for k, v in files.items()
+               if k.startswith("visualize"))
 print(f"MSE noisy     : {mse0:.4f}")
 print(f"MSE denoised  : {mse1:.4f}   ({mse0 / mse1:.1f}x better)")
 print(f"kept energy   : "
       f"{float(out.arrays['insitu_kept_energy']):.3e} / "
       f"{float(out.arrays['insitu_total_energy']):.3e}")
+print(f"images        : {n_images} (4 stages) + "
+      f"{len(files['writer']['files'])} array dump -> {OUT}")
 print("report:", chain.marshaling_report())
-print("files:", chain.finalize())
+assert mse1 < 0.5 * mse0, "bandpass failed to denoise"
+assert n_images >= 4, "a visualize stage lost its output"

@@ -3,7 +3,10 @@
 The training job is the "simulation" of the paper's processing chain:
 per-layer gradient spectra are computed on device inside the jitted
 train step (no host round trip), alongside checkpoints, restart-on-
-failure, and straggler monitoring.
+failure, and straggler monitoring. The spectra are additionally
+persisted through a **pipelined** host-offload chain (mode="pipelined",
+see docs/architecture.md): the .npy writes ride the background pipeline
+worker and overlap the next train step instead of blocking it.
 
 Presets:
   cpu    (default) — ~5M-param qwen3-family model, 200 steps; runs on
@@ -63,12 +66,17 @@ def main():
         "--batch", str(batch), "--seq", str(seq),
         "--lr", "6e-3", "--ckpt-dir", "results/train_insitu_ckpt",
         "--ckpt-every", "50", "--insitu-every", "10",
+        "--insitu-spectra-dir", "results/train_insitu_spectra",
     ])
     assert out["final_loss"] < out["first_loss"] - 0.5, \
         "loss did not improve"
+    assert out["spectra_files"] > 0, "pipelined spectra writer wrote nothing"
     print("training improved loss "
           f"{out['first_loss']:.3f} -> {out['final_loss']:.3f}; "
-          f"restarts={out['restarts']}")
+          f"restarts={out['restarts']}; "
+          f"spectra files={out['spectra_files']} "
+          f"(host-offload backpressure "
+          f"{out['spectra_backpressure_ms']:.1f} ms)")
 
 
 if __name__ == "__main__":

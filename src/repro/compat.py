@@ -70,3 +70,20 @@ def shard_map(body, *, mesh, in_specs, out_specs):
     """Version-dispatched ``shard_map`` with rep/vma checking disabled."""
     return _SHARD_MAP(body, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, **{_CHECK_KW: False})
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient default mesh.
+
+    ``jax.set_mesh`` (new releases) / ``jax.sharding.use_mesh``
+    (transition releases) / the legacy ``with mesh:`` resource-env
+    context (0.4.x, where ``Mesh`` itself is the context manager).
+    The repo pins every sharding explicitly (NamedSharding +
+    shard_map), so the three are behavior-identical here.
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is None:
+        fn = getattr(jax.sharding, "use_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh

@@ -7,6 +7,12 @@ at the four corners of the 2-D spectrum). These helpers build such masks
 for any grid shape, in natural or distributed-transposed layouts, as
 pure elementwise multiplies (jit/shard_map-fusable; the Pallas
 ``bandpass`` kernel is the fused TPU version).
+
+Digit-permuted layouts (``fourstep1d`` / ``pencil_tf`` outputs) need
+their masks gathered through ``fourstep_freq_of_position`` —
+``permute_mask_first_axis`` / ``mask_fourstep_1d`` /
+``mask_pencil_tf_3d`` below do that; ``docs/layouts.md`` specifies the
+orders with a worked 8-point example.
 """
 from __future__ import annotations
 

@@ -45,6 +45,8 @@ class RadiatingSourceAdaptor:
         self.grid = GridMeta(self.dims)
 
     def produce(self, step: int = 0) -> BridgeData:
+        """One simulation step's payload: the noisy field (primary,
+        seeded by ``step``) plus its clean reference."""
         noisy, clean = radiating_field(self.dims, seed=step, **self.kw)
         field = jnp.asarray(noisy)
         if self.sharding is not None:

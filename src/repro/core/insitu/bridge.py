@@ -22,6 +22,8 @@ import jax
 
 @dataclasses.dataclass(frozen=True)
 class GridMeta:
+    """Structured-grid metadata (the VTK image-data analogue): global
+    dims plus per-axis spacing/origin (defaulted to unit/zero)."""
     dims: Tuple[int, ...]
     spacing: Tuple[float, ...] = ()
     origin: Tuple[float, ...] = ()
@@ -48,9 +50,12 @@ class BridgeData:
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "BridgeData":
+        """Functional update (endpoints never mutate payloads in place)."""
         return dataclasses.replace(self, **kw)
 
     def primary(self) -> str:
+        """Name of the primary array (``meta['primary']``, else the
+        first key) — what single-array endpoints default to."""
         return self.meta.get("primary", next(iter(self.arrays)))
 
     def get_pair(self, name: Optional[str] = None):

@@ -11,8 +11,14 @@ chain is a JSON-able dict (runtime-reconfigurable the same way):
         {"endpoint": "fft",      "array": "field", "direction": "backward"},
         {"endpoint": "visualize"}]}
 
+``mode`` is ``"insitu"`` (fused), ``"intransit"`` (staged), or
+``"pipelined"`` (async double-buffered, see ``pipeline.py``); the
+pipelined knobs ride along as top-level keys (``pipeline_depth``,
+``pipeline_workers``, ``donate_buffers``).
+
 ``build_chain(cfg, mesh, grid)`` instantiates registered endpoints and
-initializes them (FFT planning happens here, FFTW-style).
+initializes them (FFT planning happens here, FFTW-style). The endpoint
+authoring/registration guide is ``docs/endpoints.md``.
 """
 from __future__ import annotations
 
@@ -40,12 +46,16 @@ ENDPOINTS: Dict[str, type] = {
 
 
 def register_endpoint(name: str, cls: type):
+    """Register a custom endpoint class under a config name (see
+    ``docs/endpoints.md`` for the authoring guide)."""
     assert issubclass(cls, Endpoint)
     ENDPOINTS[name] = cls
 
 
 def build_chain(cfg: Union[Dict[str, Any], str, Path], mesh=None,
                 grid=None) -> InSituChain:
+    """Instantiate + initialize a chain from a config dict (or a path
+    to a JSON file holding one) — the paper's XML-load moment."""
     if isinstance(cfg, (str, Path)):
         cfg = json.loads(Path(cfg).read_text())
     eps = []
@@ -56,6 +66,10 @@ def build_chain(cfg: Union[Dict[str, Any], str, Path], mesh=None,
             raise KeyError(f"unknown endpoint {kind!r}; "
                            f"known: {sorted(ENDPOINTS)}")
         eps.append(ENDPOINTS[kind](**spec))
-    chain = InSituChain(eps, mesh=mesh, mode=cfg.get("mode", "insitu"))
+    chain = InSituChain(
+        eps, mesh=mesh, mode=cfg.get("mode", "insitu"),
+        pipeline_depth=cfg.get("pipeline_depth", 2),
+        pipeline_workers=cfg.get("pipeline_workers", 1),
+        donate_buffers=cfg.get("donate_buffers", False))
     chain.initialize(grid)
     return chain

@@ -5,20 +5,49 @@ we keep the contract. ``execute`` must be jit-traceable for device
 endpoints (they fuse into one XLA program in in-situ mode); endpoints
 with host side effects (writers, visualization) set ``host = True`` and
 run on materialized outputs after the device program.
+
+Pipelined mode (``InSituChain(mode="pipelined")``, see ``pipeline.py``)
+additionally runs host endpoints on a background worker so they overlap
+the next field's device stages. Endpoints declare what that worker may
+assume about them:
+
+* ``thread_safe`` — ``execute`` may run concurrently with itself (from
+  several worker threads at once). Required for ``pipeline_workers > 1``.
+* ``ordered`` — ``execute`` must observe fields in submission (step)
+  order. Ordered endpoints force a single worker; only endpoints
+  declaring ``ordered = False`` *and* ``thread_safe = True`` may fan
+  out across multiple workers.
+
+The authoring guide with the full lifecycle and marshaling contract is
+``docs/endpoints.md``.
 """
 from __future__ import annotations
 
 import abc
 from typing import Any, Dict, Optional
 
-from repro.core.insitu.bridge import BridgeData
-
 
 class Endpoint(abc.ABC):
+    """One stage of an in-situ chain (the paper's SENSEI endpoint).
+
+    Subclasses override ``execute`` (required) and any of the lifecycle
+    hooks. Class attributes describe the execution contract:
+
+    * ``name`` — registry/report key (``config.ENDPOINTS``,
+      ``chain.marshaling_report()``).
+    * ``host`` — True: runs outside jit on materialized arrays (file
+      writers, visualization); False: must be jit-traceable.
+    * ``thread_safe`` / ``ordered`` — pipelined-mode declarations, see
+      the module docstring.
+    """
+
     name: str = "endpoint"
     host: bool = False            # True: runs outside jit on host data
+    thread_safe: bool = False     # execute() may run concurrently w/ itself
+    ordered: bool = True          # must see fields in submission order
 
     def __init__(self, **params):
+        """Record the (JSON-able) config the endpoint was built from."""
         self.params = params
         self._state: Dict[str, Any] = {}
 
@@ -27,8 +56,12 @@ class Endpoint(abc.ABC):
         """Plan-time setup: compile FFT plans, build masks, open files."""
 
     @abc.abstractmethod
-    def execute(self, data: BridgeData) -> BridgeData:
-        """Transform the bridge payload (traced for device endpoints)."""
+    def execute(self, data):
+        """Transform the bridge payload (traced for device endpoints).
+
+        Takes and returns a ``BridgeData``; publish new products under
+        ``insitu_*`` keys rather than mutating ``data`` in place.
+        """
 
     def finalize(self) -> Dict[str, Any]:
         """Tear down; return any summary the driver should report."""
@@ -37,8 +70,11 @@ class Endpoint(abc.ABC):
     # -- marshaling contract ---------------------------------------------------
     def in_sharding(self, mesh):
         """Sharding this endpoint requires on the primary array (or None
-        = accept anything). The chain inserts reshards on mismatch."""
+        = accept anything). The chain inserts reshards on mismatch and
+        accounts the moved bytes in ``marshaling_report()``."""
         return None
 
     def out_sharding(self, mesh):
+        """Sharding this endpoint leaves the primary array in (or None
+        = unchanged / unspecified)."""
         return None

@@ -16,6 +16,11 @@ from repro.core.insitu.endpoint import Endpoint
 
 
 class BandpassEndpoint(Endpoint):
+    """Spectral mask + kept/total energy reduction in one stage; the
+    mask follows the input's layout tag (digit-permuted layouts gather
+    it through ``fourstep_freq_of_position`` — ``docs/layouts.md``
+    works the permutation through an 8-point example)."""
+
     name = "bandpass"
 
     def __init__(self, *, array: str = "field", keep_frac: float = 0.0075,
@@ -32,6 +37,8 @@ class BandpassEndpoint(Endpoint):
         self._permuted_cache = {}
 
     def initialize(self, mesh=None, grid=None):
+        """Build the natural-order mask for the grid; layout-permuted
+        variants are derived lazily (and cached) at execute time."""
         self._mesh = mesh
         self._permuted_cache.clear()    # mesh/grid may have changed
         if grid is None:
@@ -65,6 +72,8 @@ class BandpassEndpoint(Endpoint):
         return out
 
     def execute(self, data: BridgeData) -> BridgeData:
+        """Mask the spectrum in its native layout and publish
+        ``insitu_kept_energy`` / ``insitu_total_energy``."""
         assert data.domain == "spectral", "bandpass needs spectral input"
         re, im = data.get_pair(self.array)
         mask = self.mask

@@ -23,6 +23,13 @@ Beyond the paper's complex endpoint:
 Plans come from the process-wide plan cache, so chains rebuilt every
 step (or many endpoints over the same grid) share one compiled
 executable.
+
+Layout contracts: forward output order depends on the decomposition
+(``transposed`` / ``rotated`` / ``fourstep`` / ``rotated-fourstep``,
+each ``-half`` for r2c), and the cyclic/digit-permuted decompositions
+constrain the SPATIAL side too — the full contract, with a worked
+8-point example of the cyclic and digit-permuted orders, is
+``docs/layouts.md``.
 """
 from __future__ import annotations
 
@@ -46,6 +53,10 @@ _CYCLIC_DECOMPS = ("pencil_tf", "fourstep1d")
 
 
 class FFTEndpoint(Endpoint):
+    """Planned distributed (or ``local=True`` single-device) FFT as a
+    chain stage; see the module docstring and ``docs/layouts.md`` for
+    the output-layout contract per decomposition."""
+
     name = "fft"
 
     def __init__(self, *, array: str = "field", direction: str = "forward",
@@ -67,6 +78,9 @@ class FFTEndpoint(Endpoint):
         self._grid_dims = None
 
     def initialize(self, mesh=None, grid=None):
+        """Build (or fetch from the process-wide cache) the plan for
+        ``grid.dims`` on ``mesh``; ``local=True``/no-mesh chains skip
+        planning and transform with ``jnp.fft`` at execute time."""
         if grid is not None:
             self._grid_dims = tuple(grid.dims)
         if self.local or mesh is None:
@@ -102,6 +116,9 @@ class FFTEndpoint(Endpoint):
                 jnp.imag(out).astype(jnp.float32)), "natural"
 
     def execute(self, data: BridgeData) -> BridgeData:
+        """Transform ``array`` and republish it with the matching
+        ``domain``/``layout`` tags (see ``docs/layouts.md``); rejects
+        non-cyclic spatial input for the cyclic-contract decomps."""
         if (self.plan is not None and self.direction == FORWARD
                 and self.plan.decomp in _CYCLIC_DECOMPS
                 and data.layout != "cyclic"):

@@ -22,6 +22,9 @@ from repro.core.insitu.endpoint import Endpoint
 
 
 class SpectralMonitorEndpoint(Endpoint):
+    """Per-tensor gradient/parameter power spectra, computed on device
+    inside the train step (see the module docstring)."""
+
     name = "spectral_monitor"
 
     def __init__(self, *, source: str = "grads", nbins: int = 16,
@@ -40,10 +43,14 @@ class SpectralMonitorEndpoint(Endpoint):
         self.sample_rows = sample_rows
 
     def _sample(self, leaf):
+        """Static leading-rows slice — touches one shard (see __init__)."""
         x = leaf.reshape(-1, leaf.shape[-1])
         return x[: self.sample_rows]
 
     def execute(self, data: BridgeData) -> BridgeData:
+        """Publish normalized per-tensor spectra
+        (``insitu_grad_spectra``) and the mean high-frequency energy
+        fraction (``insitu_highfreq_frac``)."""
         tree = data.arrays[self.source]
         leaves = [(jax.tree_util.keystr(p), self._sample(l)) for p, l
                   in jax.tree_util.tree_leaves_with_path(tree)

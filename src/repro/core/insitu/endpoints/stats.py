@@ -15,6 +15,9 @@ from repro.core.insitu.endpoint import Endpoint
 
 
 class StatsEndpoint(Endpoint):
+    """Publish ``insitu_stats`` = [min, max, mean, std, rms] of one
+    named array (the real plane of an (re, im) pair)."""
+
     name = "stats"
 
     def __init__(self, *, array: str = "field"):
@@ -22,6 +25,7 @@ class StatsEndpoint(Endpoint):
         self.array = array
 
     def execute(self, data: BridgeData) -> BridgeData:
+        """Compute the five summary statistics on device."""
         v = data.arrays[self.array]
         x = v[0] if isinstance(v, tuple) else v
         xf = x.astype(jnp.float32)
@@ -33,6 +37,9 @@ class StatsEndpoint(Endpoint):
 
 
 class SpectrumEndpoint(Endpoint):
+    """Publish the radially-binned power spectrum of a spectral-domain
+    array as ``insitu_spectrum_k`` / ``insitu_spectrum_e``."""
+
     name = "spectrum"
 
     def __init__(self, *, array: str = "field", nbins: int = 32):
@@ -41,6 +48,7 @@ class SpectrumEndpoint(Endpoint):
         self.nbins = nbins
 
     def execute(self, data: BridgeData) -> BridgeData:
+        """Radially bin |z|² into ``nbins`` shells."""
         assert data.domain == "spectral"
         re, im = data.get_pair(self.array)
         k, e = spectrum.radial_spectrum(re, im, self.nbins)

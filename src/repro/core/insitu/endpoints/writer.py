@@ -17,8 +17,15 @@ from repro.core.insitu.endpoint import Endpoint
 
 
 class WriterEndpoint(Endpoint):
+    """Persist one named array per step as an (atomically published)
+    ``.npy`` file; ``finalize`` reports the files written, in step
+    order. ``ordered = True``: in pipelined mode the file list must
+    follow submission order, so the chain keeps it on a single
+    pipeline worker."""
+
     name = "writer"
     host = True
+    ordered = True
 
     def __init__(self, *, array: str = "field", out_dir: str = "results/insitu",
                  prefix: str = "field", every: int = 1):
@@ -30,9 +37,12 @@ class WriterEndpoint(Endpoint):
         self.written = []
 
     def initialize(self, mesh=None, grid=None):
+        """Create the output directory."""
         self.out_dir.mkdir(parents=True, exist_ok=True)
 
     def execute(self, data: BridgeData) -> BridgeData:
+        """Write ``array`` (the real plane of an (re, im) pair) to
+        ``<prefix>_<step>.npy`` every ``every`` steps; pass-through."""
         if data.step % self.every:
             return data
         v = data.arrays[self.array]
@@ -45,12 +55,18 @@ class WriterEndpoint(Endpoint):
         return data
 
     def finalize(self):
+        """Report the files written, in step order."""
         return {"files": self.written}
 
 
 class VisualizeEndpoint(Endpoint):
+    """Render one named array per step to portable PGM (plus PNG when
+    matplotlib is available) — the paper's matplotlib endpoint role.
+    Ordered for the same file-list reason as ``WriterEndpoint``."""
+
     name = "visualize"
     host = True
+    ordered = True
 
     def __init__(self, *, array: str = "field",
                  out_dir: str = "results/insitu", prefix: str = "viz",
@@ -63,9 +79,12 @@ class VisualizeEndpoint(Endpoint):
         self.written = []
 
     def initialize(self, mesh=None, grid=None):
+        """Create the output directory."""
         self.out_dir.mkdir(parents=True, exist_ok=True)
 
     def execute(self, data: BridgeData) -> BridgeData:
+        """Render ``array`` (|z| for an (re, im) pair, mid-slice for 3-D
+        fields, optional log scale) to ``<prefix>_<step>.pgm``."""
         v = data.arrays[self.array]
         if isinstance(v, tuple):
             arr = np.abs(np.asarray(v[0]) + 1j * np.asarray(v[1]))
@@ -89,10 +108,12 @@ class VisualizeEndpoint(Endpoint):
         return data
 
     def finalize(self):
+        """Report the files written, in step order."""
         return {"files": self.written}
 
 
 def write_pgm(path, arr: np.ndarray):
+    """Write a 2-D array as an 8-bit binary PGM, min/max normalized."""
     lo, hi = float(arr.min()), float(arr.max())
     scale = 255.0 / (hi - lo) if hi > lo else 1.0
     img = ((arr - lo) * scale).astype(np.uint8)

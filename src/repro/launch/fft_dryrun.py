@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from repro.core.fft import distributed as D
 from repro.core.fft.filters import lowpass_mask
 from repro.launch import roofline as rl
@@ -98,7 +100,7 @@ def run_cell(kind: str, mesh_name: str = "pod1") -> dict:
               "chips": chips, "status": "ok"}
     try:
         fn, args, in_sh, mf = build(kind, mesh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
             compiled = lowered.compile()
         result["memory"] = rl.memory_report(compiled)

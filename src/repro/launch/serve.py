@@ -5,6 +5,16 @@ runs prompt prefill then greedy decode for a batch of requests,
 reporting per-token latency. The same entry point drives the full
 configs on a production mesh (decode cells of the dry-run prove those
 shardings compile).
+
+``--monitor-every K`` attaches a **pipelined in-situ chain** to the
+request loop (stats → FFT → bandpass on the last-token logits, host
+writer at the tail): every K decode steps a logits snapshot is staged,
+and once ``--monitor-batch`` snapshots accumulate they are submitted
+as ONE batched field to the chain — *in-flight batching*: the decode
+loop never blocks on the monitor (the chain's device stages ride async
+dispatch, the host writer runs on the pipeline worker, and the bounded
+queue backpressures only if analysis falls far behind). The report
+gains the chain's overlap-efficiency numbers.
 """
 from __future__ import annotations
 
@@ -16,10 +26,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs import registry
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.sharding.policy import make_policy
+
+
+def _build_monitor(args, cfg):
+    """The pipelined in-situ chain the decode loop feeds: one batched
+    field of ``--monitor-batch`` stacked logit snapshots per submit.
+    Warmed on zeros before returning — trace/compile and the chain's
+    device-probe calibration must not land inside the timed decode
+    loop."""
+    from pathlib import Path
+
+    from repro.core.insitu.bridge import BridgeData, GridMeta
+    from repro.core.insitu.config import build_chain
+
+    chain = build_chain({
+        "mode": "pipelined",
+        "chain": [
+            {"endpoint": "stats", "array": "field"},
+            {"endpoint": "fft", "array": "field", "direction": "forward",
+             "local": True, "batch_ndim": 1},
+            {"endpoint": "bandpass", "array": "field", "keep_frac": 0.25},
+            {"endpoint": "writer", "array": "insitu_stats",
+             "out_dir": args.monitor_dir, "prefix": "logit_stats"},
+        ],
+    }, mesh=None, grid=GridMeta((args.batch, cfg.vocab_size)))
+    warm = BridgeData(
+        arrays={"field": jnp.zeros(
+            (args.monitor_batch, args.batch, cfg.vocab_size),
+            jnp.float32)},
+        step=0, meta={"primary": "field"})
+    chain.execute(warm)           # compile the fused device program
+    chain.execute(warm)           # consume the device-probe block
+    chain.drain()
+    chain.reset_stats()
+    writer = chain.endpoints[-1]  # drop the warm-up artifacts
+    for f in writer.written:
+        Path(f).unlink(missing_ok=True)
+    writer.written.clear()
+    return chain
 
 
 def main(argv=None):
@@ -30,6 +79,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--monitor-every", type=int, default=0,
+                    help="attach the pipelined in-situ logits monitor "
+                         "every K decode steps (0 = off)")
+    ap.add_argument("--monitor-batch", type=int, default=4,
+                    help="snapshots batched into one in-flight submit")
+    ap.add_argument("--monitor-dir", default="results/serve_monitor")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_reduced(args.arch) if args.reduced
@@ -49,7 +104,11 @@ def main(argv=None):
                                               cache_len=cache_len))
     decode = jax.jit(lambda p, t, s: lm.decode_step(cfg, p, t, s, policy))
 
-    with jax.set_mesh(mesh):
+    monitor = _build_monitor(args, cfg) if args.monitor_every else None
+    staged = []                 # snapshots awaiting an in-flight submit
+    submits = 0
+
+    with compat.set_mesh(mesh):
         t0 = time.perf_counter()
         logits, state = prefill(params, {"tokens": prompts})
         logits.block_until_ready()
@@ -58,13 +117,24 @@ def main(argv=None):
         out_tokens = []
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         t0 = time.perf_counter()
-        for _ in range(args.tokens):
+        for step in range(args.tokens):
             out_tokens.append(np.asarray(tok))
             logits, state = decode(params, tok, state)
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
                      .astype(jnp.int32)
+            if monitor is not None and step % args.monitor_every == 0:
+                # stage the (still in-flight) logits; submit one batched
+                # field per --monitor-batch snapshots — the decode loop
+                # never waits for the analysis
+                staged.append(logits[:, -1])
+                if len(staged) == args.monitor_batch:
+                    submits += _submit_monitor(monitor, staged, submits)
         jax.block_until_ready(logits)
         t_decode = time.perf_counter() - t0
+        if monitor is not None and staged:
+            # trailing partial batch: a different leading dim means a
+            # fresh trace — flush it outside the timed decode window
+            submits += _submit_monitor(monitor, staged, submits)
 
     gen = np.concatenate(out_tokens, axis=1)
     report = {
@@ -75,8 +145,35 @@ def main(argv=None):
         "tokens_per_s": round(args.batch * args.tokens / t_decode, 1),
         "sample": gen[0, :8].tolist(),
     }
+    if monitor is not None:
+        monitor.drain()
+        mrep = monitor.marshaling_report()
+        files = monitor.finalize()["writer"]["files"]
+        pipe = mrep.get("pipeline", {})
+        report["monitor"] = {
+            "submits": submits,
+            "snapshot_batch": args.monitor_batch,
+            "files": len(files),
+            "overlap_efficiency": round(
+                pipe.get("overlap_efficiency", 0.0), 3),
+            "host_busy_ms": round(pipe.get("host_busy_s", 0.0) * 1e3, 2),
+            "backpressure_ms": round(
+                pipe.get("backpressure_s", 0.0) * 1e3, 2),
+        }
     print(json.dumps(report))
     return report
+
+
+def _submit_monitor(chain, staged, submit_idx) -> int:
+    """Stack the staged snapshots into one batched BridgeData and hand
+    it to the pipelined chain (returns immediately; 1 = one submit)."""
+    from repro.core.insitu.bridge import BridgeData
+
+    field = jnp.stack(staged)
+    staged.clear()
+    chain.execute(BridgeData(arrays={"field": field}, step=submit_idx,
+                             meta={"primary": "field"}))
+    return 1
 
 
 if __name__ == "__main__":

@@ -21,6 +21,8 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs import registry
 from repro.core.insitu.chain import InSituChain
 from repro.core.insitu.endpoints.spectral_monitor import SpectralMonitorEndpoint
@@ -46,6 +48,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--insitu-every", type=int, default=10)
     ap.add_argument("--no-insitu", action="store_true")
+    ap.add_argument("--insitu-spectra-dir", default=None,
+                    help="persist per-report gradient spectra through a "
+                         "pipelined host-offload chain (the .npy writes "
+                         "overlap the next train step)")
     ap.add_argument("--fail-at", type=int, nargs="*", default=None,
                     help="inject failures at these steps (FT test)")
     ap.add_argument("--production-mesh", action="store_true")
@@ -67,6 +73,17 @@ def main(argv=None):
             [SpectralMonitorEndpoint(source="grads", nbins=8,
                                      max_tensors=4)],
             mesh=mesh).initialize()
+
+    spectra_chain = None
+    if args.insitu_spectra_dir and not args.no_insitu:
+        # host offload of the monitor's spectra: the writer runs on the
+        # pipeline worker, so disk I/O overlaps the next train step
+        from repro.core.insitu.endpoints.writer import WriterEndpoint
+        spectra_chain = InSituChain(
+            [WriterEndpoint(array="insitu_grad_spectra",
+                            out_dir=args.insitu_spectra_dir,
+                            prefix="spectra")],
+            mode="pipelined", pipeline_depth=2).initialize()
 
     step_fn = train_step_mod.make_train_step(
         cfg, policy, opt, microbatches=args.microbatches,
@@ -91,9 +108,27 @@ def main(argv=None):
 
     losses = []
 
+    spectra_last = [-1]
+
     def on_metrics(step, metrics):
         loss = float(metrics["loss"])
         losses.append(loss)
+        # on_metrics receives the post-increment step: metrics describe
+        # train-step `step - 1`, the one the in-step monitor's lax.cond
+        # keyed on
+        monitor_step = step - 1
+        if spectra_chain is not None and "insitu" in metrics \
+                and monitor_step % args.insitu_every == 0 \
+                and monitor_step > spectra_last[0]:
+            # cadence guard: the monitor publishes zeros on the steps it
+            # skips (lax.cond's other branch) — only real report steps
+            # go to disk. monotonic guard: restart-on-failure replays
+            # steps already reported, and the writer's file list must
+            # stay one entry per step, in step order.
+            spectra_last[0] = monitor_step
+            from repro.core.insitu.bridge import BridgeData
+            spectra_chain.execute(BridgeData(
+                arrays=dict(metrics["insitu"]), step=monitor_step))
         if step % 10 == 0 or step <= 2:
             extra = ""
             if "insitu" in metrics:
@@ -106,7 +141,7 @@ def main(argv=None):
                   flush=True)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state, report = run_with_restarts(
             make_state=make_state, train_step=step_fn, batch_fn=batch_fn,
             total_steps=args.steps, ckpt_dir=args.ckpt_dir,
@@ -117,6 +152,13 @@ def main(argv=None):
            "first_loss": losses[0] if losses else None,
            "final_loss": losses[-1] if losses else None,
            "wall_s": round(time.time() - t0, 1), **report}
+    if spectra_chain is not None:
+        spectra_chain.drain()
+        pipe = spectra_chain.marshaling_report().get("pipeline", {})
+        out["spectra_files"] = len(
+            spectra_chain.finalize()["writer"]["files"])
+        out["spectra_backpressure_ms"] = round(
+            pipe.get("backpressure_s", 0.0) * 1e3, 2)
     print(json.dumps(out, default=str))
     return out
 

@@ -1,0 +1,95 @@
+"""CI gate tooling: the bench-trend regression check and the docs
+link checker — plus a live run of the link checker over THIS repo's
+README/docs so broken doc links fail tier-1, not just the docs job."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "benchmarks"))
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_links                                    # noqa: E402
+import trend_check                                    # noqa: E402
+
+
+def _bench_json(path, rows):
+    payload = {"rows": {n: {"us_per_call": us, "derived": ""}
+                        for n, us in rows.items()},
+               "unit": "us_per_call", "source": "test"}
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+def test_trend_check_flags_regression(tmp_path):
+    base = _bench_json(tmp_path / "base.json",
+                       {"fft_a": 100.0, "fft_b": 100.0})
+    cur = _bench_json(tmp_path / "cur.json",
+                      {"fft_a": 100.0, "fft_b": 130.0})
+    assert trend_check.main(["--baseline", base, "--current", cur,
+                             "--threshold", "0.2"]) == 1
+
+
+def test_trend_check_passes_within_threshold(tmp_path):
+    base = _bench_json(tmp_path / "base.json",
+                       {"fft_a": 100.0, "fft_b": 100.0})
+    cur = _bench_json(tmp_path / "cur.json",
+                      {"fft_a": 115.0, "fft_b": 60.0, "fft_new": 5.0})
+    assert trend_check.main(["--baseline", base, "--current", cur,
+                             "--threshold", "0.2"]) == 0
+
+
+def test_trend_check_skips_missing_baseline(tmp_path):
+    cur = _bench_json(tmp_path / "cur.json", {"fft_a": 100.0})
+    assert trend_check.main(["--baseline", str(tmp_path / "nope.json"),
+                             "--current", cur]) == 0
+
+
+def test_trend_check_noisy_prefix_loosens_threshold(tmp_path):
+    base = _bench_json(tmp_path / "base.json",
+                       {"chain_pipeline_a": 100.0, "fft_a": 100.0})
+    cur = _bench_json(tmp_path / "cur.json",
+                      {"chain_pipeline_a": 140.0, "fft_a": 110.0})
+    argv = ["--baseline", base, "--current", cur, "--threshold", "0.2",
+            "--noisy", "chain_pipeline=0.5"]
+    assert trend_check.main(argv) == 0
+    # but the loose threshold still catches a real collapse
+    cur2 = _bench_json(tmp_path / "cur2.json",
+                       {"chain_pipeline_a": 160.0, "fft_a": 110.0})
+    assert trend_check.main(argv[:3] + [cur2] + argv[4:]) == 1
+
+
+def test_trend_check_ignores_error_rows(tmp_path):
+    base = _bench_json(tmp_path / "base.json", {"fft_a": -1.0})
+    cur = _bench_json(tmp_path / "cur.json", {"fft_a": 100.0})
+    assert trend_check.main(["--baseline", base, "--current", cur]) == 0
+
+
+def test_link_checker_detects_broken_and_valid(tmp_path):
+    (tmp_path / "good.md").write_text("# Title\n\nsome heading text\n")
+    md = tmp_path / "index.md"
+    md.write_text(
+        "[ok](good.md)\n"
+        "[ok-anchor](good.md#title)\n"
+        "[web](https://example.com/x.md)\n"
+        "```\n[not-a-link](inside/fence.md)\n```\n"
+        "[broken](missing.md)\n"
+        "[bad-anchor](good.md#nope)\n")
+    errors = check_links.check_file(md)
+    assert len(errors) == 2
+    assert any("missing.md" in e for e in errors)
+    assert any("#nope" in e for e in errors)
+
+
+def test_link_checker_main_exit_codes(tmp_path):
+    (tmp_path / "a.md").write_text("[broken](gone.md)\n")
+    assert check_links.main([str(tmp_path)]) == 1
+    (tmp_path / "a.md").write_text("plain text, no links\n")
+    assert check_links.main([str(tmp_path)]) == 0
+
+
+def test_repo_docs_have_no_broken_links():
+    assert check_links.main([str(ROOT / "README.md"),
+                             str(ROOT / "docs")]) == 0

@@ -1,0 +1,25 @@
+"""Smoke test for examples/quickstart.py — the paper's Fig. 2 workflow
+must keep running (and denoising) as the chain/plan APIs evolve."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_quickstart_example_runs_and_denoises(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env["QUICKSTART_OUT"] = str(tmp_path)
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / "quickstart.py")],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "x better" in res.stdout
+    # all four Fig. 2 panels + the array dump landed
+    names = {p.name for p in tmp_path.iterdir()}
+    for prefix in ("a_noisy", "b_spectrum", "c_filtered", "d_denoised"):
+        assert f"{prefix}_000000.pgm" in names, names
+    assert "field_000000.npy" in names

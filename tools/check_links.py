@@ -1,0 +1,107 @@
+"""Markdown relative-link checker for the docs CI job.
+
+Scans the given markdown files (default: README.md + docs/*.md) for
+inline links/images ``[text](target)``, resolves each relative target
+against the file that references it, and fails when the target file —
+or a ``#fragment`` heading inside it — does not exist. External
+(``http(s)://``, ``mailto:``) links are out of scope: this gate is
+about keeping the repo-internal doc graph sound, offline.
+
+Usage:  python tools/check_links.py [files/dirs ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List
+
+# inline markdown links/images; [..](target "title") titles are stripped
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dashes."""
+    text = re.sub(r"[`*_~]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return re.sub(r"\s+", "-", text).strip("-")
+
+
+def _anchors(md_file: Path) -> set:
+    out = set()
+    in_fence = False
+    for line in md_file.read_text(encoding="utf-8").splitlines():
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            out.add(_slug(m.group(1)))
+    return out
+
+
+def check_file(md_file: Path) -> List[str]:
+    """Return error strings for every broken relative link in one file."""
+    errors = []
+    in_fence = False
+    for ln, line in enumerate(
+            md_file.read_text(encoding="utf-8").splitlines(), 1):
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = md_file if not path_part \
+                else (md_file.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md_file}:{ln}: broken link -> {target}")
+                continue
+            if fragment and dest.suffix.lower() in (".md", ".markdown"):
+                if _slug(fragment) not in _anchors(dest):
+                    errors.append(f"{md_file}:{ln}: missing anchor "
+                                  f"#{fragment} in {dest.name}")
+    return errors
+
+
+def collect(paths: Iterable[str]) -> List[Path]:
+    files = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.md")))
+        elif path.is_file():
+            files.append(path)
+        else:
+            print(f"warning: {p} not found", file=sys.stderr)
+    return files
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    if not args:
+        root = Path(__file__).resolve().parents[1]
+        args = [str(root / "README.md"), str(root / "docs")]
+    errors = []
+    files = collect(args)
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\n{len(errors)} broken link(s) across {len(files)} file(s)")
+        return 1
+    print(f"link-check OK: {len(files)} file(s), no broken relative links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
