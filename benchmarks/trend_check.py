@@ -1,23 +1,32 @@
 """Bench-trend gate: fail CI on >20% wall-time regressions.
 
-Compares the current ``BENCH_fft.json`` against the previous
-main-branch artifact (downloaded by CI; see .github/workflows/ci.yml)
-row by row and exits non-zero when any shared row regressed beyond the
-threshold — the ROADMAP's "perf trajectory discipline".
+Compares the current ``BENCH_fft.json`` against the **median of the
+last N** main-branch artifacts (downloaded by CI; see
+.github/workflows/ci.yml) row by row and exits non-zero when any
+shared row regressed beyond the threshold — the ROADMAP's "perf
+trajectory discipline" with multi-point trend smoothing: one noisy
+runner sample in the history can no longer manufacture (or mask) a
+regression, because the per-row baseline is the median over every
+artifact that carries the row.
 
 Rules:
 
-* only rows present in BOTH files are compared (new benches are free,
-  removed benches are reported informationally);
+* ``--baseline`` is repeatable and each entry may be a FILE or a
+  DIRECTORY (searched recursively for ``*.json`` — the shape CI's
+  multi-run artifact download produces); the per-row baseline is the
+  median across all readable artifacts containing the row;
+* only rows present in both the baseline set and the current file are
+  compared (new benches are free, removed benches are reported
+  informationally);
 * rows with non-positive timings (ERROR markers) are skipped;
-* a missing/unreadable baseline is a SKIP, not a failure — the first
-  run on a fresh branch has nothing to compare against;
+* zero readable baselines is a SKIP, not a failure — the first run on
+  a fresh branch has nothing to compare against;
 * inherently noisy rows (thread-scheduling/host-I/O dependent, e.g.
   the ``chain_pipeline_*`` wall-times) can be gated at a looser
   threshold via ``--noisy PREFIX=THRESH`` instead of going red on
   runner jitter.
 
-Usage:  python benchmarks/trend_check.py --baseline prev/BENCH_fft.json \
+Usage:  python benchmarks/trend_check.py --baseline prev_bench \
             --current BENCH_fft.json [--threshold 0.20] \
             [--noisy chain_pipeline=0.5]
 """
@@ -25,9 +34,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 
 def load_rows(path: Path) -> Dict[str, float]:
@@ -39,6 +49,41 @@ def load_rows(path: Path) -> Dict[str, float]:
         if us > 0:
             out[name] = us
     return out
+
+
+def collect_baseline_files(specs: Iterable[str]) -> List[Path]:
+    """Expand ``--baseline`` entries: files stay, directories are
+    searched recursively for ``*.json`` (one artifact per main-branch
+    run, in whatever subdirectories the CI download created), missing
+    paths are dropped (first run on a fresh branch)."""
+    files: List[Path] = []
+    for spec in specs:
+        p = Path(spec)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.json")))
+        elif p.is_file():
+            files.append(p)
+    return files
+
+
+def median_baseline(files: Iterable[Path]) -> Tuple[Dict[str, float], int]:
+    """Per-row median across every readable artifact carrying the row;
+    returns (rows, number of artifacts used). Unreadable artifacts are
+    reported and dropped — one corrupt download must not void the
+    whole history."""
+    per_row: Dict[str, List[float]] = {}
+    used = 0
+    for path in files:
+        try:
+            rows = load_rows(path)
+        except (json.JSONDecodeError, OSError) as err:
+            print(f"trend-check: ignoring unreadable baseline "
+                  f"{path} ({err})")
+            continue
+        used += 1
+        for name, us in rows.items():
+            per_row.setdefault(name, []).append(us)
+    return ({n: statistics.median(v) for n, v in per_row.items()}, used)
 
 
 def compare(baseline: Dict[str, float], current: Dict[str, float],
@@ -74,8 +119,11 @@ def compare(baseline: Dict[str, float], current: Dict[str, float],
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True,
-                    help="previous main-branch BENCH_fft.json")
+    ap.add_argument("--baseline", required=True, action="append",
+                    help="previous main-branch BENCH_fft.json — a file "
+                         "or a directory of per-run artifacts; "
+                         "repeatable. The per-row baseline is the "
+                         "MEDIAN across all of them")
     ap.add_argument("--current", required=True,
                     help="this run's BENCH_fft.json")
     ap.add_argument("--threshold", type=float, default=0.20,
@@ -90,16 +138,13 @@ def main(argv=None) -> int:
         prefix, _, t = spec.partition("=")
         noisy[prefix] = float(t)
 
-    base_path = Path(args.baseline)
-    if not base_path.is_file():
-        print(f"trend-check SKIP: no baseline at {base_path} "
-              f"(first run on this branch?)")
+    files = collect_baseline_files(args.baseline)
+    baseline, used = median_baseline(files)
+    if used == 0:
+        print(f"trend-check SKIP: no readable baseline under "
+              f"{', '.join(args.baseline)} (first run on this branch?)")
         return 0
-    try:
-        baseline = load_rows(base_path)
-    except (json.JSONDecodeError, OSError) as err:
-        print(f"trend-check SKIP: unreadable baseline ({err})")
-        return 0
+    print(f"baseline: per-row median of {used} main-branch artifact(s)")
     current = load_rows(Path(args.current))
 
     regressions, notes = compare(baseline, current, args.threshold, noisy)

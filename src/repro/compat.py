@@ -12,9 +12,14 @@ others) and three API points have drifted across that range:
   inside ``shard_map`` can't declare vma on its ``out_shape``
   ShapeDtypeStructs — the escape hatch the error message itself
   recommends.
+* multi-process bring-up drifts twice over: the CPU backend needs its
+  collectives implementation switched to ``gloo`` (a config knob whose
+  name/presence varies), and ``jax.distributed.initialize`` has grown
+  and renamed kwargs across releases.
 
-All mesh construction and every ``shard_map`` in the repo routes
-through here; nothing else should touch those APIs directly.
+All mesh construction, every ``shard_map``, and the cluster bootstrap
+(``repro.runtime.cluster``) route through here; nothing else should
+touch those APIs directly.
 """
 from __future__ import annotations
 
@@ -54,6 +59,22 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
 
 
+def make_explicit_mesh(devices, axis_names: Sequence[str]):
+    """``Mesh`` over an exactly-placed device ndarray — no reordering.
+
+    ``jax.make_mesh`` may permute devices for collective efficiency,
+    which would silently destroy a process-major DCN×ICI layout; the
+    raw ``Mesh`` constructor honors placement verbatim. Axis types are
+    declared ``Auto`` when the running JAX has them (same convention
+    as ``make_mesh`` above).
+    """
+    kwargs = {}
+    if _HAS_AXIS_TYPE:
+        kwargs["axis_types"] = (
+            jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+    return jax.sharding.Mesh(devices, tuple(axis_names), **kwargs)
+
+
 def _resolve_shard_map():
     fn = getattr(jax, "shard_map", None)
     if fn is None:
@@ -70,6 +91,75 @@ def shard_map(body, *, mesh, in_specs, out_specs):
     """Version-dispatched ``shard_map`` with rep/vma checking disabled."""
     return _SHARD_MAP(body, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, **{_CHECK_KW: False})
+
+
+def axis_crosses_processes(mesh, axis_name: str) -> bool:
+    """True when moving along ``axis_name`` can change the owning
+    process — i.e. a collective over that axis crosses the host
+    interconnect (DCN) rather than staying on-node (ICI).
+
+    Decided from device placement alone (``Device.process_index``
+    along each ring of the mesh's device array), so it is correct for
+    any mesh however it was built. Lives here — below every layer —
+    because both the core FFT schedule engine and the runtime/launch
+    layers need it.
+    """
+    axes = list(mesh.axis_names)
+    ax = axes.index(axis_name)
+    devs = mesh.devices                      # ndarray shaped like the mesh
+    moved = devs.swapaxes(0, ax).reshape(devs.shape[ax], -1)
+    for col in range(moved.shape[1]):
+        procs = {d.process_index for d in moved[:, col]}
+        if len(procs) > 1:
+            return True
+    return False
+
+
+def mesh_process_topology(mesh):
+    """Axis name → crosses-processes, for every axis of ``mesh``."""
+    return {name: axis_crosses_processes(mesh, name)
+            for name in mesh.axis_names}
+
+
+def enable_cpu_collectives() -> bool:
+    """Switch the CPU backend's cross-process collectives to gloo.
+
+    Multi-process CPU clusters fail at the first collective with
+    "Multiprocess computations aren't implemented on the CPU backend"
+    unless the gloo implementation is selected BEFORE the backend
+    initializes. The config knob exists on the JAX range this repo
+    targets but not on every release — returns False (rather than
+    raising) when it is absent or the backend is already up, so callers
+    can surface a clear bring-up error instead of the XLA one.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        return True
+    except (AttributeError, ValueError, RuntimeError):
+        return False
+
+
+def distributed_initialize(coordinator_address: str, num_processes: int,
+                           process_id: int) -> None:
+    """``jax.distributed.initialize`` across its signature drift.
+
+    Newer releases accept (and sometimes require) extra kwargs; the
+    three positional-capable basics have been stable, so pass exactly
+    those and let each release fill in its own defaults.
+    """
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def distributed_shutdown() -> None:
+    """Best-effort ``jax.distributed.shutdown`` (absent on old JAX)."""
+    fn = getattr(jax.distributed, "shutdown", None)
+    if fn is not None:
+        try:
+            fn()
+        except RuntimeError:
+            pass                      # never initialized / already down
 
 
 def set_mesh(mesh):

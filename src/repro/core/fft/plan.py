@@ -49,6 +49,15 @@ x-layout), ``fourstep1d`` (1-D). ``_infer`` picks by grid rank, and
 for 3-D grids picks ``pencil`` on ≥2-axis meshes and ``slab3d`` on
 1-axis meshes.
 
+**Topology awareness** (multi-host): every built schedule carries a
+host-crossing annotation per ``AllToAll`` (``FFTPlan.topology()``),
+the plan/tune caches key on per-device *process* placement — not just
+device ids — and ``decomp="measure"`` sweeps the layout-compatible
+decompositions (slab3d vs pencil for 3-D grids) and pins the fastest
+*for this topology*: one big cross-host exchange and two smaller
+ones order differently once all_to_all leaves the host (Verma et
+al., arXiv:2202.12756). See ``docs/multihost.md``.
+
 Real-input plans (``plan_rfft``, or ``real=True``) use the Hermitian
 half-spectrum schedules in ``rfft.py``: forward ``execute(x)`` maps a
 real field to a half-spectrum (re, im) pair, backward ``execute(re,
@@ -74,12 +83,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.fft import rfft as rfft_mod
 from repro.core.fft.dft import to_complex, to_pair
 from repro.core.fft.schedule import (CAPS, Schedule, build_schedule,
-                                     execute_schedule, overlap_site)
+                                     exchange_topology, execute_schedule,
+                                     overlap_site)
 
 FORWARD = "forward"
 BACKWARD = "backward"
 
-MEASURE = "measure"                   # backend sentinel: autotune
+MEASURE = "measure"                   # backend/decomp sentinel: autotune
+
+# decompositions the decomp="measure" sweep may substitute for each
+# other: same natural input/output layout contract per rank. The
+# cyclic/digit-permuted family (pencil_tf, fourstep1d) is excluded —
+# swapping one in would silently change the data layout the caller
+# sees, which is a correctness change, not a tuning choice.
+_SWEEP_DECOMPS = {2: ("slab",), 3: ("pencil", "slab3d")}
 
 # ---------------------------------------------------------------------------
 # Process-wide plan cache
@@ -87,13 +104,18 @@ MEASURE = "measure"                   # backend sentinel: autotune
 
 _PLAN_CACHE: Dict[tuple, "FFTPlan"] = {}
 _TUNE_CACHE: Dict[tuple, dict] = {}
+_DECOMP_CACHE: Dict[tuple, str] = {}
 _TUNE_SKIPS: List[dict] = []
 _STATS = {"hits": 0, "misses": 0}
 
 
 def _mesh_key(mesh: Mesh) -> tuple:
+    # process indices make the key TOPOLOGY-aware: the same device ids
+    # laid out across different hosts must not share cached tuning —
+    # a sweep's winner depends on which exchanges cross DCN
     return (tuple(mesh.shape.items()),
-            tuple(d.id for d in mesh.devices.flat))
+            tuple(d.id for d in mesh.devices.flat),
+            tuple(d.process_index for d in mesh.devices.flat))
 
 
 def _wire_name(wire_dtype):
@@ -114,7 +136,8 @@ def _plan_key(shape, direction, mesh, decomp, axis_names, backend,
 
 def plan_cache_stats() -> Dict[str, int]:
     return dict(_STATS, size=len(_PLAN_CACHE),
-                autotune_skipped=len(_TUNE_SKIPS))
+                autotune_skipped=len(_TUNE_SKIPS),
+                decomp_sweeps=len(_DECOMP_CACHE))
 
 
 def autotune_skips() -> List[dict]:
@@ -126,6 +149,7 @@ def autotune_skips() -> List[dict]:
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
     _TUNE_CACHE.clear()
+    _DECOMP_CACHE.clear()
     _TUNE_SKIPS.clear()
     _STATS["hits"] = _STATS["misses"] = 0
 
@@ -158,6 +182,13 @@ class FFTPlan:
                 inverse=self.direction == BACKWARD, backend=self.backend,
                 wire_dtype=self.wire_dtype, real=self.real)
         return self._sched
+
+    def topology(self) -> Tuple[dict, ...]:
+        """The plan's wire profile: one ``{axis_name, shards,
+        wire_dtype, crosses_hosts}`` dict per exchange, in execution
+        order. ``crosses_hosts=True`` exchanges pay DCN latency —
+        the signal behind the ``decomp="measure"`` sweep."""
+        return exchange_topology(self.schedule())
 
     def compile(self) -> "FFTPlan":
         sched = self.schedule()
@@ -242,6 +273,12 @@ def plan_dft(shape, direction: str, mesh: Mesh, *,
     process-wide plan cache, and ``backend="measure"`` autotuning.
     Identical arguments return the SAME compiled plan object."""
     shape = tuple(int(s) for s in shape)
+    if decomp == MEASURE:
+        decomp = _autotune_decomp(shape, direction, mesh, backend=backend,
+                                  overlap_chunks=overlap_chunks,
+                                  wire_dtype=wire_dtype,
+                                  real=real, batch_ndim=batch_ndim,
+                                  allow_reduced_wire=allow_reduced_wire)
     decomp, axis_names = _infer(shape, decomp, axis_names, mesh)
     wire = _wire_name(wire_dtype)
 
@@ -325,6 +362,76 @@ def _schedule_variants(shape, decomp, *, allow_reduced_wire) -> List[dict]:
         wires.append("bfloat16")
     return [{"backend": be, "overlap_chunks": ov, "wire_dtype": wr}
             for be in backends for ov in overlaps for wr in wires]
+
+
+def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
+                     wire_dtype, real, batch_ndim,
+                     allow_reduced_wire) -> str:
+    """``decomp="measure"``: time every layout-compatible decomposition
+    for this (grid, mesh TOPOLOGY, knobs) and return the fastest.
+
+    The sweep exists because the slab/pencil tradeoff inverts with
+    topology (one big exchange vs two smaller ones — which wins
+    depends on whether the exchanges cross hosts), so results cache
+    per ``_mesh_key`` — which includes per-device process indices —
+    and never leak between topologies. Candidates are timed under the
+    CALLER's knobs (overlap/wire can themselves invert the ordering,
+    so they are part of the race and of the cache key); with
+    ``backend="measure"`` each candidate is instead knob-tuned first
+    by ``_autotune``, making the comparison best-vs-best.
+    Ineligible/failed candidates land in ``autotune_skips()`` like any
+    other ruled-out variant."""
+    rank = len(shape)
+    dkey = (shape, direction, _mesh_key(mesh), real, batch_ndim,
+            backend, overlap_chunks, _wire_name(wire_dtype),
+            allow_reduced_wire)
+    if dkey in _DECOMP_CACHE:
+        return _DECOMP_CACHE[dkey]
+
+    candidates = _SWEEP_DECOMPS.get(rank)
+    if candidates is None:
+        # rank 1 has only the cyclic-layout four-step; nothing to sweep
+        return _infer(shape, None, None, mesh)[0]
+    best, best_t = None, float("inf")
+    for decomp in candidates:
+        caps = CAPS[decomp]
+        try:
+            if caps.mesh_axes > len(mesh.axis_names):
+                raise ValueError(
+                    f"{decomp} needs {caps.mesh_axes} mesh axes, mesh "
+                    f"has {len(mesh.axis_names)}")
+            if real and not caps.real:
+                raise ValueError(f"{decomp} has no r2c/c2r schedules")
+            axis_names = tuple(mesh.axis_names)[: caps.mesh_axes]
+            if backend == MEASURE:
+                tuned = _autotune(shape, direction, mesh, decomp,
+                                  axis_names, real=real,
+                                  batch_ndim=batch_ndim,
+                                  allow_reduced_wire=allow_reduced_wire)
+            else:
+                tuned = {"backend": backend,
+                         "overlap_chunks": overlap_chunks,
+                         "wire_dtype": wire_dtype}
+            cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
+                           tuned["backend"], tuned["overlap_chunks"],
+                           real, batch_ndim,
+                           _wire_name(tuned["wire_dtype"])).compile()
+            args = _dummy_args(shape, direction, mesh, decomp, axis_names,
+                               real, batch_ndim)
+            t = _time_plan(cand, args)
+        except Exception as err:  # noqa: BLE001 — candidate unsupported
+            _TUNE_SKIPS.append({
+                "shape": shape, "direction": direction, "decomp": decomp,
+                "real": real, "batch_ndim": batch_ndim,
+                "backend": backend, "sweep": "decomp",
+                "error": f"{type(err).__name__}: {err}"})
+            continue
+        if t < best_t:
+            best, best_t = decomp, t
+    if best is None:
+        best = _infer(shape, None, None, mesh)[0]
+    _DECOMP_CACHE[dkey] = best
+    return best
 
 
 def _autotune(shape, direction, mesh, decomp, axis_names, *, real,

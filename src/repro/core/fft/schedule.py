@@ -15,10 +15,14 @@ input/output ``PartitionSpec`` tails, executed by ONE generic
 * ``LocalRFFT(pad_to)`` / ``LocalIRFFT(n, half)`` — real (r2c / c2r)
   endcaps along the last axis; the half-spectrum is padded to
   ``pad_to`` (a multiple of the shard count) for the tiled all_to_all
-* ``AllToAll(axis_name, split, concat, shards, wire_dtype)`` — the
-  distribution exchange, with optional reduced-precision transport
-  (e.g. ``"bfloat16"`` halves the dominant collective bytes; compute
-  stays f32)
+* ``AllToAll(axis_name, split, concat, shards, wire_dtype,
+  crosses_hosts)`` — the distribution exchange, with optional
+  reduced-precision transport (e.g. ``"bfloat16"`` halves the dominant
+  collective bytes; compute stays f32) and a host-crossing annotation:
+  ``build_schedule`` marks every exchange with whether its mesh axis
+  spans processes (DCN) or stays on one host (ICI) —
+  ``exchange_topology`` summarizes a schedule's wire profile and the
+  planner sweeps decompositions per topology (``decomp="measure"``)
 * ``Twiddle(axis, axis_name, shards, sign)`` — the four-step
   inter-shard twiddle ``exp(sign·2πi·p·k/N)``, ``p`` = shard index
 * ``Reorder(op, axis[, parts])`` — named local index reorders
@@ -69,7 +73,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import axis_crosses_processes, shard_map
 from repro.core.fft.dft import cmul, fft_along
 
 WireSpec = Union[None, str, Tuple[Optional[str], ...]]
@@ -120,12 +124,22 @@ class LocalIRFFT:
 
 @dataclasses.dataclass(frozen=True)
 class AllToAll:
-    """Tiled all_to_all over one mesh axis, optional reduced wire."""
+    """Tiled all_to_all over one mesh axis, optional reduced wire.
+
+    ``crosses_hosts`` annotates whether this exchange's device ring
+    spans more than one process — DCN wire, not ICI. It is *metadata*
+    (filled in by ``annotate_topology`` from device placement; None =
+    unknown, e.g. a hand-built schedule): execution is identical either
+    way, but the planner records it and the autotuner's decomposition
+    sweep exists because of it — the slab/pencil tradeoff inverts once
+    the exchange crosses hosts (Verma et al., arXiv:2202.12756).
+    """
     axis_name: str
     split: int
     concat: int
     shards: int
     wire_dtype: Optional[str] = None        # dtype NAME (hashable)
+    crosses_hosts: Optional[bool] = None    # None = not annotated
 
     def _one(self, x):
         s, c = self.split % x.ndim, self.concat % x.ndim
@@ -530,12 +544,40 @@ _BUILDERS = {
 }
 
 
+def annotate_topology(sched: Schedule, mesh: Mesh) -> Schedule:
+    """Fill each ``AllToAll``'s ``crosses_hosts`` from ``mesh``'s
+    device placement. Purely metadata — the annotated schedule runs
+    identically — but it is what `exchange_topology` reports and what
+    the planner's per-topology decomposition sweep keys off."""
+    stages = tuple(
+        dataclasses.replace(
+            st, crosses_hosts=axis_crosses_processes(mesh, st.axis_name))
+        if isinstance(st, AllToAll) else st
+        for st in sched.stages)
+    return dataclasses.replace(sched, stages=stages)
+
+
+def exchange_topology(sched: Schedule) -> Tuple[dict, ...]:
+    """One summary dict per ``AllToAll`` stage, in execution order:
+    ``{axis_name, shards, wire_dtype, crosses_hosts}``. The
+    host-crossing flags are the schedule's *wire profile* — e.g. a
+    pencil whose first rotation stays on-host but whose second crosses
+    DCN reads ``(False, True)``. See ``docs/multihost.md`` for how to
+    read these when choosing a decomposition."""
+    return tuple({"axis_name": st.axis_name, "shards": st.shards,
+                  "wire_dtype": st.wire_dtype,
+                  "crosses_hosts": st.crosses_hosts}
+                 for st in sched.stages if isinstance(st, AllToAll))
+
+
 def build_schedule(decomp: str, shape: Tuple[int, ...], mesh: Mesh,
                    axis_names: Tuple[str, ...], *, inverse: bool = False,
                    backend: str = "auto", wire_dtype: WireSpec = None,
                    real: bool = False) -> Schedule:
     """One entry point from (decomp, knobs) to a runnable Schedule —
-    the planner's unit of sweeping."""
+    the planner's unit of sweeping. Every schedule built here comes
+    back topology-annotated (``AllToAll.crosses_hosts`` filled from
+    the mesh's device placement)."""
     caps = CAPS.get(decomp)
     if caps is None:
         raise ValueError(f"unknown decomposition {decomp!r}; "
@@ -551,15 +593,19 @@ def build_schedule(decomp: str, shape: Tuple[int, ...], mesh: Mesh,
                 f"not {decomp!r}")
         from repro.core.fft import rfft as rfft_mod
         if decomp == "slab":
-            return rfft_mod.rfft_slab_schedule(
+            sched = rfft_mod.rfft_slab_schedule(
                 shape[-1], mesh, axis_names[0], inverse=inverse,
                 backend=backend, wire_dtype=wire_dtype)
-        return rfft_mod.rfft_pencil_schedule(
-            shape[-1], mesh, tuple(axis_names[:2]), inverse=inverse,
-            backend=backend, wire_dtype=wire_dtype)
+        else:
+            sched = rfft_mod.rfft_pencil_schedule(
+                shape[-1], mesh, tuple(axis_names[:2]), inverse=inverse,
+                backend=backend, wire_dtype=wire_dtype)
+        return annotate_topology(sched, mesh)
     build = _BUILDERS[decomp]
     if caps.mesh_axes == 2:
-        return build(mesh, tuple(axis_names[:2]), inverse=inverse,
-                     backend=backend, wire_dtype=wire_dtype)
-    return build(mesh, axis_names[0], inverse=inverse, backend=backend,
-                 wire_dtype=wire_dtype)
+        sched = build(mesh, tuple(axis_names[:2]), inverse=inverse,
+                      backend=backend, wire_dtype=wire_dtype)
+    else:
+        sched = build(mesh, axis_names[0], inverse=inverse,
+                      backend=backend, wire_dtype=wire_dtype)
+    return annotate_topology(sched, mesh)

@@ -1,0 +1,211 @@
+"""M→N in-transit bridge — distinct producer and consumer meshes.
+
+The paper's future-work deployment (§2.1, "in-transit") separates the
+M processes producing data from the N processes analyzing it. The
+staged chain mode already reshards *within* one mesh; this module is
+the cross-mesh hop: a ``TransitBridge`` takes each field of a
+``BridgeData`` sharded over a **producer** mesh and delivers it
+sharded over a disjoint **consumer** mesh, where the FFT chain (or any
+consumer-side computation) runs without ever touching producer
+devices. ``launch/mesh.make_transit_meshes`` builds the two meshes;
+``tools/launch_multihost.py --demo transit`` runs the whole topology
+end to end on a real multi-process cluster.
+
+Two transports, picked by ``via`` (default ``"auto"``):
+
+* ``device_put`` — direct resharding. Valid only when this process
+  addresses every device of both meshes (the single-process case:
+  placeholder devices, or one host's GPUs split in two). Zero host
+  round-trip; XLA moves exactly the bytes that change owners.
+* ``host`` — the portable path for real multi-process clusters, where
+  neither side can even *construct* arrays on the other's devices.
+  Producer participants lower their addressable shards to host memory;
+  one ``process_allgather`` moves (buffer, ownership-mask) pairs
+  across the cluster; every process then reconstructs the global field
+  by taking, element-wise, the contribution of the lowest-ranked
+  process whose mask covers it — **bit-identical** by construction,
+  with replicated regions deduplicated deterministically; consumer
+  participants finally re-shard the reconstruction onto the consumer
+  mesh from their own addressable slices. Non-consumer processes get
+  ``None`` for the delivered arrays (they hold no piece of them).
+
+The multi-process call contract mirrors every other collective in the
+repo: ALL processes call ``send`` per field, producer participants
+passing the producer-mesh ``jax.Array``s, everyone else passing
+same-shaped placeholders (e.g. ``np.zeros``; only ``shape``/``dtype``
+are read). ``report()`` accounts fields, per-array bytes moved, wall
+seconds, and which transport ran — the in-transit analogue of the
+chain's reshard accounting.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.insitu.bridge import BridgeData
+
+VIAS = ("auto", "device_put", "host")
+
+
+def _mesh_addressable(mesh) -> bool:
+    me = jax.process_index()
+    return all(d.process_index == me for d in mesh.devices.flat)
+
+
+def _participates(mesh) -> bool:
+    me = jax.process_index()
+    return any(d.process_index == me for d in mesh.devices.flat)
+
+
+class TransitBridge:
+    """Move fields from a producer mesh onto a disjoint consumer mesh.
+
+    ``spec_map`` overrides the consumer-side ``PartitionSpec`` per
+    array name; ``default_spec`` covers the rest (default: shard the
+    leading axis over the consumer mesh's first axis when divisible,
+    else fully replicate — small monitor products replicate, big
+    fields split). Meshes must be device-disjoint: sharing devices
+    would make "in transit" a no-op and the accounting a lie.
+    """
+
+    def __init__(self, producer_mesh, consumer_mesh, *,
+                 spec_map: Optional[Dict[str, P]] = None,
+                 default_spec: Optional[P] = None, via: str = "auto"):
+        if via not in VIAS:
+            raise ValueError(f"via must be one of {VIAS}, got {via!r}")
+        overlap = ({d.id for d in producer_mesh.devices.flat}
+                   & {d.id for d in consumer_mesh.devices.flat})
+        if overlap:
+            raise ValueError(
+                f"producer and consumer meshes share devices {sorted(overlap)}"
+                f" — transit requires disjoint meshes")
+        self.producer_mesh = producer_mesh
+        self.consumer_mesh = consumer_mesh
+        self.spec_map = dict(spec_map or {})
+        self.default_spec = default_spec
+        if via == "auto":
+            via = ("device_put"
+                   if (_mesh_addressable(producer_mesh)
+                       and _mesh_addressable(consumer_mesh)) else "host")
+        self.via = via
+        self._fields = 0
+        self._bytes = 0
+        self._wall_s = 0.0
+        self._per_array: Dict[str, int] = {}
+
+    # -- participation ------------------------------------------------------
+    def is_producer(self) -> bool:
+        """True when this process owns producer-mesh devices."""
+        return _participates(self.producer_mesh)
+
+    def is_consumer(self) -> bool:
+        """True when this process owns consumer-mesh devices — i.e.
+        whether ``send``'s outputs are usable here."""
+        return _participates(self.consumer_mesh)
+
+    # -- spec resolution ----------------------------------------------------
+    def _consumer_sharding(self, name: str, shape) -> NamedSharding:
+        spec = self.spec_map.get(name, self.default_spec)
+        if spec is None:
+            ax0 = self.consumer_mesh.axis_names[0]
+            n0 = self.consumer_mesh.shape[ax0]
+            spec = P(ax0) if shape and shape[0] % n0 == 0 else P()
+        return NamedSharding(self.consumer_mesh, spec)
+
+    # -- transports ---------------------------------------------------------
+    def _move_device_put(self, name: str, x):
+        return jax.device_put(x, self._consumer_sharding(name, x.shape))
+
+    def _move_host(self, name: str, x):
+        """The allgather hop (see module docstring). ``x`` is a
+        producer-mesh array on producer participants and a shape/dtype
+        placeholder everywhere else."""
+        from jax.experimental.multihost_utils import process_allgather
+
+        shape, dtype = tuple(x.shape), np.dtype(x.dtype)
+        buf = np.zeros(shape, dtype)
+        mask = np.zeros(shape, np.uint8)
+        shards = getattr(x, "addressable_shards", None)
+        if shards is not None and isinstance(x, jax.Array):
+            for s in shards:
+                buf[s.index] = np.asarray(s.data)
+                mask[s.index] = 1
+        gbuf = np.asarray(process_allgather(buf))
+        gmask = np.asarray(process_allgather(mask))
+        if gbuf.shape == shape:          # single process: no leading axis
+            gbuf, gmask = gbuf[None], gmask[None]
+        full = np.zeros(shape, dtype)
+        filled = np.zeros(shape, bool)
+        for p in range(gbuf.shape[0]):
+            take = gmask[p].astype(bool) & ~filled
+            full[take] = gbuf[p][take]
+            filled |= take
+        if not filled.all():
+            raise ValueError(
+                f"transit array {name!r}: no process contributed "
+                f"{int((~filled).sum())} of {filled.size} elements — was "
+                f"send() called with the producer-mesh array on every "
+                f"producer participant?")
+        if not self.is_consumer():
+            return None
+        sh = self._consumer_sharding(name, shape)
+        local = [jax.device_put(full[idx], d) for d, idx
+                 in sh.addressable_devices_indices_map(shape).items()]
+        return jax.make_array_from_single_device_arrays(shape, sh, local)
+
+    # -- the hop ------------------------------------------------------------
+    def send(self, data: BridgeData) -> BridgeData:
+        """Deliver one field's arrays onto the consumer mesh.
+
+        Returns a ``BridgeData`` with the same keys/structure whose
+        leaves live on the consumer mesh (``None`` leaves on
+        non-consumer processes under the ``host`` transport). Grid
+        metadata, step, domain and layout tags pass through untouched —
+        transit moves bytes, it does not reinterpret them."""
+        t0 = time.perf_counter()
+        move = (self._move_device_put if self.via == "device_put"
+                else self._move_host)
+        out: Dict[str, Any] = {}
+        for name, v in data.arrays.items():
+            moved = jax.tree.map(lambda x, n=name: move(n, x), v)
+            nbytes = sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+                         for x in jax.tree.leaves(v))
+            self._per_array[name] = self._per_array.get(name, 0) + nbytes
+            self._bytes += nbytes
+            out[name] = moved
+        self._fields += 1
+        self._wall_s += time.perf_counter() - t0
+        return data.replace(arrays=out,
+                            meta={**data.meta, "transit_via": self.via})
+
+    # -- accounting ---------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the accounting (fields/bytes/wall) without touching
+        configuration — call after warm-up so ``report()`` covers
+        steady state, matching ``InSituChain.reset_stats()``."""
+        self._fields = 0
+        self._bytes = 0
+        self._wall_s = 0.0
+        self._per_array.clear()
+
+    def report(self) -> Dict[str, Any]:
+        """Transit accounting: fields/bytes/seconds moved, transport,
+        and both meshes' process spans — the M→N analogue of
+        ``InSituChain.marshaling_report()``'s reshard accounting."""
+        def span(mesh):
+            return {"shape": dict(mesh.shape),
+                    "processes": sorted({d.process_index
+                                         for d in mesh.devices.flat})}
+        return {
+            "via": self.via,
+            "fields": self._fields,
+            "bytes_moved": self._bytes,
+            "bytes_per_array": dict(self._per_array),
+            "wall_s": self._wall_s,
+            "producer": span(self.producer_mesh),
+            "consumer": span(self.consumer_mesh),
+        }

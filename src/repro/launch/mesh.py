@@ -1,25 +1,54 @@
-"""Production mesh construction.
+"""Mesh construction — single-host, production, and multi-host DCN×ICI.
 
-A function (not a module-level constant) so importing this module never
-touches jax device state. The dry-run entry point sets
-``--xla_force_host_platform_device_count=512`` before any jax import;
-everything else in the repo sees the real (single) device.
+Everything here is a function (not a module-level constant) so
+importing this module never touches jax device state: the dry-run
+entry point sets ``--xla_force_host_platform_device_count=512`` before
+any jax import, and everything else in the repo sees the real device
+set (which, after ``runtime.cluster.init_cluster()``, may span several
+processes).
+
+Three constructors, by deployment shape:
+
+* ``make_host_mesh`` — a small mesh over whatever devices exist
+  (tests, examples, the reduced-config drivers).
+* ``make_production_mesh`` — the fixed full-fleet shapes the dry-run
+  compiles the big configs against.
+* ``make_multihost_mesh`` — the multi-process shape: explicit
+  **DCN axes** (outer, cross-host — collectives over them traverse the
+  data-center network) × **ICI axes** (inner, within one host —
+  collectives stay on the local interconnect). Devices are laid out
+  process-major so the DCN axes really do land on process boundaries;
+  ``describe_mesh``/``runtime.cluster.mesh_process_topology`` verify
+  the result, and the FFT schedule engine annotates each ``AllToAll``
+  with whether its axis crosses hosts (see ``docs/multihost.md``).
 """
 from __future__ import annotations
 
-import jax
+from typing import Dict, Optional, Sequence, Tuple
 
-from repro.compat import make_mesh
+import jax
+import numpy as np
+
+from repro.compat import (make_explicit_mesh, make_mesh,
+                          mesh_process_topology)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The full-fleet shapes the dry-run compiles the big configs
+    against: (data, model) = (16, 16), with a leading pod axis when
+    ``multi_pod``. Requires that many real devices at run time."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
-    """Small mesh over whatever devices exist (tests/examples)."""
+    """Small mesh over whatever devices exist (tests/examples).
+
+    Falls back to a 1-D layout over however many devices are present
+    when the requested shape doesn't fit — callers get *a* mesh, not
+    an error, because the reduced-config paths only need axis names to
+    resolve."""
     n = 1
     for s in shape:
         n *= s
@@ -27,3 +56,89 @@ def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     if len(devs) < n:
         shape = (len(devs),) + (1,) * (len(axes) - 1)
     return make_mesh(shape, axes)
+
+
+def _process_major_devices() -> np.ndarray:
+    """All devices ordered (process_index, id)-major — the order that
+    makes leading mesh axes cross processes LAST possible and trailing
+    axes stay within one process. Reshaping this array row-major into
+    (DCN…, ICI…) puts process boundaries exactly at the DCN axes."""
+    return np.array(sorted(jax.devices(),
+                           key=lambda d: (d.process_index, d.id)))
+
+
+def make_multihost_mesh(dcn_axes: Optional[Dict[str, int]] = None,
+                        ici_axes: Optional[Dict[str, int]] = None):
+    """Build a mesh with explicit DCN×ICI axis splits.
+
+    ``dcn_axes``/``ici_axes`` are ordered ``{axis_name: size}`` dicts;
+    the mesh's axis order is DCN axes first (outermost, cross-host),
+    then ICI axes. Defaults: one DCN axis ``"dcn"`` of size
+    ``process_count`` and one ICI axis ``"data"`` over the per-process
+    devices — i.e. the natural (hosts × local devices) grid.
+
+    The product of all sizes must equal the global device count, and
+    each DCN extent should divide the process count (a "DCN" axis that
+    fits inside one host is legal but pointless — ``describe_mesh``
+    will show it as non-crossing).
+
+    Single-process runs work too (process_count = 1, DCN axes of size
+    1 or collapsed into the default), so the same launch code serves
+    both shapes.
+    """
+    devs = _process_major_devices()
+    nproc = jax.process_count()
+    if dcn_axes is None:
+        dcn_axes = {"dcn": nproc}
+    if ici_axes is None:
+        per = len(devs) // max(1, int(np.prod(list(dcn_axes.values()))))
+        ici_axes = {"data": per}
+    names = tuple(dcn_axes) + tuple(ici_axes)
+    shape = tuple(dcn_axes.values()) + tuple(ici_axes.values())
+    total = int(np.prod(shape))
+    if total != len(devs):
+        raise ValueError(
+            f"mesh shape {dict(zip(names, shape))} needs {total} devices, "
+            f"cluster has {len(devs)} "
+            f"({nproc} process(es) × {len(devs) // max(nproc, 1)} local)")
+    # exact placement: jax.make_mesh may reorder devices, which would
+    # silently put process boundaries on the wrong (ICI) axes
+    return make_explicit_mesh(devs.reshape(shape), names)
+
+
+def make_transit_meshes(m: int, n: int, *,
+                        producer_axes: Sequence[str] = ("data",),
+                        consumer_axes: Sequence[str] = ("data",)
+                        ) -> Tuple[object, object]:
+    """Disjoint producer/consumer meshes for the M→N in-transit path
+    (``core/insitu/transit.TransitBridge``): the first ``m`` devices
+    (process-major order) produce, the last ``n`` consume. 1-D meshes
+    over each group; reshape on your own for fancier splits. Requires
+    ``m + n <=`` the global device count — producer and consumer must
+    not share devices, that is the whole point."""
+    devs = _process_major_devices()
+    if m + n > len(devs):
+        raise ValueError(f"transit split {m}+{n} exceeds "
+                         f"{len(devs)} global devices")
+    if m < 1 or n < 1:
+        raise ValueError("both meshes need at least one device")
+    pshape = (m,) + (1,) * (len(producer_axes) - 1)
+    cshape = (n,) + (1,) * (len(consumer_axes) - 1)
+    prod = make_explicit_mesh(devs[:m].reshape(pshape),
+                              tuple(producer_axes))
+    cons = make_explicit_mesh(devs[-n:].reshape(cshape),
+                              tuple(consumer_axes))
+    return prod, cons
+
+
+def describe_mesh(mesh) -> Dict[str, object]:
+    """Operator-facing mesh summary: shape, axis → crosses-hosts, and
+    process span — the first thing ``docs/multihost.md`` says to print
+    when a schedule is slower than expected."""
+    procs = sorted({d.process_index for d in mesh.devices.flat})
+    return {
+        "shape": dict(mesh.shape),
+        "axis_crosses_hosts": mesh_process_topology(mesh),
+        "processes": procs,
+        "devices": int(mesh.devices.size),
+    }

@@ -30,15 +30,19 @@ from repro import compat
 from repro.configs import registry
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
+from repro.runtime.cluster import (add_cluster_args, config_from_args,
+                                   init_cluster)
 from repro.sharding.policy import make_policy
 
 
-def _build_monitor(args, cfg):
+def _build_monitor(args, cfg, bridge=None):
     """The pipelined in-situ chain the decode loop feeds: one batched
     field of ``--monitor-batch`` stacked logit snapshots per submit.
     Warmed on zeros before returning — trace/compile and the chain's
     device-probe calibration must not land inside the timed decode
-    loop."""
+    loop. With ``bridge`` (the M→N in-transit split) the warm-up also
+    rides the bridge, so the analysis chain compiles against
+    consumer-mesh inputs from the first real submit."""
     from pathlib import Path
 
     from repro.core.insitu.bridge import BridgeData, GridMeta
@@ -60,10 +64,20 @@ def _build_monitor(args, cfg):
             (args.monitor_batch, args.batch, cfg.vocab_size),
             jnp.float32)},
         step=0, meta={"primary": "field"})
+    if bridge is not None:
+        # send() is collective — every process calls it — but only
+        # consumer participants receive the arrays (host transport
+        # hands producers None leaves), so only they warm the chain
+        warm = bridge.send(warm)
+        if not bridge.is_consumer():
+            bridge.reset_stats()  # warm-up must not skew the report
+            return chain
     chain.execute(warm)           # compile the fused device program
     chain.execute(warm)           # consume the device-probe block
     chain.drain()
     chain.reset_stats()
+    if bridge is not None:
+        bridge.reset_stats()      # warm-up must not skew the report
     writer = chain.endpoints[-1]  # drop the warm-up artifacts
     for f in writer.written:
         Path(f).unlink(missing_ok=True)
@@ -85,12 +99,36 @@ def main(argv=None):
     ap.add_argument("--monitor-batch", type=int, default=4,
                     help="snapshots batched into one in-flight submit")
     ap.add_argument("--monitor-dir", default="results/serve_monitor")
+    ap.add_argument("--transit-consumers", type=int, default=0,
+                    metavar="N",
+                    help="in-transit M→N split: decode on all but the "
+                         "last N devices and run the logits monitor on "
+                         "a disjoint N-device consumer mesh (0 = "
+                         "analyze in place)")
+    add_cluster_args(ap)
     args = ap.parse_args(argv)
+    # multi-process bring-up (env/flag-driven; single-process no-op)
+    init_cluster(config_from_args(args))
 
     cfg = (registry.get_reduced(args.arch) if args.reduced
            else registry.get_config(args.arch))
     assert cfg.family != "encdec", "use whisper serve example for enc-dec"
-    mesh = make_host_mesh()
+    transit_bridge = None
+    if args.transit_consumers:
+        from repro.core.insitu.transit import TransitBridge
+        from repro.launch.mesh import make_transit_meshes
+        ndev = len(jax.devices())
+        if args.transit_consumers >= ndev:
+            raise SystemExit(
+                f"--transit-consumers {args.transit_consumers} leaves no "
+                f"decode devices (have {ndev})")
+        producer_mesh, consumer_mesh = make_transit_meshes(
+            ndev - args.transit_consumers, args.transit_consumers,
+            producer_axes=("data", "model"), consumer_axes=("data",))
+        mesh = producer_mesh
+        transit_bridge = TransitBridge(producer_mesh, consumer_mesh)
+    else:
+        mesh = make_host_mesh()
     policy = make_policy(mesh, global_batch=args.batch)
 
     key = jax.random.PRNGKey(args.seed)
@@ -104,7 +142,8 @@ def main(argv=None):
                                               cache_len=cache_len))
     decode = jax.jit(lambda p, t, s: lm.decode_step(cfg, p, t, s, policy))
 
-    monitor = _build_monitor(args, cfg) if args.monitor_every else None
+    monitor = (_build_monitor(args, cfg, transit_bridge)
+               if args.monitor_every else None)
     staged = []                 # snapshots awaiting an in-flight submit
     submits = 0
 
@@ -128,13 +167,15 @@ def main(argv=None):
                 # never waits for the analysis
                 staged.append(logits[:, -1])
                 if len(staged) == args.monitor_batch:
-                    submits += _submit_monitor(monitor, staged, submits)
+                    submits += _submit_monitor(monitor, staged, submits,
+                                               transit_bridge)
         jax.block_until_ready(logits)
         t_decode = time.perf_counter() - t0
         if monitor is not None and staged:
             # trailing partial batch: a different leading dim means a
             # fresh trace — flush it outside the timed decode window
-            submits += _submit_monitor(monitor, staged, submits)
+            submits += _submit_monitor(monitor, staged, submits,
+                                       transit_bridge)
 
     gen = np.concatenate(out_tokens, axis=1)
     report = {
@@ -160,19 +201,28 @@ def main(argv=None):
             "backpressure_ms": round(
                 pipe.get("backpressure_s", 0.0) * 1e3, 2),
         }
+    if transit_bridge is not None:
+        report["transit"] = transit_bridge.report()
     print(json.dumps(report))
     return report
 
 
-def _submit_monitor(chain, staged, submit_idx) -> int:
+def _submit_monitor(chain, staged, submit_idx, bridge=None) -> int:
     """Stack the staged snapshots into one batched BridgeData and hand
-    it to the pipelined chain (returns immediately; 1 = one submit)."""
+    it to the pipelined chain (returns immediately; 1 = one submit).
+    With ``bridge`` the batched field first hops onto the consumer
+    mesh, so the chain's device stages run off the decode devices."""
     from repro.core.insitu.bridge import BridgeData
 
     field = jnp.stack(staged)
     staged.clear()
-    chain.execute(BridgeData(arrays={"field": field}, step=submit_idx,
-                             meta={"primary": "field"}))
+    payload = BridgeData(arrays={"field": field}, step=submit_idx,
+                         meta={"primary": "field"})
+    if bridge is not None:
+        payload = bridge.send(payload)
+        if not bridge.is_consumer():
+            return 1              # producers hold None leaves, no chain
+    chain.execute(payload)
     return 1
 
 

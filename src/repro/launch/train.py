@@ -30,6 +30,8 @@ from repro.data import synthetic
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import lm
 from repro.optim.adamw import AdamW, warmup_cosine
+from repro.runtime.cluster import (add_cluster_args, config_from_args,
+                                   init_cluster)
 from repro.runtime.fault import run_with_restarts
 from repro.sharding.policy import make_policy
 from repro.train import step as train_step_mod
@@ -52,16 +54,50 @@ def main(argv=None):
                     help="persist per-report gradient spectra through a "
                          "pipelined host-offload chain (the .npy writes "
                          "overlap the next train step)")
+    ap.add_argument("--transit-consumers", type=int, default=0,
+                    metavar="N",
+                    help="in-transit M→N split: train on all but the "
+                         "last N devices and deliver the in-situ "
+                         "spectra to a disjoint N-device consumer mesh "
+                         "through core/insitu/transit.TransitBridge "
+                         "(0 = analyze in place)")
     ap.add_argument("--fail-at", type=int, nargs="*", default=None,
                     help="inject failures at these steps (FT test)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    add_cluster_args(ap)
     args = ap.parse_args(argv)
+    # multi-process bring-up (env/flag-driven; single-process no-op) —
+    # must precede the first device query below
+    init_cluster(config_from_args(args))
+    if jax.process_count() > 1:
+        # every process snapshots (replicated state, same bytes), so
+        # sharing one directory is a tmp-dir rename race — give each
+        # process its own
+        args.ckpt_dir = str(Path(args.ckpt_dir)
+                            / f"proc{jax.process_index()}")
 
     cfg = (registry.get_reduced(args.arch) if args.reduced
            else registry.get_config(args.arch))
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_host_mesh())
+    transit_bridge = None
+    if args.transit_consumers:
+        # M→N in-transit: the model trains on a producer mesh that
+        # excludes the last N devices; spectra hop to the consumer mesh
+        from repro.core.insitu.transit import TransitBridge
+        from repro.launch.mesh import make_transit_meshes
+        ndev = len(jax.devices())
+        if args.transit_consumers >= ndev:
+            raise SystemExit(
+                f"--transit-consumers {args.transit_consumers} leaves no "
+                f"producer devices (have {ndev})")
+        producer_mesh, consumer_mesh = make_transit_meshes(
+            ndev - args.transit_consumers, args.transit_consumers,
+            producer_axes=("data", "model"), consumer_axes=("data",))
+        mesh = producer_mesh
+        transit_bridge = TransitBridge(producer_mesh, consumer_mesh)
+    else:
+        mesh = (make_production_mesh() if args.production_mesh
+                else make_host_mesh())
     policy = make_policy(mesh, global_batch=args.batch)
 
     opt = AdamW(warmup_cosine(args.lr, max(args.steps // 20, 1),
@@ -127,8 +163,20 @@ def main(argv=None):
             # stay one entry per step, in step order.
             spectra_last[0] = monitor_step
             from repro.core.insitu.bridge import BridgeData
-            spectra_chain.execute(BridgeData(
-                arrays=dict(metrics["insitu"]), step=monitor_step))
+            payload = BridgeData(arrays=dict(metrics["insitu"]),
+                                 step=monitor_step)
+            if transit_bridge is not None:
+                # hop onto the consumer mesh: the writer chain's work
+                # (and any future consumer-side analysis) leaves the
+                # training devices entirely. send() is collective —
+                # every process calls it — but only consumer
+                # participants receive the arrays (host transport
+                # hands producers None leaves), so only they run the
+                # chain
+                payload = transit_bridge.send(payload)
+                if not transit_bridge.is_consumer():
+                    return
+            spectra_chain.execute(payload)
         if step % 10 == 0 or step <= 2:
             extra = ""
             if "insitu" in metrics:
@@ -159,6 +207,8 @@ def main(argv=None):
             spectra_chain.finalize()["writer"]["files"])
         out["spectra_backpressure_ms"] = round(
             pipe.get("backpressure_s", 0.0) * 1e3, 2)
+    if transit_bridge is not None:
+        out["transit"] = transit_bridge.report()
     print(json.dumps(out, default=str))
     return out
 

@@ -1,0 +1,178 @@
+"""Multi-process cluster bootstrap — ``jax.distributed`` made boring.
+
+Everything in this repo below the launch layer is already written
+against *global* meshes and collectives; the only thing standing
+between the single-host reproduction and the paper's actual deployment
+shape (an FFT running across the machines producing the data) is
+process bring-up. This module owns exactly that:
+
+* **Discovery** — ``ClusterConfig.from_env()`` reads the
+  ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID``
+  environment contract that ``tools/launch_multihost.py`` exports, and
+  ``add_cluster_args``/``config_from_args`` expose the same knobs as
+  CLI flags for schedulers that prefer argv over env.
+* **Initialization** — ``init_cluster()`` is idempotent, a no-op for
+  single-process runs, and routes every drifting JAX API through
+  ``repro.compat`` (gloo CPU collectives, ``distributed.initialize``
+  signature drift). It must run BEFORE the first JAX backend use; on
+  CPU the per-process device count additionally needs
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` set before
+  the first ``import jax`` (the launcher does both).
+* **Topology queries** — ``axis_crosses_processes(mesh, axis)`` is the
+  primitive behind the schedule engine's host-crossing ``AllToAll``
+  annotation (see ``core/fft/schedule.py``): an exchange over a mesh
+  axis whose device ring spans more than one process pays DCN latency,
+  not ICI, which is exactly the regime where the slab/pencil tradeoff
+  inverts (Verma et al., arXiv:2202.12756).
+
+Deployment guide with the full bootstrap walkthrough:
+``docs/multihost.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional
+
+import jax
+
+from repro import compat
+
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+_STATE: Dict[str, object] = {"initialized": False, "config": None}
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """One process's view of the cluster.
+
+    ``coordinator`` is ``host:port`` of process 0's coordination
+    service (every process passes the SAME address, including process
+    0 itself); ``num_processes``/``process_id`` complete the contract.
+    The default instance describes a single-process run, for which
+    ``init_cluster`` does nothing — launch code can call it
+    unconditionally.
+    """
+    coordinator: Optional[str] = None
+    num_processes: int = 1
+    process_id: int = 0
+
+    @property
+    def multiprocess(self) -> bool:
+        return self.num_processes > 1
+
+    @classmethod
+    def from_env(cls, env: Optional[Dict[str, str]] = None
+                 ) -> "ClusterConfig":
+        """Read the ``REPRO_*`` environment contract (the launcher's
+        export format). Unset variables yield the single-process
+        default; a coordinator with no process count is an error (a
+        half-configured cluster should fail loudly at bring-up, not
+        hang at the first collective)."""
+        e = os.environ if env is None else env
+        coord = e.get(ENV_COORDINATOR) or None
+        nprocs = int(e.get(ENV_NUM_PROCESSES, "1"))
+        pid = int(e.get(ENV_PROCESS_ID, "0"))
+        if coord is not None and ENV_NUM_PROCESSES not in e:
+            raise ValueError(
+                f"{ENV_COORDINATOR} is set but {ENV_NUM_PROCESSES} is "
+                f"not — export both (and {ENV_PROCESS_ID} per process)")
+        if nprocs > 1 and ENV_PROCESS_ID not in e:
+            # without an explicit rank every process defaults to 0 and
+            # bring-up deadlocks waiting for the other ranks
+            raise ValueError(
+                f"{ENV_NUM_PROCESSES}={nprocs} but {ENV_PROCESS_ID} is "
+                f"not set — export a distinct rank (0..{nprocs - 1}) "
+                f"per process")
+        return cls(coordinator=coord, num_processes=nprocs, process_id=pid)
+
+
+def add_cluster_args(parser) -> None:
+    """Attach the flag-driven discovery knobs to an argparse parser
+    (the env contract's CLI twin; flags win over env when both set)."""
+    parser.add_argument("--coordinator", default=None,
+                        help="host:port of process 0's coordination "
+                             "service (default: $REPRO_COORDINATOR)")
+    parser.add_argument("--num-processes", type=int, default=None,
+                        help="total processes in the cluster "
+                             "(default: $REPRO_NUM_PROCESSES)")
+    parser.add_argument("--process-id", type=int, default=None,
+                        help="this process's rank "
+                             "(default: $REPRO_PROCESS_ID)")
+
+
+def config_from_args(args, env: Optional[Dict[str, str]] = None
+                     ) -> ClusterConfig:
+    """Merge ``add_cluster_args`` flags over the env contract."""
+    cfg = ClusterConfig.from_env(env)
+    coord = getattr(args, "coordinator", None)
+    nprocs = getattr(args, "num_processes", None)
+    pid = getattr(args, "process_id", None)
+    return ClusterConfig(
+        coordinator=coord if coord is not None else cfg.coordinator,
+        num_processes=nprocs if nprocs is not None else cfg.num_processes,
+        process_id=pid if pid is not None else cfg.process_id)
+
+
+def init_cluster(config: Optional[ClusterConfig] = None) -> ClusterConfig:
+    """Initialize ``jax.distributed`` from ``config`` (default:
+    ``ClusterConfig.from_env()``). Idempotent: the first call wins and
+    later calls return its config (re-initializing a live distributed
+    runtime is not supported by JAX). Single-process configs skip
+    backend initialization entirely, so every entry point can call this
+    unconditionally at startup."""
+    if _STATE["initialized"]:
+        return _STATE["config"]          # type: ignore[return-value]
+    cfg = ClusterConfig.from_env() if config is None else config
+    if cfg.multiprocess:
+        if cfg.coordinator is None:
+            raise ValueError(
+                "multi-process ClusterConfig needs a coordinator "
+                "address (host:port of process 0)")
+        # must precede backend init or CPU collectives stay unimplemented
+        compat.enable_cpu_collectives()
+        compat.distributed_initialize(cfg.coordinator, cfg.num_processes,
+                                      cfg.process_id)
+    _STATE["initialized"] = True
+    _STATE["config"] = cfg
+    return cfg
+
+
+def is_initialized() -> bool:
+    return bool(_STATE["initialized"])
+
+
+def shutdown_cluster() -> None:
+    """Tear down the distributed runtime (tests/launcher epilogue);
+    safe to call when never initialized."""
+    cfg = _STATE["config"]
+    if cfg is not None and cfg.multiprocess:  # type: ignore[union-attr]
+        compat.distributed_shutdown()
+    _STATE["initialized"] = False
+    _STATE["config"] = None
+
+
+def cluster_info() -> Dict[str, object]:
+    """This process's runtime view — what ``docs/multihost.md`` tells
+    operators to log first when a bring-up misbehaves."""
+    return {
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": len(jax.local_devices()),
+        "global_devices": len(jax.devices()),
+        "platform": jax.devices()[0].platform,
+        "initialized": is_initialized(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mesh topology queries — which axes cross hosts
+# ---------------------------------------------------------------------------
+# The primitives live in repro.compat (below every layer, so the core
+# FFT schedule engine can use them without importing runtime); this is
+# their documented runtime-facing home.
+axis_crosses_processes = compat.axis_crosses_processes
+mesh_process_topology = compat.mesh_process_topology

@@ -61,6 +61,50 @@ def test_trend_check_noisy_prefix_loosens_threshold(tmp_path):
     assert trend_check.main(argv[:3] + [cur2] + argv[4:]) == 1
 
 
+def test_trend_check_median_smooths_outlier_baseline(tmp_path):
+    """Multi-point trend smoothing: one noisy artifact in the history
+    must neither manufacture a regression (fast outlier) nor mask one
+    (slow outlier) — the median of the last N wins."""
+    runs = tmp_path / "prev_bench"
+    for i, us in enumerate([100.0, 102.0, 20.0]):     # one fast outlier
+        d = runs / f"run{i}"
+        d.mkdir(parents=True)
+        _bench_json(d / "BENCH_fft.json", {"fft_a": us})
+    # 110 vs median 100 is fine; vs the 20us outlier it would be 5.5x
+    cur = _bench_json(tmp_path / "cur.json", {"fft_a": 110.0})
+    assert trend_check.main(["--baseline", str(runs), "--current", cur,
+                             "--threshold", "0.2"]) == 0
+    # a real regression against the median still fails
+    cur2 = _bench_json(tmp_path / "cur2.json", {"fft_a": 150.0})
+    assert trend_check.main(["--baseline", str(runs), "--current", cur2,
+                             "--threshold", "0.2"]) == 1
+
+
+def test_trend_check_median_row_union(tmp_path):
+    """Rows missing from some artifacts take the median over the
+    artifacts that have them; an unreadable artifact is dropped, not
+    fatal."""
+    runs = tmp_path / "prev"
+    runs.mkdir()
+    _bench_json(runs / "a.json", {"fft_a": 100.0})
+    _bench_json(runs / "b.json", {"fft_a": 200.0, "fft_b": 50.0})
+    (runs / "c.json").write_text("{corrupt")
+    base, used = trend_check.median_baseline(
+        trend_check.collect_baseline_files([str(runs)]))
+    assert used == 2
+    assert base == {"fft_a": 150.0, "fft_b": 50.0}
+
+
+def test_trend_check_repeatable_baseline_flag(tmp_path):
+    b1 = _bench_json(tmp_path / "b1.json", {"fft_a": 100.0})
+    b2 = _bench_json(tmp_path / "b2.json", {"fft_a": 300.0})
+    b3 = _bench_json(tmp_path / "b3.json", {"fft_a": 120.0})
+    cur = _bench_json(tmp_path / "cur.json", {"fft_a": 130.0})
+    argv = ["--baseline", b1, "--baseline", b2, "--baseline", b3,
+            "--current", cur, "--threshold", "0.2"]
+    assert trend_check.main(argv) == 0                # median 120
+
+
 def test_trend_check_ignores_error_rows(tmp_path):
     base = _bench_json(tmp_path / "base.json", {"fft_a": -1.0})
     cur = _bench_json(tmp_path / "cur.json", {"fft_a": 100.0})

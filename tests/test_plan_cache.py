@@ -52,7 +52,8 @@ def test_plan_cache_hit_and_miss_identity():
     planmod.plan_cache_clear()
     assert planmod.plan_cache_stats() == {"hits": 0, "misses": 0,
                                           "size": 0,
-                                          "autotune_skipped": 0}
+                                          "autotune_skipped": 0,
+                                          "decomp_sweeps": 0}
 
 
 def test_autotune_records_skipped_variants():

@@ -1,0 +1,359 @@
+"""Multi-process cluster launcher — one host, N real JAX processes.
+
+Spawns ``--nprocs`` Python processes, each a full ``jax.distributed``
+participant (own backend, own devices, gloo CPU collectives), wires
+the ``REPRO_*`` coordinator-discovery env contract that
+``repro.runtime.cluster`` reads, and waits for all of them. This is
+the same bootstrap a real multi-node deployment uses — only the
+process placement (here: one machine) differs. See
+``docs/multihost.md`` for the deployment guide.
+
+Modes:
+
+* ``--demo fft|transit|all`` (default ``all``) — the built-in
+  end-to-end demos, re-executing THIS file per process:
+    - ``fft``: builds a DCN×ICI mesh with ``make_multihost_mesh``,
+      runs pencil + slab3d distributed FFT plans whose ``AllToAll``
+      stages cross processes, checks them against the single-process
+      ``np.fft.fftn`` oracle, and runs the planner's per-topology
+      ``decomp="measure"`` sweep.
+    - ``transit``: splits the cluster into disjoint producer/consumer
+      meshes, pushes a field through ``TransitBridge`` (host
+      transport), asserts bit-identical delivery, and runs a
+      consumer-mesh FFT on the delivered field.
+* ``-- CMD ...`` — run an arbitrary command per process under the
+  cluster env (the command must call
+  ``repro.runtime.cluster.init_cluster()`` early, as the launch
+  drivers do).
+
+Process 0 emits ``BENCHROW,name,us_per_call,derived`` lines;
+``--json PATH`` collects them into a BENCH-style JSON artifact
+(``benchmarks/trend_check.py``-compatible rows) so CI tracks
+multi-process wall-times alongside the single-process trajectory.
+
+Exit codes: 0 = success, 99 = multi-process unsupported in this
+environment (tests translate this into SKIP), anything else = failure.
+
+Usage:
+  python tools/launch_multihost.py --nprocs 2 [--devices-per-proc 2]
+         [--demo fft|transit|all] [--json BENCH_multihost.json]
+  python tools/launch_multihost.py --nprocs 2 -- python my_script.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+
+UNSUPPORTED_RC = 99
+UNSUPPORTED_MARK = "MULTIHOST-UNSUPPORTED"
+
+
+# ---------------------------------------------------------------------------
+# Parent: spawn + supervise
+# ---------------------------------------------------------------------------
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _child_env(proc_id: int, nprocs: int, port: int, dpp: int) -> dict:
+    env = dict(os.environ)
+    env["REPRO_COORDINATOR"] = f"127.0.0.1:{port}"
+    env["REPRO_NUM_PROCESSES"] = str(nprocs)
+    env["REPRO_PROCESS_ID"] = str(proc_id)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={dpp}"
+    env["PYTHONPATH"] = SRC + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    return env
+
+
+def launch(nprocs: int, dpp: int, cmd, *, timeout: float = 600.0,
+           port: int = 0):
+    """Run ``cmd`` as ``nprocs`` coordinated processes; returns
+    (exit_code, list of per-process stdout strings)."""
+    port = port or _free_port()
+    procs = []
+    for pid in range(nprocs):
+        procs.append(subprocess.Popen(
+            cmd, env=_child_env(pid, nprocs, port, dpp),
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
+    outs, rcs = [], []
+    deadline = time.monotonic() + timeout
+    for pid, p in enumerate(procs):
+        try:
+            out, _ = p.communicate(timeout=max(1.0,
+                                               deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            out, _ = p.communicate()
+            out += f"\n[launcher] process {pid} timed out after {timeout}s"
+            p.returncode = 124
+        outs.append(out or "")
+        rcs.append(p.returncode)
+    for pid, out in enumerate(outs):
+        for line in out.splitlines():
+            print(f"[p{pid}] {line}")
+    if any(rc == UNSUPPORTED_RC for rc in rcs) \
+            or any(UNSUPPORTED_MARK in o for o in outs):
+        return UNSUPPORTED_RC, outs
+    bad = [rc for rc in rcs if rc != 0]
+    return (bad[0] if bad else 0), outs
+
+
+def _collect_bench(outs, json_path: str) -> None:
+    rows = {}
+    for line in outs[0].splitlines():
+        if not line.startswith("BENCHROW,"):
+            continue
+        _, name, us, derived = line.split(",", 3)
+        rows[name] = {"us_per_call": round(float(us), 1), "derived": derived}
+    payload = {"rows": rows, "unit": "us_per_call",
+               "source": "tools/launch_multihost.py"}
+    Path(json_path).write_text(json.dumps(payload, indent=2,
+                                          sort_keys=True) + "\n")
+    print(f"[launcher] wrote {len(rows)} rows -> {json_path}")
+
+
+# ---------------------------------------------------------------------------
+# Child: the built-in demos (run per process, under the cluster env)
+# ---------------------------------------------------------------------------
+
+def _bench_row(name: str, us: float, derived: str = "") -> None:
+    import jax
+    if jax.process_index() == 0:
+        print(f"BENCHROW,{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, iters: int = 5) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _make_global(arr, sharding):
+    """Global array from process-local shards (every process puts the
+    slices of the SAME deterministic host array its devices own)."""
+    import jax
+    idx_map = sharding.addressable_devices_indices_map(arr.shape)
+    local = [jax.device_put(arr[idx], d) for d, idx in idx_map.items()]
+    return jax.make_array_from_single_device_arrays(
+        arr.shape, sharding, local)
+
+
+def _demo_fft() -> None:
+    import numpy as np
+    import jax
+    from jax.experimental.multihost_utils import process_allgather
+    from jax.sharding import NamedSharding
+
+    from repro.core.fft.plan import plan_dft, FORWARD
+    from repro.launch.mesh import describe_mesh, make_multihost_mesh
+
+    nproc = jax.process_count()
+    dpp = len(jax.local_devices())
+    rng = np.random.default_rng(0)
+    N = (16 * nproc, 16, 16)
+    x = rng.standard_normal(N).astype(np.float32)
+    ref = np.fft.fftn(x)
+
+    # DCN×ICI mesh: pencil's second rotation crosses hosts
+    mesh = make_multihost_mesh(dcn_axes={"dcn": nproc},
+                               ici_axes={"data": dpp})
+    print(f"mesh: {describe_mesh(mesh)}", flush=True)
+    plan = plan_dft(N, FORWARD, mesh, decomp="pencil",
+                    axis_names=("dcn", "data"))
+    print(f"pencil topology: {plan.topology()}", flush=True)
+    assert any(t["crosses_hosts"] for t in plan.topology()) == (nproc > 1)
+
+    def run(p, arr):
+        sh = p.input_sharding()
+        gx = _make_global(arr, sh)
+        gz = _make_global(np.zeros_like(arr), sh)
+        fr, fi = p.execute(gx, gz)
+        got = (np.asarray(process_allgather(fr, tiled=True))
+               + 1j * np.asarray(process_allgather(fi, tiled=True)))
+        err = float(np.max(np.abs(got - ref)) / np.max(np.abs(ref)))
+        us = _timeit(p.execute, gx, gz)
+        return err, us
+
+    err, us = run(plan, x)
+    print(f"pencil fftn rel err = {err:.2e}", flush=True)
+    assert err < 1e-4, f"pencil mismatch vs oracle: {err}"
+    _bench_row(f"multihost_fft_pencil_{nproc}x{dpp}", us,
+               f"N={N[0]}x16x16;dcn_crossing={nproc > 1}")
+
+    # 1-axis mesh: slab3d's single exchange crosses hosts
+    mesh1 = make_multihost_mesh(dcn_axes={"dcn": nproc * dpp},
+                                ici_axes={"data": 1})
+    p1 = plan_dft(N, FORWARD, mesh1, decomp="slab3d", axis_names=("dcn",))
+    err1, us1 = run(p1, x)
+    print(f"slab3d fftn rel err = {err1:.2e}", flush=True)
+    assert err1 < 1e-4, f"slab3d mismatch vs oracle: {err1}"
+    _bench_row(f"multihost_fft_slab3d_{nproc}x{dpp}", us1,
+               f"N={N[0]}x16x16;one-exchange")
+
+    # per-topology decomposition sweep (the Verma-style slab/pencil call)
+    swept = plan_dft(N, FORWARD, mesh, decomp="measure",
+                     axis_names=("dcn", "data"))
+    print(f"decomp='measure' on this topology chose: {swept.decomp}",
+          flush=True)
+    print("fft demo OK", flush=True)
+
+
+def _demo_transit() -> None:
+    import numpy as np
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.fft.plan import plan_dft, FORWARD
+    from repro.core.insitu.bridge import BridgeData
+    from repro.core.insitu.transit import TransitBridge
+    from repro.launch.mesh import make_transit_meshes
+
+    ndev = len(jax.devices())
+    half = ndev // 2
+    pm, cm = make_transit_meshes(half, half)
+    bridge = TransitBridge(pm, cm)
+    print(f"transit via={bridge.via} producer={dict(pm.shape)} "
+          f"consumer={dict(cm.shape)}", flush=True)
+
+    rng = np.random.default_rng(7)
+    field = rng.standard_normal((16, 32)).astype(np.float32)
+    psh = NamedSharding(pm, P("data", None))
+    if bridge.is_producer():
+        px = _make_global(field, psh)
+    else:
+        px = np.zeros_like(field)        # shape/dtype placeholder
+    t0 = time.perf_counter()
+    out = bridge.send(BridgeData(arrays={"field": px}, step=0))
+    us = (time.perf_counter() - t0) * 1e6
+
+    if bridge.is_consumer():
+        got = out.arrays["field"]
+        for s in got.addressable_shards:
+            if not np.array_equal(np.asarray(s.data), field[s.index]):
+                raise AssertionError("transit delivery not bit-identical")
+        print("transit delivery bit-identical on consumer shards",
+              flush=True)
+        # consumer-side analysis that never touches producer devices.
+        # A consumer mesh confined to ONE process can run a distributed
+        # schedule (its collectives stay in-process); a consumer mesh
+        # spanning a strict subset of >1 processes must stick to
+        # shard-local compute — subset cross-process collectives are
+        # where multi-process CPU backends hang (see docs/multihost.md)
+        cons_procs = {d.process_index for d in cm.devices.flat}
+        if len(cons_procs) == 1:
+            cplan = plan_dft(field.shape, FORWARD, cm, decomp="slab")
+            zero = jax.device_put(
+                np.zeros_like(field),
+                NamedSharding(cm, P(*cplan.schedule().in_spec)))
+            moved = jax.device_put(got, cplan.input_sharding())
+            fr, fi = cplan.execute(moved, zero)
+            jax.block_until_ready((fr, fi))
+            print("consumer-mesh distributed FFT on delivered field OK",
+                  flush=True)
+        else:
+            import jax.numpy as jnp
+            for s in got.addressable_shards:
+                jax.block_until_ready(
+                    jax.jit(jnp.fft.fft)(jnp.asarray(np.asarray(s.data))))
+            print("consumer shard-local FFT on delivered field OK",
+                  flush=True)
+    _bench_row(f"multihost_transit_{jax.process_count()}p", us,
+               f"bytes={bridge.report()['bytes_moved']}"
+               f";via={bridge.via}")
+    print("transit demo OK", flush=True)
+
+
+def _child_main(demo: str) -> int:
+    try:
+        from repro.runtime import cluster
+        cfg = cluster.init_cluster()
+    except Exception as err:  # noqa: BLE001 — bring-up failed
+        print(f"{UNSUPPORTED_MARK}: {type(err).__name__}: {err}",
+              flush=True)
+        return UNSUPPORTED_RC
+    import jax
+    try:
+        jax.devices()
+    except Exception as err:  # noqa: BLE001
+        print(f"{UNSUPPORTED_MARK}: backend init: {err}", flush=True)
+        return UNSUPPORTED_RC
+    print(f"cluster: {cluster.cluster_info()}", flush=True)
+    if demo in ("fft", "all"):
+        _demo_fft()
+    if demo in ("transit", "all"):
+        _demo_transit()
+    if jax.process_count() > 1:
+        # leave together: demo work is asymmetric (producer processes
+        # finish first) and a skewed exit trips the shutdown barrier
+        from jax.experimental.multihost_utils import sync_global_devices
+        sync_global_devices("repro_multihost_demo_done")
+    print("CHILD OK", flush=True)
+    return 0
+
+
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    passthrough = None
+    if "--" in args:
+        cut = args.index("--")
+        args, passthrough = args[:cut], args[cut + 1:]
+
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--nprocs", type=int, default=2)
+    ap.add_argument("--devices-per-proc", type=int, default=2,
+                    help="CPU placeholder devices per process "
+                         "(XLA_FLAGS, set before the child imports jax)")
+    ap.add_argument("--demo", default="all",
+                    choices=("fft", "transit", "all"))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="collect process 0's BENCHROW lines into a "
+                         "BENCH-style JSON artifact")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    ap.add_argument("--port", type=int, default=0,
+                    help="coordinator port (default: pick a free one)")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ns = ap.parse_args(args)
+
+    if ns.child:
+        return _child_main(ns.demo)
+
+    cmd = passthrough or [sys.executable, str(Path(__file__).resolve()),
+                          "--child", "--demo", ns.demo]
+    rc, outs = launch(ns.nprocs, ns.devices_per_proc, cmd,
+                      timeout=ns.timeout, port=ns.port)
+    if rc == UNSUPPORTED_RC:
+        print("[launcher] multi-process unsupported here (rc 99)")
+        return rc
+    if rc == 0 and ns.json and passthrough is None:
+        _collect_bench(outs, ns.json)
+    print(f"[launcher] {ns.nprocs} process(es) x "
+          f"{ns.devices_per_proc} device(s): "
+          f"{'OK' if rc == 0 else f'FAILED rc={rc}'}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
