@@ -121,6 +121,24 @@ def mesh_process_topology(mesh):
             for name in mesh.axis_names}
 
 
+def backend_initialized() -> bool:
+    """True when a JAX backend already exists in this process — past
+    that point, bring-up configuration (the gloo collectives selector,
+    ``jax.distributed.initialize``) silently stops taking effect, so
+    cluster init must detect it explicitly (``jax.config.update`` still
+    *succeeds* on an initialized backend). Private-API probe with
+    graceful degradation: unknown layouts report False rather than
+    blocking bring-up."""
+    try:
+        from jax._src import xla_bridge
+        fn = getattr(xla_bridge, "backends_are_initialized", None)
+        if fn is not None:
+            return bool(fn())
+        return bool(getattr(xla_bridge, "_backends", None))
+    except Exception:  # noqa: BLE001 — layout drift: assume fresh
+        return False
+
+
 def enable_cpu_collectives() -> bool:
     """Switch the CPU backend's cross-process collectives to gloo.
 

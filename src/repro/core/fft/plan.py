@@ -56,7 +56,13 @@ device ids — and ``decomp="measure"`` sweeps the layout-compatible
 decompositions (slab3d vs pencil for 3-D grids) and pins the fastest
 *for this topology*: one big cross-host exchange and two smaller
 ones order differently once all_to_all leaves the host (Verma et
-al., arXiv:2202.12756). See ``docs/multihost.md``.
+al., arXiv:2202.12756). When the tuned mesh spans multiple
+processes, both measured sweeps (decomp and knobs) broadcast process
+0's winner before caching — per-process timings never decide alone,
+because divergent winners would compile divergent collective
+programs and deadlock the next ``execute``; process-local meshes
+keep tuning locally (see ``_agree_choice``). See
+``docs/multihost.md``.
 
 Real-input plans (``plan_rfft``, or ``real=True``) use the Hermitian
 half-spectrum schedules in ``rfft.py``: forward ``execute(x)`` maps a
@@ -274,11 +280,17 @@ def plan_dft(shape, direction: str, mesh: Mesh, *,
     Identical arguments return the SAME compiled plan object."""
     shape = tuple(int(s) for s in shape)
     if decomp == MEASURE:
+        axis_names = tuple(axis_names) if axis_names is not None else None
         decomp = _autotune_decomp(shape, direction, mesh, backend=backend,
                                   overlap_chunks=overlap_chunks,
                                   wire_dtype=wire_dtype,
                                   real=real, batch_ndim=batch_ndim,
-                                  allow_reduced_wire=allow_reduced_wire)
+                                  allow_reduced_wire=allow_reduced_wire,
+                                  axis_names=axis_names)
+        if axis_names is not None and decomp in CAPS:
+            # the sweep raced each candidate over the prefix of the
+            # caller's axes it needs — build the winner the same way
+            axis_names = axis_names[: CAPS[decomp].mesh_axes]
     decomp, axis_names = _infer(shape, decomp, axis_names, mesh)
     wire = _wire_name(wire_dtype)
 
@@ -318,6 +330,65 @@ def plan_rfft(shape, direction: str, mesh: Mesh, **kw) -> FFTPlan:
 
 def _pow2(n: int) -> bool:
     return n & (n - 1) == 0
+
+
+def _process_span(mesh: Mesh) -> set:
+    return {d.process_index for d in mesh.devices.flat}
+
+
+def _subset_span(span: set) -> bool:
+    """True for a mesh spanning a strict subset of >1 processes — the
+    documented subset-collectives hazard (``docs/multihost.md``). The
+    measured sweeps must not even START on such a mesh: timing a
+    candidate executes subset cross-process collectives (the hang
+    itself), and no safe collective exists afterwards to agree on the
+    winner. Callers skip the sweep and pin the untimed default
+    deterministically on every process — mis-tuned beats deadlocked."""
+    return 1 < len(span) < jax.process_count()
+
+
+def _sweep_ok(ok: bool, span: set) -> bool:
+    """Collective AND over the mesh's processes: True only when EVERY
+    process reports ``ok``. The sweeps call this around each timed
+    candidate because timing executes the candidate's collectives — a
+    candidate failing on one process only (per-host OOM, transient XLA
+    error) would otherwise desynchronize the loop's collective control
+    flow: the failing process moves on to the next candidate's
+    all_to_alls while the others still sit inside this one's, and the
+    cluster deadlocks. Single-process span: plain pass-through, no
+    collective."""
+    if len(span) <= 1:
+        return ok
+    from jax.experimental.multihost_utils import process_allgather
+    flags = process_allgather(jnp.asarray([1 if ok else 0], jnp.int32))
+    return bool(flags.min() == 1)
+
+
+def _agree_choice(options: list, choice, span: set):
+    """Cross-process agreement for measured sweeps. ``_time_plan`` is
+    per-process wall clock, so on a multi-process cluster timing noise
+    (or a candidate failing on one process only) can hand different
+    processes different winners — after which they build DIVERGENT
+    collective programs and the next ``execute`` deadlocks or corrupts
+    data. Process 0's pick wins everywhere (FFTW's broadcast-the-wisdom
+    discipline): the winner is encoded as an index into ``options``
+    (deterministic, shape-derived, hence identical on every process)
+    and broadcast before anything is cached.
+
+    Agreement is scoped to the MESH's process span, not the cluster: a
+    span of 1 (single-process runs, or a process-local mesh inside a
+    cluster, e.g. a transit consumer's shard-local analysis) keeps
+    local timing authoritative — joining a global collective the other
+    processes never call would itself hang the cluster. A mesh
+    spanning every process broadcasts via ``broadcast_one_to_all``, a
+    global collective all processes reach (measure-planning on a
+    global mesh is itself collective). Strict-subset meshes never get
+    here — their sweeps are skipped up front (``_subset_span``)."""
+    if len(span) <= 1:
+        return choice
+    from jax.experimental.multihost_utils import broadcast_one_to_all
+    idx = options.index(choice)
+    return options[int(broadcast_one_to_all(jnp.int32(idx)))]
 
 
 def _time_plan(plan: FFTPlan, args, iters: int = 3) -> float:
@@ -366,7 +437,7 @@ def _schedule_variants(shape, decomp, *, allow_reduced_wire) -> List[dict]:
 
 def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
                      wire_dtype, real, batch_ndim,
-                     allow_reduced_wire) -> str:
+                     allow_reduced_wire, axis_names=None) -> str:
     """``decomp="measure"``: time every layout-compatible decomposition
     for this (grid, mesh TOPOLOGY, knobs) and return the fastest.
 
@@ -380,10 +451,18 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
     ``backend="measure"`` each candidate is instead knob-tuned first
     by ``_autotune``, making the comparison best-vs-best.
     Ineligible/failed candidates land in ``autotune_skips()`` like any
-    other ruled-out variant."""
+    other ruled-out variant. Caller-specified ``axis_names`` are
+    honored (each candidate is timed over the prefix it needs, so the
+    plan the winner builds is the plan that raced) and are part of the
+    cache key — a measurement for one axis layout never decides
+    another. On multi-process clusters the local winner is only a
+    vote: ``_agree_choice`` broadcasts process 0's pick before it is
+    cached or returned, and ``_sweep_ok`` keeps the loop's collective
+    control flow synchronized around candidates that fail on a subset
+    of processes."""
     rank = len(shape)
-    dkey = (shape, direction, _mesh_key(mesh), real, batch_ndim,
-            backend, overlap_chunks, _wire_name(wire_dtype),
+    dkey = (shape, direction, _mesh_key(mesh), axis_names, real,
+            batch_ndim, backend, overlap_chunks, _wire_name(wire_dtype),
             allow_reduced_wire)
     if dkey in _DECOMP_CACHE:
         return _DECOMP_CACHE[dkey]
@@ -392,44 +471,72 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
     if candidates is None:
         # rank 1 has only the cyclic-layout four-step; nothing to sweep
         return _infer(shape, None, None, mesh)[0]
+    fallback = _infer(shape, None, None, mesh)[0]
+    span = _process_span(mesh)
+    if _subset_span(span):
+        # timing candidates here would BE the subset-collectives hang
+        # — pin the untimed default before any sweep work starts
+        _DECOMP_CACHE[dkey] = fallback
+        return fallback
     best, best_t = None, float("inf")
     for decomp in candidates:
         caps = CAPS[decomp]
-        try:
+
+        def skip(err):
+            _TUNE_SKIPS.append({
+                "shape": shape, "direction": direction, "decomp": decomp,
+                "real": real, "batch_ndim": batch_ndim,
+                "backend": backend, "sweep": "decomp", "error": err})
+
+        cand, args, err = None, None, None
+        try:  # build phase — no candidate collectives executed yet
             if caps.mesh_axes > len(mesh.axis_names):
                 raise ValueError(
                     f"{decomp} needs {caps.mesh_axes} mesh axes, mesh "
                     f"has {len(mesh.axis_names)}")
             if real and not caps.real:
                 raise ValueError(f"{decomp} has no r2c/c2r schedules")
-            axis_names = tuple(mesh.axis_names)[: caps.mesh_axes]
+            # each candidate races over the axes the CALLER's plan will
+            # actually use (the prefix it needs of them)
+            cand_axes = tuple(axis_names if axis_names is not None
+                              else mesh.axis_names)[: caps.mesh_axes]
             if backend == MEASURE:
                 tuned = _autotune(shape, direction, mesh, decomp,
-                                  axis_names, real=real,
+                                  cand_axes, real=real,
                                   batch_ndim=batch_ndim,
                                   allow_reduced_wire=allow_reduced_wire)
             else:
                 tuned = {"backend": backend,
                          "overlap_chunks": overlap_chunks,
                          "wire_dtype": wire_dtype}
-            cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
+            cand = FFTPlan(shape, direction, mesh, decomp, cand_axes,
                            tuned["backend"], tuned["overlap_chunks"],
                            real, batch_ndim,
                            _wire_name(tuned["wire_dtype"])).compile()
-            args = _dummy_args(shape, direction, mesh, decomp, axis_names,
+            args = _dummy_args(shape, direction, mesh, decomp, cand_axes,
                                real, batch_ndim)
+        except Exception as e:  # noqa: BLE001 — candidate unsupported
+            err = f"{type(e).__name__}: {e}"
+        # every process must agree the candidate built before ANY of
+        # them enters the timed collectives, and that timing succeeded
+        # everywhere after — see _sweep_ok
+        if not _sweep_ok(err is None, span):
+            skip(err or "candidate failed on another process")
+            continue
+        try:
             t = _time_plan(cand, args)
-        except Exception as err:  # noqa: BLE001 — candidate unsupported
-            _TUNE_SKIPS.append({
-                "shape": shape, "direction": direction, "decomp": decomp,
-                "real": real, "batch_ndim": batch_ndim,
-                "backend": backend, "sweep": "decomp",
-                "error": f"{type(err).__name__}: {err}"})
+        except Exception as e:  # noqa: BLE001 — candidate unsupported
+            err = f"{type(e).__name__}: {e}"
+        if not _sweep_ok(err is None, span):
+            skip(err or "timing failed on another process")
             continue
         if t < best_t:
             best, best_t = decomp, t
     if best is None:
-        best = _infer(shape, None, None, mesh)[0]
+        best = fallback
+    # multi-process: every process of the mesh must cache the SAME
+    # winner (see _agree_choice) — per-process timings are only a vote
+    best = _agree_choice([*candidates, fallback], best, span)
     _DECOMP_CACHE[dkey] = best
     return best
 
@@ -445,32 +552,76 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
     if tkey in _TUNE_CACHE:
         return _TUNE_CACHE[tkey]
 
-    args = _dummy_args(shape, direction, mesh, decomp, axis_names, real,
-                       batch_ndim)
+    fallback = {"backend": "auto", "overlap_chunks": 0, "wire_dtype": None}
+    span = _process_span(mesh)
+    if _subset_span(span):
+        # timing variants here would BE the subset-collectives hang —
+        # pin the untimed default before any sweep work starts
+        _TUNE_CACHE[tkey] = fallback
+        return fallback
+    err = None
+    try:
+        args = _dummy_args(shape, direction, mesh, decomp, axis_names,
+                           real, batch_ndim)
+    except Exception as e:  # noqa: BLE001 — per-process input failure
+        err = f"{type(e).__name__}: {e}"
+    # agreed BEFORE the variant loop: a process whose dummy input
+    # failed must not escape to an outer control point while its peers
+    # issue per-variant flag collectives below — the int32 flags would
+    # pair up across different control points and every later
+    # agreement would exchange values with the wrong partners
+    if not _sweep_ok(err is None, span):
+        _TUNE_SKIPS.append({
+            "shape": shape, "direction": direction, "decomp": decomp,
+            "real": real, "batch_ndim": batch_ndim, "sweep": "knobs",
+            "error": err or "dummy input failed on another process"})
+        _TUNE_CACHE[tkey] = fallback
+        return fallback
+    variants = _schedule_variants(shape, decomp,
+                                  allow_reduced_wire=allow_reduced_wire)
     best, best_t, best_plan = None, float("inf"), None
-    for variant in _schedule_variants(shape, decomp,
-                                      allow_reduced_wire=allow_reduced_wire):
+    for variant in variants:
         cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
                        variant["backend"], variant["overlap_chunks"],
                        real, batch_ndim, variant["wire_dtype"])
-        try:
-            t = _time_plan(cand.compile(), args)
-        except Exception as err:  # noqa: BLE001 — variant unsupported
+        err, t = None, None
+        try:  # build phase: schedule construction + overlap checks —
+            # deterministic errors, no collectives executed yet
+            cand.compile()
+        except Exception as e:  # noqa: BLE001 — variant unsupported
+            err = f"{type(e).__name__}: {e}"
+        # same two sync points as the decomp sweep: agree the variant
+        # built everywhere before any process enters its timed
+        # collectives, and that timing succeeded everywhere after
+        if not _sweep_ok(err is None, span):
             _TUNE_SKIPS.append({
                 "shape": shape, "direction": direction, "decomp": decomp,
                 "real": real, "batch_ndim": batch_ndim, **variant,
-                "error": f"{type(err).__name__}: {err}"})
+                "error": err or "variant failed on another process"})
+            continue
+        try:
+            t = _time_plan(cand, args)
+        except Exception as e:  # noqa: BLE001 — variant unsupported
+            err = f"{type(e).__name__}: {e}"
+        if not _sweep_ok(err is None, span):
+            _TUNE_SKIPS.append({
+                "shape": shape, "direction": direction, "decomp": decomp,
+                "real": real, "batch_ndim": batch_ndim, **variant,
+                "error": err or "timing failed on another process"})
             continue
         if t < best_t:
             best, best_t, best_plan = dict(variant), t, cand
     if best is None:
-        best = {"backend": "auto", "overlap_chunks": 0, "wire_dtype": None}
-    else:
+        best, best_plan = fallback, None
+    # multi-process: knobs, like decomps, must agree across the mesh's
+    # processes (see _agree_choice) or they compile divergent programs
+    agreed = _agree_choice([*variants, fallback], best, span)
+    if agreed == best and best_plan is not None:
         # the winner is already compiled and warm — seed the plan cache
         # so the follow-up plan_dft doesn't trace/compile it again
         _PLAN_CACHE.setdefault(
             _plan_key(shape, direction, mesh, decomp, axis_names,
                       best["backend"], best["overlap_chunks"], real,
                       batch_ndim, best["wire_dtype"]), best_plan)
-    _TUNE_CACHE[tkey] = best
-    return best
+    _TUNE_CACHE[tkey] = agreed
+    return agreed

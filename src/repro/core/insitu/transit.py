@@ -19,15 +19,19 @@ Two transports, picked by ``via`` (default ``"auto"``):
   round-trip; XLA moves exactly the bytes that change owners.
 * ``host`` — the portable path for real multi-process clusters, where
   neither side can even *construct* arrays on the other's devices.
-  Producer participants lower their addressable shards to host memory;
-  one ``process_allgather`` moves (buffer, ownership-mask) pairs
-  across the cluster; every process then reconstructs the global field
-  by taking, element-wise, the contribution of the lowest-ranked
-  process whose mask covers it — **bit-identical** by construction,
-  with replicated regions deduplicated deterministically; consumer
-  participants finally re-shard the reconstruction onto the consumer
-  mesh from their own addressable slices. Non-consumer processes get
-  ``None`` for the delivered arrays (they hold no piece of them).
+  Producer participants lower only the shards they OWN to host memory
+  — (bounds, flat payload) pairs, padded to the cluster-wide maximum —
+  and ``process_allgather`` moves those, so the transient footprint is
+  O(processes × local shard bytes) plus one global-size reconstruction
+  buffer on CONSUMER processes only (non-consumers keep just a bool
+  coverage mask), not O(processes × global bytes). Consumers
+  then rebuild the global field by taking, element-wise, the
+  contribution of the lowest-ranked process whose shards cover it —
+  **bit-identical** by construction, with replicated regions
+  deduplicated deterministically; consumer participants finally
+  re-shard the reconstruction onto the consumer mesh from their own
+  addressable slices. Non-consumer processes get ``None`` for the
+  delivered arrays (they hold no piece of them).
 
 The multi-process call contract mirrors every other collective in the
 repo: ALL processes call ``send`` per field, producer participants
@@ -35,7 +39,17 @@ passing the producer-mesh ``jax.Array``s, everyone else passing
 same-shaped placeholders (e.g. ``np.zeros``; only ``shape``/``dtype``
 are read). ``report()`` accounts fields, per-array bytes moved, wall
 seconds, and which transport ran — the in-transit analogue of the
-chain's reshard accounting.
+chain's reshard accounting. ``bytes_moved`` counts LOGICAL field
+bytes (one full copy of every delivered array): the host transport
+gathers roughly that many payload bytes across the cluster, while
+``device_put`` may move fewer on the wire (XLA relocates only the
+shards that change owners).
+
+Drivers that run their main jitted loop on the producer mesh (train/
+serve behind ``--transit-consumers``) must call
+``require_producer_spans_cluster`` first: a producer mesh that
+excludes some processes strands those processes in the jitted step —
+the "subset collectives hang" failure mode of ``docs/multihost.md``.
 """
 from __future__ import annotations
 
@@ -59,6 +73,29 @@ def _mesh_addressable(mesh) -> bool:
 def _participates(mesh) -> bool:
     me = jax.process_index()
     return any(d.process_index == me for d in mesh.devices.flat)
+
+
+def require_producer_spans_cluster(producer_mesh,
+                                   flag: str = "--transit-consumers") -> None:
+    """Guard for drivers whose main (jitted) loop runs on the producer
+    mesh: on a multi-process cluster EVERY process must own at least
+    one producer device, or the excluded processes either fail to
+    place the step (no addressable devices in the mesh) or hang the
+    cluster at its first collective (``docs/multihost.md``, "subset
+    collectives hang"). Raises ``ValueError`` naming ``flag`` when the
+    split is invalid; single-process runs always pass."""
+    nproc = jax.process_count()
+    if nproc <= 1:
+        return
+    span = sorted({d.process_index for d in producer_mesh.devices.flat})
+    if len(span) < nproc:
+        raise ValueError(
+            f"{flag}: the producer mesh spans only processes {span} of a "
+            f"{nproc}-process cluster — processes outside it would hang "
+            f"in the jitted main loop (subset collectives, see "
+            f"docs/multihost.md). Pick a consumer count that leaves "
+            f"every process at least one producer device, or run the "
+            f"M→N split single-process.")
 
 
 class TransitBridge:
@@ -123,34 +160,80 @@ class TransitBridge:
     def _move_host(self, name: str, x):
         """The allgather hop (see module docstring). ``x`` is a
         producer-mesh array on producer participants and a shape/dtype
-        placeholder everywhere else."""
+        placeholder everywhere else. Only OWNED shards travel — each
+        process gathers (bounds, flat payload) pairs padded to the
+        cluster-wide maximum, never a dense global buffer per peer."""
         from jax.experimental.multihost_utils import process_allgather
 
         shape, dtype = tuple(x.shape), np.dtype(x.dtype)
-        buf = np.zeros(shape, dtype)
-        mask = np.zeros(shape, np.uint8)
-        shards = getattr(x, "addressable_shards", None)
-        if shards is not None and isinstance(x, jax.Array):
-            for s in shards:
-                buf[s.index] = np.asarray(s.data)
-                mask[s.index] = 1
-        gbuf = np.asarray(process_allgather(buf))
-        gmask = np.asarray(process_allgather(mask))
-        if gbuf.shape == shape:          # single process: no leading axis
-            gbuf, gmask = gbuf[None], gmask[None]
-        full = np.zeros(shape, dtype)
+        ndim = len(shape)
+
+        def gather(a):
+            """``process_allgather`` with bit-exact transport: the
+            multi-process path routes arrays through ``device_put``,
+            which CANONICALIZES dtypes (int64→int32, float64→float32
+            under default x64-disabled jax) — a silent precision loss
+            that would break the bit-identical contract. Gather the
+            raw bytes instead and reinterpret on arrival."""
+            a = np.ascontiguousarray(a)
+            g = np.asarray(process_allgather(a.view(np.uint8)))
+            if jax.process_count() == 1:
+                g = g[None]      # single process: no leading axis added
+            return g.view(a.dtype)
+
+        rows, flats, seen = [], [], set()
+        if isinstance(x, jax.Array):
+            for s in x.addressable_shards:
+                bounds = tuple(
+                    (0 if sl.start is None else int(sl.start),
+                     n if sl.stop is None else int(sl.stop))
+                    for sl, n in zip(s.index, shape))
+                if bounds in seen:       # in-process replicated copy
+                    continue
+                seen.add(bounds)
+                rows.append(np.asarray(bounds, np.int64).reshape(-1))
+                flats.append(np.ascontiguousarray(
+                    np.asarray(s.data)).ravel())
+        bounds = (np.stack(rows) if rows
+                  else np.zeros((0, 2 * ndim), np.int64))
+        payload = np.concatenate(flats) if flats else np.zeros(0, dtype)
+        counts = gather(np.asarray([bounds.shape[0], payload.size],
+                                   np.int64))
+        pad_b = np.zeros((int(counts[:, 0].max()), 2 * ndim), np.int64)
+        pad_b[:bounds.shape[0]] = bounds
+        pad_p = np.zeros(int(counts[:, 1].max()), dtype)
+        pad_p[:payload.size] = payload
+        gbounds, gpayload = gather(pad_b), gather(pad_p)
+
+        consumer = self.is_consumer()
+        # non-consumers join every gather above (they are collectives)
+        # and still verify coverage via the bool mask, but skip
+        # materializing the global-size field they would discard
+        full = np.zeros(shape, dtype) if consumer else None
         filled = np.zeros(shape, bool)
-        for p in range(gbuf.shape[0]):
-            take = gmask[p].astype(bool) & ~filled
-            full[take] = gbuf[p][take]
-            filled |= take
+        for p in range(gbounds.shape[0]):
+            off = 0
+            for row in gbounds[p][: int(counts[p, 0])]:
+                idx = tuple(slice(int(row[2 * d]), int(row[2 * d + 1]))
+                            for d in range(ndim))
+                bshape = tuple(int(row[2 * d + 1] - row[2 * d])
+                               for d in range(ndim))
+                n = int(np.prod(bshape, dtype=np.int64))
+                if consumer:
+                    block = gpayload[p][off:off + n].reshape(bshape)
+                    # element-wise lowest-rank-wins dedup:
+                    # deterministic, hence bit-identical everywhere
+                    keep = ~filled[idx]
+                    full[idx] = np.where(keep, block, full[idx])
+                off += n
+                filled[idx] = True
         if not filled.all():
             raise ValueError(
                 f"transit array {name!r}: no process contributed "
                 f"{int((~filled).sum())} of {filled.size} elements — was "
                 f"send() called with the producer-mesh array on every "
                 f"producer participant?")
-        if not self.is_consumer():
+        if not consumer:
             return None
         sh = self._consumer_sharding(name, shape)
         local = [jax.device_put(full[idx], d) for d, idx

@@ -131,6 +131,37 @@ def make_transit_meshes(m: int, n: int, *,
     return prod, cons
 
 
+def make_transit_setup(n_consumers: int, *,
+                       producer_axes: Sequence[str] = ("data", "model"),
+                       consumer_axes: Sequence[str] = ("data",),
+                       noun: str = "producer",
+                       flag: str = "--transit-consumers"):
+    """The drivers' shared ``--transit-consumers`` bring-up: split the
+    global devices into an (ndev - N)-device producer mesh and an
+    N-device consumer mesh, verify the producer mesh spans every
+    process (the driver's jitted main loop runs on it — see
+    ``transit.require_producer_spans_cluster``), and build the bridge.
+    Returns ``(producer_mesh, TransitBridge)``; invalid splits raise
+    ``SystemExit`` with an operator-facing message naming ``flag``
+    (``noun`` is the driver's word for producer devices, e.g.
+    "decode")."""
+    from repro.core.insitu.transit import (TransitBridge,
+                                           require_producer_spans_cluster)
+    ndev = len(jax.devices())
+    if n_consumers >= ndev:
+        raise SystemExit(
+            f"{flag} {n_consumers} leaves no {noun} devices "
+            f"(have {ndev})")
+    producer_mesh, consumer_mesh = make_transit_meshes(
+        ndev - n_consumers, n_consumers,
+        producer_axes=producer_axes, consumer_axes=consumer_axes)
+    try:
+        require_producer_spans_cluster(producer_mesh, flag)
+    except ValueError as err:
+        raise SystemExit(str(err)) from None
+    return producer_mesh, TransitBridge(producer_mesh, consumer_mesh)
+
+
 def describe_mesh(mesh) -> Dict[str, object]:
     """Operator-facing mesh summary: shape, axis → crosses-hosts, and
     process span — the first thing ``docs/multihost.md`` says to print

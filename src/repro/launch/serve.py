@@ -104,7 +104,10 @@ def main(argv=None):
                     help="in-transit M→N split: decode on all but the "
                          "last N devices and run the logits monitor on "
                          "a disjoint N-device consumer mesh (0 = "
-                         "analyze in place)")
+                         "analyze in place). Multi-process clusters: "
+                         "every process must keep at least one decode "
+                         "device or the run aborts (docs/multihost.md, "
+                         "subset collectives)")
     add_cluster_args(ap)
     args = ap.parse_args(argv)
     # multi-process bring-up (env/flag-driven; single-process no-op)
@@ -115,18 +118,11 @@ def main(argv=None):
     assert cfg.family != "encdec", "use whisper serve example for enc-dec"
     transit_bridge = None
     if args.transit_consumers:
-        from repro.core.insitu.transit import TransitBridge
-        from repro.launch.mesh import make_transit_meshes
-        ndev = len(jax.devices())
-        if args.transit_consumers >= ndev:
-            raise SystemExit(
-                f"--transit-consumers {args.transit_consumers} leaves no "
-                f"decode devices (have {ndev})")
-        producer_mesh, consumer_mesh = make_transit_meshes(
-            ndev - args.transit_consumers, args.transit_consumers,
-            producer_axes=("data", "model"), consumer_axes=("data",))
-        mesh = producer_mesh
-        transit_bridge = TransitBridge(producer_mesh, consumer_mesh)
+        # M→N in-transit: decode on the producer mesh, monitor on the
+        # disjoint consumer mesh
+        from repro.launch.mesh import make_transit_setup
+        mesh, transit_bridge = make_transit_setup(args.transit_consumers,
+                                                  noun="decode")
     else:
         mesh = make_host_mesh()
     policy = make_policy(mesh, global_batch=args.batch)

@@ -60,7 +60,10 @@ def main(argv=None):
                          "last N devices and deliver the in-situ "
                          "spectra to a disjoint N-device consumer mesh "
                          "through core/insitu/transit.TransitBridge "
-                         "(0 = analyze in place)")
+                         "(0 = analyze in place). Multi-process "
+                         "clusters: every process must keep at least "
+                         "one producer device or the run aborts "
+                         "(docs/multihost.md, subset collectives)")
     ap.add_argument("--fail-at", type=int, nargs="*", default=None,
                     help="inject failures at these steps (FT test)")
     ap.add_argument("--production-mesh", action="store_true")
@@ -83,18 +86,8 @@ def main(argv=None):
     if args.transit_consumers:
         # M→N in-transit: the model trains on a producer mesh that
         # excludes the last N devices; spectra hop to the consumer mesh
-        from repro.core.insitu.transit import TransitBridge
-        from repro.launch.mesh import make_transit_meshes
-        ndev = len(jax.devices())
-        if args.transit_consumers >= ndev:
-            raise SystemExit(
-                f"--transit-consumers {args.transit_consumers} leaves no "
-                f"producer devices (have {ndev})")
-        producer_mesh, consumer_mesh = make_transit_meshes(
-            ndev - args.transit_consumers, args.transit_consumers,
-            producer_axes=("data", "model"), consumer_axes=("data",))
-        mesh = producer_mesh
-        transit_bridge = TransitBridge(producer_mesh, consumer_mesh)
+        from repro.launch.mesh import make_transit_setup
+        mesh, transit_bridge = make_transit_setup(args.transit_consumers)
     else:
         mesh = (make_production_mesh() if args.production_mesh
                 else make_host_mesh())
@@ -165,6 +158,7 @@ def main(argv=None):
             from repro.core.insitu.bridge import BridgeData
             payload = BridgeData(arrays=dict(metrics["insitu"]),
                                  step=monitor_step)
+            deliver = True
             if transit_bridge is not None:
                 # hop onto the consumer mesh: the writer chain's work
                 # (and any future consumer-side analysis) leaves the
@@ -172,11 +166,12 @@ def main(argv=None):
                 # every process calls it — but only consumer
                 # participants receive the arrays (host transport
                 # hands producers None leaves), so only they run the
-                # chain
+                # chain; producer-only processes still fall through to
+                # the progress log below
                 payload = transit_bridge.send(payload)
-                if not transit_bridge.is_consumer():
-                    return
-            spectra_chain.execute(payload)
+                deliver = transit_bridge.is_consumer()
+            if deliver:
+                spectra_chain.execute(payload)
         if step % 10 == 0 or step <= 2:
             extra = ""
             if "insitu" in metrics:

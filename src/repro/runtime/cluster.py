@@ -45,6 +45,36 @@ ENV_PROCESS_ID = "REPRO_PROCESS_ID"
 _STATE: Dict[str, object] = {"initialized": False, "config": None}
 
 
+def _read_env(e) -> tuple:
+    """The raw, UNVALIDATED ``REPRO_*`` read — the single definition of
+    the env contract's defaults, shared by ``ClusterConfig.from_env``
+    and ``config_from_args`` so the env- and flag-driven bring-up
+    paths cannot drift. Returns (coordinator, num_processes,
+    process_id)."""
+    return (e.get(ENV_COORDINATOR) or None,
+            int(e.get(ENV_NUM_PROCESSES, "1")),
+            int(e.get(ENV_PROCESS_ID, "0")))
+
+
+def _require_complete(coordinator, num_processes: int, *,
+                      nprocs_given: bool, pid_given: bool) -> None:
+    """A half-configured cluster must fail loudly at bring-up, not hang
+    at the first collective — shared by the env and flag paths so
+    neither can smuggle an incomplete config past validation."""
+    if coordinator is not None and not nprocs_given:
+        raise ValueError(
+            f"a coordinator is set ({ENV_COORDINATOR} or --coordinator) "
+            f"but the process count is not — set {ENV_NUM_PROCESSES} or "
+            f"--num-processes (and a distinct rank per process)")
+    if num_processes > 1 and not pid_given:
+        # without an explicit rank every process defaults to 0 and
+        # bring-up deadlocks waiting for the other ranks
+        raise ValueError(
+            f"num_processes={num_processes} but no rank is set — give "
+            f"each process a distinct {ENV_PROCESS_ID} or --process-id "
+            f"(0..{num_processes - 1})")
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
     """One process's view of the cluster.
@@ -73,20 +103,10 @@ class ClusterConfig:
         half-configured cluster should fail loudly at bring-up, not
         hang at the first collective)."""
         e = os.environ if env is None else env
-        coord = e.get(ENV_COORDINATOR) or None
-        nprocs = int(e.get(ENV_NUM_PROCESSES, "1"))
-        pid = int(e.get(ENV_PROCESS_ID, "0"))
-        if coord is not None and ENV_NUM_PROCESSES not in e:
-            raise ValueError(
-                f"{ENV_COORDINATOR} is set but {ENV_NUM_PROCESSES} is "
-                f"not — export both (and {ENV_PROCESS_ID} per process)")
-        if nprocs > 1 and ENV_PROCESS_ID not in e:
-            # without an explicit rank every process defaults to 0 and
-            # bring-up deadlocks waiting for the other ranks
-            raise ValueError(
-                f"{ENV_NUM_PROCESSES}={nprocs} but {ENV_PROCESS_ID} is "
-                f"not set — export a distinct rank (0..{nprocs - 1}) "
-                f"per process")
+        coord, nprocs, pid = _read_env(e)
+        _require_complete(coord, nprocs,
+                          nprocs_given=ENV_NUM_PROCESSES in e,
+                          pid_given=ENV_PROCESS_ID in e)
         return cls(coordinator=coord, num_processes=nprocs, process_id=pid)
 
 
@@ -106,15 +126,25 @@ def add_cluster_args(parser) -> None:
 
 def config_from_args(args, env: Optional[Dict[str, str]] = None
                      ) -> ClusterConfig:
-    """Merge ``add_cluster_args`` flags over the env contract."""
-    cfg = ClusterConfig.from_env(env)
+    """Merge ``add_cluster_args`` flags over the env contract. The
+    completeness checks run on the MERGED values (flags may complete a
+    partial env, and vice versa), so a flag-driven bring-up that
+    forgets ``--process-id`` fails loudly here instead of every
+    process defaulting to rank 0 and deadlocking at initialize."""
+    e = os.environ if env is None else env
+    ecoord, enprocs, epid = _read_env(e)
     coord = getattr(args, "coordinator", None)
     nprocs = getattr(args, "num_processes", None)
     pid = getattr(args, "process_id", None)
-    return ClusterConfig(
-        coordinator=coord if coord is not None else cfg.coordinator,
-        num_processes=nprocs if nprocs is not None else cfg.num_processes,
-        process_id=pid if pid is not None else cfg.process_id)
+    merged = ClusterConfig(
+        coordinator=coord if coord is not None else ecoord,
+        num_processes=nprocs if nprocs is not None else enprocs,
+        process_id=pid if pid is not None else epid)
+    _require_complete(
+        merged.coordinator, merged.num_processes,
+        nprocs_given=nprocs is not None or ENV_NUM_PROCESSES in e,
+        pid_given=pid is not None or ENV_PROCESS_ID in e)
+    return merged
 
 
 def init_cluster(config: Optional[ClusterConfig] = None) -> ClusterConfig:
@@ -132,8 +162,37 @@ def init_cluster(config: Optional[ClusterConfig] = None) -> ClusterConfig:
             raise ValueError(
                 "multi-process ClusterConfig needs a coordinator "
                 "address (host:port of process 0)")
-        # must precede backend init or CPU collectives stay unimplemented
-        compat.enable_cpu_collectives()
+        # bring-up config must precede backend init — past that point
+        # the gloo selector and distributed.initialize silently stop
+        # taking effect (jax.config.update still "succeeds"), so the
+        # mis-ordering needs an explicit probe, not a return value
+        if compat.backend_initialized():
+            raise RuntimeError(
+                "init_cluster() must run before any JAX backend use, "
+                "but a backend is already initialized in this process "
+                "— collective/distributed bring-up configuration can "
+                "no longer take effect, and the first cross-process "
+                "collective would fail cryptically. Move init_cluster() "
+                "ahead of the first device query / jnp operation.")
+        # gate on the PRIMARY platform: "cuda,cpu" is a cuda cluster
+        # with a cpu fallback and never needs gloo. Unset counts as
+        # CPU (jax auto-selects it on accelerator-less machines); an
+        # accelerator cluster can set JAX_PLATFORMS to bypass
+        primary = (os.environ.get("JAX_PLATFORMS", "")
+                   .split(",")[0].strip().lower())
+        if not compat.enable_cpu_collectives() and primary in ("", "cpu"):
+            # the knob is absent (old JAX) — surface the clear
+            # bring-up error the compat shim promises instead of XLA's
+            # cryptic first-collective failure (the launcher maps this
+            # to its "unsupported environment" exit, so tests SKIP)
+            raise RuntimeError(
+                "multi-process CPU bring-up needs the gloo collectives "
+                "knob (jax_cpu_collectives_implementation), which this "
+                "JAX release lacks — upgrade jax. Without it every "
+                "collective dies with XLA's \"Multiprocess computations "
+                "aren't implemented on the CPU backend\". (On an "
+                "accelerator cluster, set JAX_PLATFORMS to your "
+                "platform to bypass this CPU-only check.)")
         compat.distributed_initialize(cfg.coordinator, cfg.num_processes,
                                       cfg.process_id)
     _STATE["initialized"] = True

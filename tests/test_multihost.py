@@ -62,6 +62,33 @@ def test_config_from_args_flags_win():
         == ("h:1", 2, 1)
 
 
+def test_config_from_args_validates_merged():
+    """Completeness checks must run on the MERGED flag+env config:
+    flags may complete a partial env, and a flag-driven bring-up that
+    forgets the rank must fail loudly (not deadlock as rank 0 twice)."""
+    import argparse
+
+    from repro.runtime.cluster import add_cluster_args, config_from_args
+
+    def parse(argv):
+        ap = argparse.ArgumentParser()
+        add_cluster_args(ap)
+        return ap.parse_args(argv)
+
+    # flags complete a partial env (env alone would be rejected)
+    cfg = config_from_args(parse(["--num-processes", "2",
+                                  "--process-id", "1"]),
+                           env={"REPRO_COORDINATOR": "h:1"})
+    assert (cfg.coordinator, cfg.num_processes, cfg.process_id) \
+        == ("h:1", 2, 1)
+
+    with pytest.raises(ValueError):   # no rank anywhere => both rank 0
+        config_from_args(parse(["--coordinator", "h:1",
+                                "--num-processes", "2"]), env={})
+    with pytest.raises(ValueError):   # coordinator without a count
+        config_from_args(parse(["--coordinator", "h:1"]), env={})
+
+
 # ---------------------------------------------------------------------------
 # Single-process pieces: topology annotation + transit bridge (8 devices)
 # ---------------------------------------------------------------------------

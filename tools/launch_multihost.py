@@ -47,6 +47,7 @@ import os
 import socket
 import subprocess
 import sys
+import threading
 import time
 from pathlib import Path
 
@@ -89,20 +90,41 @@ def launch(nprocs: int, dpp: int, cmd, *, timeout: float = 600.0,
         procs.append(subprocess.Popen(
             cmd, env=_child_env(pid, nprocs, port, dpp),
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
-    outs, rcs = [], []
+    # drain every child's pipe CONCURRENTLY: a verbose child that fills
+    # its 64KB stdout pipe would otherwise block on print while an
+    # earlier child waits for it at a collective — a launcher-induced
+    # cluster deadlock reported as a timeout
+    outs = [""] * nprocs
+
+    def _drain(i, p):
+        out, _ = p.communicate()
+        outs[i] = out or ""
+
+    threads = [threading.Thread(target=_drain, args=(i, p), daemon=True)
+               for i, p in enumerate(procs)]
+    for t in threads:
+        t.start()
     deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(max(0.0, deadline - time.monotonic()))
+    stuck = [p.poll() is None for p in procs]
+    if any(t.is_alive() for t in threads):
+        for p in procs:
+            p.kill()
+        for t in threads:
+            # bounded grace: a grandchild can inherit the stdout pipe
+            # and hold it open past the child's death, so an unbounded
+            # join would defeat --timeout; the daemon thread is
+            # abandoned with partial output instead
+            t.join(5.0)
+    rcs = []
     for pid, p in enumerate(procs):
-        try:
-            out, _ = p.communicate(timeout=max(1.0,
-                                               deadline - time.monotonic()))
-        except subprocess.TimeoutExpired:
-            for q in procs:
-                q.kill()
-            out, _ = p.communicate()
-            out += f"\n[launcher] process {pid} timed out after {timeout}s"
-            p.returncode = 124
-        outs.append(out or "")
-        rcs.append(p.returncode)
+        rc = p.wait()
+        if stuck[pid]:
+            outs[pid] += (f"\n[launcher] process {pid} timed out after "
+                          f"{timeout}s")
+            rc = 124
+        rcs.append(rc)
     for pid, out in enumerate(outs):
         for line in out.splitlines():
             print(f"[p{pid}] {line}")
