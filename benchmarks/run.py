@@ -12,9 +12,15 @@ performance study as future work. The harness therefore covers:
                          double-buffered device launch + background host
                          offload), with overlap-efficiency accounting
   fft_local_*          — local FFT backends across sizes (vs jnp.fft)
-  fft_schedule_*       — the five stage-schedules head-to-head on the
+  fft_schedule_*       — the stage-schedules head-to-head on the
                          same hardware (slab 2-D ± overlap, slab 3-D,
                          pencil, transpose-free pencil, four-step 1-D)
+  fft_r2c_schedule_*   — the r2c siblings of slab3d / pencil_tf vs
+                         their complex schedules (half-width or
+                         unpadded exchanges)
+  fft_pencil2d_*       — 2-axis decomposition of 2-D grids vs the
+                         1-axis slab: c2c / r2c / per-stage wire
+                         (cast one of the three exchanges)
   fft_slab_scaling_*   — distributed slab FFT over 1/2/4/8 host devices
                          (the paper's future-work scaling study)
   fft_overlap_*        — chunked-pipeline slab variant (beyond-paper)
@@ -402,6 +408,121 @@ def bench_fft_schedules():
     row("fft_schedule_fourstep1d_p8", out["fourstep1d"], "N=2^20")
 
 
+def bench_fft_r2c_schedules():
+    """r2c coverage of the non-classic schedules vs their complex
+    siblings on the same grids: slab3d (one exchange, UNPADDED half
+    axis) and the transpose-free pencil (digit-permuted x, half-width
+    planes in both exchanges). Rows land in BENCH_fft.json so the r2c
+    paths are tracked commit over commit like the complex ones."""
+    script = textwrap.dedent("""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core.fft import rfft
+        from repro.core.fft.plan import plan_dft, plan_rfft, FORWARD
+
+        def timeit(fn, *args, iters=10):
+            jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        out = {}
+        rng = np.random.default_rng(0)
+        mesh1 = make_mesh((8,), ("data",))
+        mesh2 = make_mesh((4, 2), ("data", "model"))
+        G = (64, 64, 64)
+        x3 = rng.standard_normal(G).astype(np.float32)
+
+        for tag, decomp, mesh in (("slab3d", "slab3d", mesh1),
+                                  ("pencil_tf", "pencil_tf", mesh2)):
+            c = plan_dft(G, FORWARD, mesh, decomp=decomp)
+            r = plan_rfft(G, FORWARD, mesh, decomp=decomp)
+            out[f"{tag}_c2c"] = timeit(c.execute, *c.place(x3))
+            out[f"{tag}_r2c"] = timeit(r.execute, *r.place(x3))
+            out[f"{tag}_hp"] = r.schedule().stages[0].pad_to \
+                if decomp != "slab3d" else rfft.half_bins(G[2])
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        print(res.stderr[-3000:], file=sys.stderr)
+        row("fft_r2c_schedule_sweep", -1, "ERROR")
+        return
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    row("fft_r2c_schedule_slab3d_p8", out["slab3d_r2c"],
+        f"vs_c2c={out['slab3d_c2c']/out['slab3d_r2c']:.2f}x"
+        f";half_unpadded={out['slab3d_hp']};N=64^3")
+    row("fft_r2c_schedule_pencil_tf_4x2", out["pencil_tf_r2c"],
+        f"vs_c2c={out['pencil_tf_c2c']/out['pencil_tf_r2c']:.2f}x"
+        f";hp={out['pencil_tf_hp']};half-width-exchanges")
+
+
+def bench_fft_pencil2d():
+    """The 2-axis decomposition of 2-D grids vs the 1-axis slab on the
+    same hardware: all 8 devices tile the grid instead of 8 slabs,
+    c2c / r2c / per-stage wire (cast one of the three exchanges)."""
+    script = textwrap.dedent("""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core.fft.plan import plan_dft, plan_rfft, FORWARD
+
+        def timeit(fn, *args, iters=10):
+            jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        out = {}
+        rng = np.random.default_rng(0)
+        mesh1 = make_mesh((8,), ("data",))
+        mesh2 = make_mesh((4, 2), ("data", "model"))
+        N = 1024
+        x = rng.standard_normal((N, N)).astype(np.float32)
+
+        slab = plan_dft((N, N), FORWARD, mesh1)
+        out["slab"] = timeit(slab.execute, *slab.place(x))
+        p2d = plan_dft((N, N), FORWARD, mesh2, decomp="pencil2d")
+        out["c2c"] = timeit(p2d.execute, *p2d.place(x))
+        r2d = plan_rfft((N, N), FORWARD, mesh2, decomp="pencil2d")
+        out["r2c"] = timeit(r2d.execute, *r2d.place(x))
+        w2d = plan_dft((N, N), FORWARD, mesh2, decomp="pencil2d",
+                       wire_dtype=(None, None, "bfloat16"))
+        out["pswire"] = timeit(w2d.execute, *w2d.place(x))
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        print(res.stderr[-3000:], file=sys.stderr)
+        row("fft_pencil2d_sweep", -1, "ERROR")
+        return
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    row("fft_pencil2d_c2c_4x2", out["c2c"],
+        f"vs_slab_p8={out['slab']/out['c2c']:.2f}x;N=1024^2;2-axis-tiles")
+    row("fft_pencil2d_r2c_4x2", out["r2c"],
+        f"vs_c2c={out['c2c']/out['r2c']:.2f}x;real-gather+half-scatters")
+    row("fft_pencil2d_pswire_4x2", out["pswire"],
+        f"vs_c2c={out['c2c']/out['pswire']:.2f}x"
+        f";wire=(None,None,bf16)")
+
+
 def bench_bandpass():
     from repro.core.fft.filters import lowpass_mask
     from repro.kernels import ops, ref
@@ -465,6 +586,8 @@ BENCHES = [
     ("chain_pipeline", bench_chain_pipeline),
     ("bandpass", bench_bandpass),
     ("fft_schedule", bench_fft_schedules),
+    ("fft_r2c_schedule", bench_fft_r2c_schedules),
+    ("fft_pencil2d", bench_fft_pencil2d),
     ("fft_rfft", bench_fft_rfft),
     ("fft_slab_scaling", bench_fft_slab_scaling),
     ("fft_kernel", bench_fft_kernels),

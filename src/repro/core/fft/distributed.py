@@ -13,6 +13,9 @@ API plus the index-map helpers:
   passes, one all_to_all; P(ax, None, None) → P(None, ax, None).
 * ``pencil_fft_3d``    — 2-D (pencil) decomposition over two mesh
   axes, two rotations; P(a0, a1, None) → P(None, a0, a1).
+* ``pencil2d_fft_2d``  — 2-axis decomposition of 2-D grids over 2-D
+  meshes; P(a0, a1) → P(None, (a1, a0)), natural frequency order,
+  three single-axis exchanges.
 * ``pencil_tf_fft_3d`` — transpose-free pencil (Chatterjee-Verma-style,
   arXiv:1406.5597): the second rotation becomes a four-step exchange,
   the x-sharding never moves; P(a0, a1, None) → P(a0, None, a1) with
@@ -119,6 +122,27 @@ def pencil_ifft_3d(re, im, mesh: Mesh,
     P(..., a0, a1, None)."""
     sched = S.pencil_3d(mesh, tuple(axes), inverse=True, backend=backend,
                         wire_dtype=wire_dtype)
+    return execute_schedule(sched, mesh, re, im)
+
+
+# ---------------------------------------------------------------------------
+# 2-axis decomposition of 2-D grids
+# ---------------------------------------------------------------------------
+
+def pencil2d_fft_2d(re, im, mesh: Mesh,
+                    axes: Tuple[str, str] = ("data", "model"), *,
+                    inverse: bool = False, backend: str = "auto",
+                    wire_dtype=None) -> Pair:
+    """2-D FFT of a grid tiled over BOTH axes of a 2-D mesh — huge 2-D
+    grids without the slab's single-axis ceiling.
+
+    forward:  input P(..., a0, a1)  → output P(..., None, (a1, a0)),
+    both frequency axes natural order; inverse mirrors. Three
+    exchanges, each over one mesh axis only (so on a DCN×ICI mesh just
+    the a0 rotation crosses hosts). Requires P0·P1 | N0 and
+    P0·P1 | N1."""
+    sched = S.pencil_2d(mesh, tuple(axes), inverse=inverse,
+                        backend=backend, wire_dtype=wire_dtype)
     return execute_schedule(sched, mesh, re, im)
 
 

@@ -11,8 +11,12 @@ pure elementwise multiplies (jit/shard_map-fusable; the Pallas
 Digit-permuted layouts (``fourstep1d`` / ``pencil_tf`` outputs) need
 their masks gathered through ``fourstep_freq_of_position`` —
 ``permute_mask_first_axis`` / ``mask_fourstep_1d`` /
-``mask_pencil_tf_3d`` below do that; ``docs/layouts.md`` specifies the
-orders with a worked 8-point example.
+``mask_pencil_tf_3d`` below do that; r2c half-spectrum layouts need
+them sliced to the non-negative bins and padded to the schedule's
+half extent — ``halfspec_mask`` / ``mask_r2c`` /
+``mask_pencil_tf_3d_r2c`` (the last composes both, for the
+digit-permuted half-spectrum of the r2c transpose-free pencil).
+``docs/layouts.md`` specifies the orders with worked 8-point examples.
 """
 from __future__ import annotations
 
@@ -100,3 +104,42 @@ def mask_pencil_tf_3d(shape: Sequence[int], p0: int, build=lowpass_mask,
     four-step digit order over the ``p0``-way mesh axis (axes 1, 2 are
     natural)."""
     return permute_mask_first_axis(build(tuple(shape), **kw), p0)
+
+
+# -- half-spectrum (r2c) masks ----------------------------------------------
+
+def halfspec_mask(full_mask, hp: int) -> jnp.ndarray:
+    """Scatter a full-spectrum mask into the r2c half layout: slice the
+    last axis to the non-negative bins (``N/2+1``) and zero-pad to the
+    padded extent ``hp`` the schedule's tiled all_to_all requires
+    (``rfft.spectral_half_extent``; the pad columns hold zeros in the
+    spectrum, so a zero mask there is exact). The single shared
+    implementation behind the r2c mask builders and
+    ``BandpassEndpoint``'s ``*-half`` handling."""
+    m = jnp.asarray(full_mask)
+    h = m.shape[-1] // 2 + 1
+    hm = m[..., :h]
+    pad = [(0, 0)] * (hm.ndim - 1) + [(0, hp - h)]
+    return jnp.pad(hm, pad)
+
+
+def mask_r2c(shape: Sequence[int], hp: int = None, build=lowpass_mask,
+             **kw):
+    """Natural-order half-spectrum mask for the r2c slab/slab3d/pencil/
+    pencil2d outputs (frequency order is natural on every axis; only
+    the last axis is truncated/padded). ``hp`` defaults to the unpadded
+    half extent."""
+    shape = tuple(shape)
+    hp = shape[-1] // 2 + 1 if hp is None else hp
+    return halfspec_mask(build(shape, **kw), hp)
+
+
+def mask_pencil_tf_3d_r2c(shape: Sequence[int], p0: int, hp: int = None,
+                          build=lowpass_mask, **kw):
+    """Mask for the transpose-free pencil r2c output: axis 0 in
+    four-step digit order over the ``p0``-way mesh axis AND the last
+    axis in the padded half layout — the two permutations act on
+    different axes, so they compose directly."""
+    shape = tuple(shape)
+    hp = shape[-1] // 2 + 1 if hp is None else hp
+    return halfspec_mask(mask_pencil_tf_3d(shape, p0, build, **kw), hp)

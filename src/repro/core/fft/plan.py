@@ -28,7 +28,18 @@ Three FFTW behaviors are reproduced on top of that:
 
       backend        ∈ {fourstep, stockham (pow-2 grids), jnp}
       overlap_chunks ∈ {0, 2, 4}   (any overlap-capable schedule)
-      wire_dtype     ∈ {None, bfloat16}
+      wire_dtype     ∈ {None, bfloat16} ∪ {per-stage profile}
+
+  The per-stage wire candidate is TOPOLOGY-aware: when the schedule's
+  exchanges have a mixed host-crossing profile (some cross DCN, some
+  stay on ICI/intra-host — the ``crosses_hosts`` annotation), the
+  sweep adds the tuple that casts ONLY the cross-host hops to bfloat16
+  and keeps the on-host exchanges exact — e.g. ``(None, "bfloat16")``
+  for a pencil whose second rotation crosses hosts. On topologies
+  where that tuple would duplicate a uniform candidate (single host,
+  or a one-exchange schedule) it is skipped AND recorded, never timed
+  redundantly; ``plan_cache_stats()["wire_profile_candidates"]``
+  counts the sweeps that generated one.
 
   Each candidate is compiled and timed on a zero input of the right
   sharded shape; the winner's knobs are cached per (shape, mesh,
@@ -40,14 +51,19 @@ Three FFTW behaviors are reproduced on top of that:
   them, so a mis-tuned plan is debuggable. Note
   ``wire_dtype="bfloat16"`` trades ~3 decimal digits of accuracy for
   half the collective bytes; pass ``allow_reduced_wire=False`` to keep
-  the sweep exact.
+  the sweep exact. Full guide: ``docs/tuning.md``.
 
 Decompositions (``decomp=``): ``slab`` (2-D, 1 mesh axis), ``slab3d``
 (3-D, 1 mesh axis), ``pencil`` (3-D, 2 mesh axes), ``pencil_tf``
 (transpose-free pencil — output in the documented digit-permuted
-x-layout), ``fourstep1d`` (1-D). ``_infer`` picks by grid rank, and
-for 3-D grids picks ``pencil`` on ≥2-axis meshes and ``slab3d`` on
-1-axis meshes.
+x-layout), ``pencil2d`` (2-D grids tiled over BOTH axes of a 2-D
+mesh), ``fourstep1d`` (1-D). All but ``fourstep1d`` have r2c/c2r
+schedules, so ``plan_rfft`` works on every mesh shape — including 3-D
+grids on 1-axis meshes (``slab3d``) and the transpose-free layout.
+``_infer`` picks by grid rank, and for 3-D grids picks ``pencil`` on
+≥2-axis meshes and ``slab3d`` on 1-axis meshes; 2-D grids default to
+``slab`` (the ``decomp="measure"`` sweep races ``pencil2d`` against
+it on 2-axis meshes).
 
 **Topology awareness** (multi-host): every built schedule carries a
 host-crossing annotation per ``AllToAll`` (``FFTPlan.topology()``),
@@ -98,11 +114,12 @@ BACKWARD = "backward"
 MEASURE = "measure"                   # backend/decomp sentinel: autotune
 
 # decompositions the decomp="measure" sweep may substitute for each
-# other: same natural input/output layout contract per rank. The
-# cyclic/digit-permuted family (pencil_tf, fourstep1d) is excluded —
+# other: same natural index order per rank (the SHARDING the winner
+# publishes may differ — callers place data via plan.input_sharding()).
+# The cyclic/digit-permuted family (pencil_tf, fourstep1d) is excluded —
 # swapping one in would silently change the data layout the caller
 # sees, which is a correctness change, not a tuning choice.
-_SWEEP_DECOMPS = {2: ("slab",), 3: ("pencil", "slab3d")}
+_SWEEP_DECOMPS = {2: ("slab", "pencil2d"), 3: ("pencil", "slab3d")}
 
 # ---------------------------------------------------------------------------
 # Process-wide plan cache
@@ -112,7 +129,7 @@ _PLAN_CACHE: Dict[tuple, "FFTPlan"] = {}
 _TUNE_CACHE: Dict[tuple, dict] = {}
 _DECOMP_CACHE: Dict[tuple, str] = {}
 _TUNE_SKIPS: List[dict] = []
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0, "wire_profile_candidates": 0}
 
 
 def _mesh_key(mesh: Mesh) -> tuple:
@@ -141,6 +158,13 @@ def _plan_key(shape, direction, mesh, decomp, axis_names, backend,
 
 
 def plan_cache_stats() -> Dict[str, int]:
+    """Planner counters: ``hits``/``misses``/``size`` (plan cache),
+    ``autotune_skipped`` (recorded sweep exclusions, see
+    ``autotune_skips()``), ``decomp_sweeps`` (cached topology sweeps),
+    and ``wire_profile_candidates`` (per-stage wire tuples the knob
+    sweep generated from a mixed ICI/DCN topology — 0 on single-host
+    meshes, where the candidate is skip-recorded instead). Guide:
+    ``docs/tuning.md``."""
     return dict(_STATS, size=len(_PLAN_CACHE),
                 autotune_skipped=len(_TUNE_SKIPS),
                 decomp_sweeps=len(_DECOMP_CACHE))
@@ -158,6 +182,7 @@ def plan_cache_clear() -> None:
     _DECOMP_CACHE.clear()
     _TUNE_SKIPS.clear()
     _STATS["hits"] = _STATS["misses"] = 0
+    _STATS["wire_profile_candidates"] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -406,9 +431,12 @@ def _dummy_args(shape, direction, mesh, decomp, axis_names, real,
                     real=real, batch_ndim=batch_ndim)
     full = (2,) * batch_ndim + tuple(shape)
     if real and direction == BACKWARD:
-        # half-spectrum input: last grid dim padded to Hp
-        pn = mesh.shape[axis_names[-1]]
-        full = full[:-1] + (rfft_mod.padded_half(shape[-1], pn),)
+        # half-spectrum input: last grid dim at the decomposition's
+        # padded half extent (padding differs per decomp — slab3d's
+        # half axis never travels and is unpadded, pencil2d's is split
+        # by BOTH mesh axes)
+        full = full[:-1] + (rfft_mod.spectral_half_extent(
+            decomp, shape[-1], mesh, axis_names),)
     sh = probe.input_sharding()
     zero = jax.device_put(jnp.zeros(full, jnp.float32), sh)
     if real and direction == FORWARD:
@@ -416,13 +444,52 @@ def _dummy_args(shape, direction, mesh, decomp, axis_names, real,
     return (zero, zero)
 
 
-def _schedule_variants(shape, decomp, *, allow_reduced_wire) -> List[dict]:
+def _wire_profile_candidate(shape, direction, mesh, decomp, axis_names,
+                            real):
+    """The topology-aware per-stage wire tuple: cast ONLY the
+    exchanges whose device ring crosses processes (the DCN hops), keep
+    the ICI / intra-host exchanges exact. Returns the tuple when the
+    schedule's wire profile is MIXED, else a skip-reason string — a
+    schedule with no cross-host exchange (or nothing but cross-host
+    exchanges) would make the per-stage candidate a redundant duplicate
+    of a uniform one, and timing duplicates is pure sweep waste."""
+    sched = build_schedule(decomp, shape, mesh, axis_names,
+                           inverse=direction == BACKWARD, real=real)
+    flags = [bool(t["crosses_hosts"])
+             for t in exchange_topology(sched)]
+    if len(flags) < 2:
+        return (f"per-stage wire needs >=2 exchanges to differ from "
+                f"uniform wire ({decomp} has {len(flags)})")
+    if not any(flags):
+        return ("no cross-host exchange on this topology; the "
+                "per-stage candidate would duplicate the uniform "
+                "candidates")
+    if all(flags):
+        return ("every exchange crosses hosts; the per-stage candidate "
+                "would duplicate the uniform bfloat16 candidate")
+    return tuple("bfloat16" if f else None for f in flags)
+
+
+def _schedule_variants(shape, decomp, *, allow_reduced_wire,
+                       direction=FORWARD, mesh=None, axis_names=None,
+                       real=False, record_skip=None) -> List[dict]:
     """The sweep space: every (backend, overlap_chunks, wire_dtype) the
     decomposition's schedules might support, straight from
     ``schedule.CAPS``. Ineligible combinations are discovered by
     *trying* them — failures are recorded in ``autotune_skips()``
     rather than pre-filtered, so the record shows what was ruled out
-    and why."""
+    and why.
+
+    Beyond the two uniform wires, a third **per-stage** candidate is
+    generated when the schedule's exchanges have a mixed host-crossing
+    profile on ``mesh`` (``_wire_profile_candidate``): bfloat16 on the
+    DCN hops only. On single-host meshes (or schedules with one
+    exchange) that candidate degenerates into a duplicate of a uniform
+    one, so it is SKIPPED and the reason recorded via ``record_skip``
+    instead of being timed twice. The mesh's device placement is
+    identical on every process, so the candidate list — and with it
+    the sweep's collective control flow — stays deterministic
+    cluster-wide."""
     caps = CAPS[decomp]
     backends = ["fourstep", "jnp"]
     if all(_pow2(s) for s in shape):
@@ -431,6 +498,17 @@ def _schedule_variants(shape, decomp, *, allow_reduced_wire) -> List[dict]:
     wires = [None]
     if allow_reduced_wire and caps.wire:
         wires.append("bfloat16")
+        if mesh is not None:
+            try:
+                prof = _wire_profile_candidate(shape, direction, mesh,
+                                               decomp, axis_names, real)
+            except Exception as e:  # noqa: BLE001 — schedule unbuildable
+                prof = f"{type(e).__name__}: {e}"
+            if isinstance(prof, tuple):
+                wires.append(prof)
+                _STATS["wire_profile_candidates"] += 1
+            elif record_skip is not None:
+                record_skip(prof)
     return [{"backend": be, "overlap_chunks": ov, "wire_dtype": wr}
             for be in backends for ov in overlaps for wr in wires]
 
@@ -577,8 +655,18 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
             "error": err or "dummy input failed on another process"})
         _TUNE_CACHE[tkey] = fallback
         return fallback
+    def _record_wire_skip(reason):
+        _TUNE_SKIPS.append({
+            "shape": shape, "direction": direction, "decomp": decomp,
+            "real": real, "batch_ndim": batch_ndim,
+            "sweep": "wire-profile", "wire_dtype": "per-stage",
+            "error": reason})
+
     variants = _schedule_variants(shape, decomp,
-                                  allow_reduced_wire=allow_reduced_wire)
+                                  allow_reduced_wire=allow_reduced_wire,
+                                  direction=direction, mesh=mesh,
+                                  axis_names=axis_names, real=real,
+                                  record_skip=_record_wire_skip)
     best, best_t, best_plan = None, float("inf"), None
     for variant in variants:
         cand = FFTPlan(shape, direction, mesh, decomp, axis_names,

@@ -46,13 +46,22 @@ pencil, transpose-free pencil, and the r2c/c2r paths, batched or not.
 singleton axis, so it is ineligible; the planner's autotuner records
 such skips).
 
-Builders for the five stock decompositions live here
-(``slab_2d/slab_3d/pencil_3d/pencil_tf_3d/fourstep_1d``); the r2c/c2r
-builders live in ``rfft.py`` (they own the half-spectrum arithmetic);
-``build_schedule`` dispatches by decomposition name and is what
-``plan.py`` compiles. Adding a decomposition = writing one ~20-line
-builder and registering its ``Caps``; overlap, wire casting, batching,
-and the planner sweep come for free.
+Builders for the six stock decompositions live here
+(``slab_2d/slab_3d/pencil_3d/pencil_tf_3d/pencil_2d/fourstep_1d``);
+the r2c/c2r builders live in ``rfft.py`` (they own the half-spectrum
+arithmetic) and cover every decomposition but the 1-D four-step —
+``RFFT_BUILDERS`` there mirrors ``_BUILDERS`` here. ``build_schedule``
+dispatches by decomposition name and is what ``plan.py`` compiles.
+Adding a decomposition = writing one ~20-line builder and registering
+its ``Caps``; overlap, wire casting, batching, and the planner sweep
+come for free.
+
+``pencil_2d`` is the 2-axis decomposition of 2-D grids: input tiled
+``P(a0, a1)`` over BOTH mesh axes (the natural layout of a 2-D
+domain-decomposed simulation), output ``P(None, (a1, a0))`` in natural
+frequency order — three small exchanges instead of the slab's one
+P0-way exchange, each over a single mesh axis, so on a DCN×ICI mesh
+only the ``a0`` rotation crosses hosts.
 
 Transpose-free pencil (after Chatterjee & Verma, arXiv:1406.5597): the
 second full distribution transpose of the standard pencil schedule is
@@ -496,6 +505,43 @@ def pencil_tf_3d(mesh: Mesh, axes: Tuple[str, str] = ("data", "model"), *,
                     (a0, a1, None), (a0, None, a1))
 
 
+def pencil_2d(mesh: Mesh, axes: Tuple[str, str] = ("data", "model"), *,
+              inverse: bool = False, backend: str = "auto",
+              wire_dtype: WireSpec = None) -> Schedule:
+    """2-axis decomposition of 2-D grids over 2-D meshes — huge 2-D
+    grids stop being stuck with the P0-way slab: the input is tiled
+    P(a0, a1) (the natural layout of a 2-D domain-decomposed
+    simulation) and all P0·P1 devices participate.
+
+    forward: gather axis 1 over a1 (axis 0 picks up a1 as its minor
+    sharding factor), FFT it, scatter the frequency axis back over a1,
+    then one rotation over a0 gathers axis 0 and scatters k1's minor
+    factor — P(a0, a1) → P(None, (a1, a0)), both frequency axes in
+    natural order. Three exchanges, but each moves only the 1/(P0·P1)
+    local tile, and they split across the two mesh axes: on a DCN×ICI
+    mesh only the a0 rotation crosses hosts, which is exactly what the
+    per-stage wire sweep keys on. Requires P0·P1 | N0 and P0·P1 | N1.
+    inverse mirrors."""
+    a0, a1 = axes
+    p0, p1 = mesh.shape[a0], mesh.shape[a1]
+    w0, w1, w2 = _wire_tuple(wire_dtype, 3)
+    if inverse:
+        stages = (LocalFFT(-2, True, backend),
+                  AllToAll(a0, -2, -1, p0, w0),   # undo the k0 gather
+                  AllToAll(a1, -2, -1, p1, w1),   # regroup axis 1
+                  LocalFFT(-1, True, backend),
+                  AllToAll(a1, -1, -2, p1, w2))   # re-scatter axis 1
+        return Schedule("pencil2d_inv", 2, stages,
+                        (None, (a1, a0)), (a0, a1))
+    stages = (AllToAll(a1, -2, -1, p1, w0),       # gather axis 1 locally
+              LocalFFT(-1, False, backend),
+              AllToAll(a1, -1, -2, p1, w1),       # scatter k1 over a1
+              AllToAll(a0, -1, -2, p0, w2),       # gather axis 0 / split k1
+              LocalFFT(-2, False, backend))
+    return Schedule("pencil2d", 2, stages,
+                    (a0, a1), (None, (a1, a0)))
+
+
 def fourstep_1d(mesh: Mesh, axis_name: str = "data", *,
                 inverse: bool = False, backend: str = "auto",
                 wire_dtype: WireSpec = None) -> Schedule:
@@ -528,10 +574,14 @@ def fourstep_1d(mesh: Mesh, axis_name: str = "data", *,
 CAPS = {
     "slab":       Caps(rank=2, mesh_axes=1, overlap=True, wire=True,
                        real=True),
-    "slab3d":     Caps(rank=3, mesh_axes=1, overlap=True, wire=True),
+    "slab3d":     Caps(rank=3, mesh_axes=1, overlap=True, wire=True,
+                       real=True),
     "pencil":     Caps(rank=3, mesh_axes=2, overlap=True, wire=True,
                        real=True),
-    "pencil_tf":  Caps(rank=3, mesh_axes=2, overlap=True, wire=True),
+    "pencil_tf":  Caps(rank=3, mesh_axes=2, overlap=True, wire=True,
+                       real=True),
+    "pencil2d":   Caps(rank=2, mesh_axes=2, overlap=True, wire=True,
+                       real=True),
     "fourstep1d": Caps(rank=1, mesh_axes=1, overlap=False, wire=True),
 }
 
@@ -540,6 +590,7 @@ _BUILDERS = {
     "slab3d": slab_3d,
     "pencil": pencil_3d,
     "pencil_tf": pencil_tf_3d,
+    "pencil2d": pencil_2d,
     "fourstep1d": fourstep_1d,
 }
 
@@ -592,14 +643,15 @@ def build_schedule(decomp: str, shape: Tuple[int, ...], mesh: Mesh,
                 f"{sorted(k for k, c in CAPS.items() if c.real)}, "
                 f"not {decomp!r}")
         from repro.core.fft import rfft as rfft_mod
-        if decomp == "slab":
-            sched = rfft_mod.rfft_slab_schedule(
-                shape[-1], mesh, axis_names[0], inverse=inverse,
-                backend=backend, wire_dtype=wire_dtype)
+        build_r, naxes = rfft_mod.RFFT_BUILDERS[decomp]
+        if naxes == 2:
+            sched = build_r(shape[-1], mesh, tuple(axis_names[:2]),
+                            inverse=inverse, backend=backend,
+                            wire_dtype=wire_dtype)
         else:
-            sched = rfft_mod.rfft_pencil_schedule(
-                shape[-1], mesh, tuple(axis_names[:2]), inverse=inverse,
-                backend=backend, wire_dtype=wire_dtype)
+            sched = build_r(shape[-1], mesh, axis_names[0],
+                            inverse=inverse, backend=backend,
+                            wire_dtype=wire_dtype)
         return annotate_topology(sched, mesh)
     build = _BUILDERS[decomp]
     if caps.mesh_axes == 2:

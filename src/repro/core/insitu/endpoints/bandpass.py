@@ -83,16 +83,18 @@ class BandpassEndpoint(Endpoint):
             # frequency axes
             shape = data.grid.dims if data.grid is not None else re.shape
             mask = filters.lowpass_mask(shape, self.keep_frac)
-        if data.layout in ("fourstep", "rotated-fourstep"):
+        # strip the r2c suffix first: "rotated-fourstep-half" must BOTH
+        # gather axis 0 through the digit map and half-slice the last
+        # axis (independent axes, so the two compose in either order)
+        base_layout = data.layout[:-len("-half")] \
+            if data.layout.endswith("-half") else data.layout
+        if base_layout in ("fourstep", "rotated-fourstep"):
             mask = self._permute_for_layout(mask, data.layout)
         if data.layout.endswith("half") and mask.shape[-1] != re.shape[-1]:
-            # r2c path: the spectrum keeps only k_last <= N/2 (padded for
-            # the tiled all_to_all) — slice the full-grid mask to match
-            from repro.core.fft import rfft
-            hm = rfft.half_mask(mask)
-            pad = [(0, 0)] * (hm.ndim - 1) + \
-                [(0, re.shape[-1] - hm.shape[-1])]
-            mask = jnp.pad(hm, pad)
+            # r2c path: the spectrum keeps only k_last <= N/2 (padded
+            # for the tiled all_to_all) — scatter the full-grid mask
+            # into the half layout to match
+            mask = filters.halfspec_mask(mask, re.shape[-1])
         arrays = dict(data.arrays)
         if self.use_kernel and re.ndim == 2 and not _is_sharded(re):
             from repro.kernels import ops as kops

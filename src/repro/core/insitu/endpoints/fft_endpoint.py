@@ -3,10 +3,10 @@
 Configured exactly like the paper's XML (mesh / array / direction), it
 marshals the bridge's named array into split-plane spectral form, runs
 the planned distributed transform (any ``schedule.CAPS`` decomposition
-— slab / slab3d / pencil / pencil_tf / fourstep1d, inferred by grid
-rank and mesh when ``decomp`` is omitted; FFTW's plan-execute
-lifecycle via the cached ``FFTPlan``), and republishes the result on
-the bridge for downstream consumers. Forward sets
+— slab / slab3d / pencil / pencil_tf / pencil2d / fourstep1d,
+inferred by grid rank and mesh when ``decomp`` is omitted; FFTW's
+plan-execute lifecycle via the cached ``FFTPlan``), and republishes
+the result on the bridge for downstream consumers. Forward sets
 ``domain="spectral"`` + the layout tag; backward restores spatial
 data.
 
@@ -14,8 +14,11 @@ Beyond the paper's complex endpoint:
 
 * ``real=True`` uses the r2c/c2r half-spectrum plans (``plan_rfft``) —
   half the local FFT work and half the all_to_all wire bytes for the
-  real simulation fields the paper actually targets. Forward publishes
-  the half-spectrum pair and tags the layout ``*-half``.
+  real simulation fields the paper actually targets, on EVERY
+  decomposition but ``fourstep1d`` (slab3d on 1-axis meshes and the
+  digit-permuted pencil_tf included). Forward publishes the
+  half-spectrum pair and tags the layout ``*-half``; ``Bandpass``
+  gathers/slices its mask to match any such tag automatically.
 * ``backend="measure"`` autotunes the plan on first use (FFTW_MEASURE).
 * ``batch_ndim=k`` transforms arrays with ``k`` leading batch dims
   (many fields per step) under one compiled plan.
@@ -43,7 +46,8 @@ from repro.core.insitu.endpoint import Endpoint
 
 _LAYOUT = {"slab": "transposed", "slab3d": "transposed",
            "pencil": "rotated", "pencil_tf": "rotated-fourstep",
-           "fourstep1d": "fourstep"}
+           "pencil2d": "transposed",   # natural order; only the
+           "fourstep1d": "fourstep"}   # sharding is 2-axis-transposed
 
 # decompositions whose SPATIAL side is the cyclic layout (global element
 # g = m·P + p on shard p along the first sharded grid axis) — their

@@ -9,11 +9,21 @@ Cells (all single-pod 16×16 unless suffixed `@pod2`):
   slab2d-16384           — paper-faithful slab (1-D) decomposition: only
                            the 16-way data axis participates (the
                            scalability ceiling the paper names in §5)
+  pencil2d-16384         — 2-axis decomposition of the same 2-D grid:
+                           all 256 chips tile it (three small exchanges
+                           instead of one 16-way exchange)
   pencil3d-1024          — pencil (2-D) decomposition over all 256 chips
   pencil3d-1024-bf16     — + bf16 wire transport (beyond-paper)
+  pencil3d-1024-dcnwire  — per-STAGE wire: bf16 on the second (a0)
+                           rotation only — the hop that crosses DCN on
+                           multi-host meshes, i.e. the tuple the
+                           topology-aware measure sweep generates
   slab2d-16384-overlap4  — + chunked compute/comm pipelining
+  r2c3d-slab3d-1024      — real-input 3-D slab: half-spectrum planes,
+                           one exchange, unpadded half axis
   fig2-chain-8192        — forward → bandpass → inverse fused chain (the
                            full paper workflow at scale)
+  fig2-r2c-8192          — the same chain on the r2c half-spectrum
 
 No depth scan ⇒ cost_analysis needs no trip extrapolation; collective
 bytes come from the same HLO parser. FLOP reference: 5·N·log2 N per 1-D
@@ -58,10 +68,31 @@ def build(kind: str, mesh):
         n = int(kind.split("-")[1])
         shape = (n, n, n)
         spec = P("data", "model", None)
-        wire = jnp.bfloat16 if kind.endswith("bf16") else None
+        # per-stage wire ("dcnwire"): cast only the SECOND rotation
+        # (the a0 exchange — the hop that crosses DCN on this repo's
+        # multi-host meshes) — the tuple the topology-aware measure
+        # sweep generates for that profile
+        wire = (jnp.bfloat16 if kind.endswith("bf16")
+                else (None, "bfloat16") if kind.endswith("dcnwire")
+                else None)
         fn = lambda r, i: D.pencil_fft_3d(r, i, mesh,
                                           wire_dtype=wire)
         flops = 3 * 5 * n * n * n * math.log2(n)
+    elif kind.startswith("pencil2d"):
+        n = int(kind.split("-")[1])
+        shape = (n, n)
+        spec = P("data", "model")
+        fn = lambda r, i: D.pencil2d_fft_2d(r, i, mesh)
+        flops = 2 * 5 * n * n * math.log2(n)
+    elif kind.startswith("r2c3d-slab3d"):
+        from repro.core.fft import rfft as rfft_mod
+        n = int(kind.split("-")[-1])
+        shape = (n, n, n)
+        fn = lambda x: rfft_mod.rfft3_slab3d(x, mesh, "data")
+        flops = 3 * 5 * n * n * n * math.log2(n) / 2   # half-spectrum
+        args = (sds(shape, jnp.float32),)
+        sh = NamedSharding(mesh, P("data", None, None))
+        return fn, args, (sh,), flops
     elif kind.startswith("fig2-r2c"):
         # real-input half-spectrum chain (FFTW r2c analogue, §Perf C5)
         from repro.core.fft import rfft as rfft_mod
@@ -125,14 +156,22 @@ def run_cell(kind: str, mesh_name: str = "pod1") -> dict:
     return result
 
 
-CELLS = ["slab2d-16384", "slab2d-16384-overlap4", "pencil3d-1024",
-         "pencil3d-1024-bf16", "fig2-chain-8192", "fig2-r2c-8192"]
+CELLS = ["slab2d-16384", "slab2d-16384-overlap4", "pencil2d-16384",
+         "pencil3d-1024", "pencil3d-1024-bf16", "pencil3d-1024-dcnwire",
+         "r2c3d-slab3d-1024", "fig2-chain-8192", "fig2-r2c-8192"]
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", default=None)
-    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap = argparse.ArgumentParser(
+        description="Dry-run + roofline for the distributed FFT on the "
+                    "production mesh (see module docstring for what "
+                    "each cell exercises).")
+    ap.add_argument("--cell", default=None,
+                    help="run ONE cell instead of the full grid; known: "
+                         + ", ".join(CELLS))
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"],
+                    help="pod1 = 16x16 single pod (256 chips), "
+                         "pod2 = 2x16x16 (512 chips)")
     args = ap.parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
     cells = [args.cell] if args.cell else CELLS

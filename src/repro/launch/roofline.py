@@ -198,6 +198,9 @@ def extrapolate(c0: dict, c1: dict, trips: int) -> CellCost:
 
 def raw_costs(compiled) -> dict:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        # older jax returns [per-device dict]; newer returns the dict
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     ma = compiled.memory_analysis()
     io_bytes = (int(getattr(ma, "argument_size_in_bytes", 0))

@@ -53,7 +53,8 @@ def test_plan_cache_hit_and_miss_identity():
     assert planmod.plan_cache_stats() == {"hits": 0, "misses": 0,
                                           "size": 0,
                                           "autotune_skipped": 0,
-                                          "decomp_sweeps": 0}
+                                          "decomp_sweeps": 0,
+                                          "wire_profile_candidates": 0}
 
 
 def test_autotune_records_skipped_variants():
@@ -80,6 +81,73 @@ def test_autotune_records_skipped_variants():
     assert any(s["overlap_chunks"] == 4 for s in skips)
     planmod.plan_cache_clear()
     assert planmod.plan_cache_stats()["autotune_skipped"] == 0
+
+
+def test_wire_profile_candidate_generation():
+    """The per-stage wire candidate exists ONLY for mixed-topology
+    schedules: cast the cross-host exchanges, keep the on-host ones
+    exact. Anything else would duplicate a uniform candidate and must
+    come back as a skip reason instead of a tuple."""
+    from types import SimpleNamespace
+
+    from repro.core.fft import schedule as schedmod
+    from repro.core.fft.plan import FORWARD, _wire_profile_candidate
+
+    dev = SimpleNamespace(process_index=0)
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 2, "model": 2},
+                           devices=np.full((2, 2), dev))
+    # single host: every exchange is on-host -> reason, not a tuple
+    got = _wire_profile_candidate((8, 8, 8), FORWARD, mesh, "pencil",
+                                  ("data", "model"), False)
+    assert isinstance(got, str) and "no cross-host exchange" in got
+    # one-exchange schedules can never differ from uniform wire
+    got = _wire_profile_candidate((8, 8), FORWARD, mesh, "slab",
+                                  ("data",), False)
+    assert isinstance(got, str) and ">=2 exchanges" in got
+    # fake a DCN axis: only exchanges over "data" cross hosts
+    orig = schedmod.axis_crosses_processes
+    schedmod.axis_crosses_processes = \
+        lambda mesh, axis_name: axis_name == "data"
+    try:
+        got = _wire_profile_candidate((8, 8, 8), FORWARD, mesh,
+                                      "pencil", ("data", "model"), False)
+        # pencil forward rotates over a1 ("model", on-host) first, then
+        # a0 ("data", DCN): cast the second exchange only
+        assert got == (None, "bfloat16")
+        got = _wire_profile_candidate((8, 8), FORWARD, mesh, "pencil2d",
+                                      ("data", "model"), True)
+        # r2c pencil2d: real gather + half scatter over "model" stay
+        # exact, the single "data" rotation is cast
+        assert got == (None, None, "bfloat16")
+        # every exchange crossing -> duplicate of uniform bf16
+        schedmod.axis_crosses_processes = lambda mesh, axis_name: True
+        got = _wire_profile_candidate((8, 8, 8), FORWARD, mesh,
+                                      "pencil", ("data", "model"), False)
+        assert isinstance(got, str) and "uniform bfloat16" in got
+    finally:
+        schedmod.axis_crosses_processes = orig
+
+
+def test_measure_sweep_records_wire_profile_skip():
+    """On a single-host mesh the knob sweep must SKIP the per-stage
+    wire candidate (it would duplicate a uniform one) and record why —
+    the satellite fix for redundant-duplicate timing — leaving the
+    generated-candidate counter at zero."""
+    from repro.compat import make_mesh
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, MEASURE, plan_dft
+
+    planmod.plan_cache_clear()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+    skips = [s for s in planmod.autotune_skips()
+             if s.get("sweep") == "wire-profile"]
+    assert len(skips) == 1, planmod.autotune_skips()
+    assert skips[0]["wire_dtype"] == "per-stage"
+    assert ">=2 exchanges" in skips[0]["error"]
+    assert planmod.plan_cache_stats()["wire_profile_candidates"] == 0
+    planmod.plan_cache_clear()
 
 
 def test_plan_sharding_contracts():

@@ -64,3 +64,49 @@ def test_half_bins_and_padding():
     assert half_bins(96) == 49
     assert padded_half(96, 4) == 52
     assert padded_half(8, 2) == 6   # 5 -> 6
+
+
+def test_spectral_half_extent_per_decomp():
+    """Each decomposition pads the half axis to the shard counts that
+    actually split it: slab3d never exchanges it (unpadded), pencil2d
+    splits it over BOTH mesh axes."""
+    import pytest
+
+    from repro.core.fft.rfft import spectral_half_extent
+
+    class StubMesh:
+        shape = {"data": 4, "model": 2}
+
+    mesh = StubMesh()
+    names = ("data", "model")
+    assert spectral_half_extent("slab", 96, mesh, ("data",)) == 52
+    assert spectral_half_extent("slab3d", 24, mesh, ("data",)) == 13
+    assert spectral_half_extent("pencil", 24, mesh, names) == 14
+    assert spectral_half_extent("pencil_tf", 24, mesh, names) == 14
+    assert spectral_half_extent("pencil2d", 56, mesh, names) == 32
+    with pytest.raises(ValueError, match="fourstep1d"):
+        spectral_half_extent("fourstep1d", 64, mesh, ("data",))
+
+
+def test_halfspec_maps_roundtrip_mask():
+    """Scattering a full-spectrum mask through the half-layout maps
+    must agree with what the r2c transform actually keeps: position g
+    of the half axis answers for bin g AND its Hermitian alias n-g."""
+    import numpy as np
+
+    from repro.core.fft.rfft import (half_bins, halfspec_freq_of_position,
+                                     halfspec_position_of_freq)
+
+    n, hp = 24, 14
+    freq = halfspec_freq_of_position(n, hp)
+    pos = halfspec_position_of_freq(n)
+    h = half_bins(n)
+    full_mask = np.arange(n) % 3 == 0          # any full-spectrum mask
+    # gather into the half layout via the position->bin map
+    half = np.array([bool(full_mask[k]) if k >= 0 else False
+                     for k in freq])
+    assert half[:h].tolist() == full_mask[:h].tolist()
+    assert not half[h:].any()
+    # every full bin k finds its storage slot (alias above Nyquist)
+    for k in range(n):
+        assert freq[pos[k]] == min(k, n - k)

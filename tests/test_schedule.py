@@ -1,7 +1,8 @@
-"""Schedule-engine correctness: all five decompositions through the ONE
-generic executor, × {batched, real, overlap, bf16 wire}, vs the
-``jnp.fft.fftn``/numpy oracle — plus the layout index-map inversions
-for the four-step / transpose-free permuted outputs.
+"""Schedule-engine correctness: all six decompositions through the ONE
+generic executor, × {batched, real, overlap, bf16 + per-stage wire},
+vs the ``jnp.fft.fftn``/numpy oracle — plus the layout index-map
+inversions for the four-step / transpose-free permuted outputs and the
+r2c half-spectrum maps.
 
 Distributed checks run in a subprocess with 8 host devices (per the
 repo's isolation rule); IR/layout properties run in-process.
@@ -32,6 +33,7 @@ def test_overlap_site_validation():
     for build, args, both in ((S.slab_2d, ("data",), True),
                               (S.slab_3d, ("data",), True),
                               (S.pencil_3d, (("data", "model"),), True),
+                              (S.pencil_2d, (("data", "model"),), True),
                               (S.pencil_tf_3d, (("data", "model"),),
                                False)):
         for inverse in ((False, True) if both else (False,)):
@@ -39,8 +41,18 @@ def test_overlap_site_validation():
             k, t = S.overlap_site(sched)
             assert isinstance(sched.stages[k], S.AllToAll)
             assert t == sched.stages[k].concat
+    # the r2c/c2r schedules expose sites too (tf inverse excepted)
+    from repro.core.fft import rfft as R
+    for build, args, both in (
+            (R.rfft_slab3d_schedule, ("data",), True),
+            (R.rfft_pencil2d_schedule, (("data", "model"),), True),
+            (R.rfft_pencil_tf_schedule, (("data", "model"),), False)):
+        for inverse in ((False, True) if both else (False,)):
+            sched = build(24, mesh, *args, inverse=inverse)
+            k, t = S.overlap_site(sched)
+            assert isinstance(sched.stages[k], S.AllToAll)
     # ineligible: the four-step exchange concatenates onto a singleton
-    # behind a Reorder, and the tf inverse starts with the digit unfold
+    # behind a Reorder, and the tf inverses start with the digit unfold
     with pytest.raises(ValueError):
         S.overlap_site(S.fourstep_1d(mesh, "data"))
     with pytest.raises(ValueError):
@@ -48,6 +60,10 @@ def test_overlap_site_validation():
     with pytest.raises(ValueError):
         S.overlap_site(S.pencil_tf_3d(mesh, ("data", "model"),
                                       inverse=True))
+    with pytest.raises(ValueError):
+        S.overlap_site(R.rfft_pencil_tf_schedule(24, mesh,
+                                                 ("data", "model"),
+                                                 inverse=True))
 
 
 def test_build_schedule_registry_and_errors():
@@ -56,19 +72,79 @@ def test_build_schedule_registry_and_errors():
 
     mesh = make_mesh((1, 1), ("data", "model"))
     assert set(CAPS) == {"slab", "slab3d", "pencil", "pencil_tf",
-                         "fourstep1d"}
+                         "pencil2d", "fourstep1d"}
     with pytest.raises(ValueError, match="unknown decomposition"):
         build_schedule("hexagonal", (8, 8), mesh, ("data",))
     with pytest.raises(ValueError, match="rank"):
         build_schedule("slab", (8, 8, 8), mesh, ("data",))
     with pytest.raises(ValueError, match="real"):
         build_schedule("fourstep1d", (64,), mesh, ("data",), real=True)
-    # real slab/pencil route to the rfft builders
+    # every real-capable decomposition routes to its rfft builder
     s = build_schedule("slab", (8, 8), mesh, ("data",), real=True)
     assert s.in_arity == 1 and s.out_arity == 2
     s = build_schedule("pencil", (8, 8, 8), mesh, ("data", "model"),
                       real=True, inverse=True)
     assert s.in_arity == 2 and s.out_arity == 1
+    for decomp, shape, names, name in (
+            ("slab3d", (8, 8, 8), ("data",), "rfft_slab3d"),
+            ("pencil_tf", (8, 8, 8), ("data", "model"),
+             "rfft_pencil_tf"),
+            ("pencil2d", (8, 8), ("data", "model"), "rfft_pencil2d")):
+        s = build_schedule(decomp, shape, mesh, names, real=True)
+        assert s.in_arity == 1 and s.out_arity == 2
+        assert s.name == name
+        si = build_schedule(decomp, shape, mesh, names, real=True,
+                            inverse=True)
+        assert si.in_arity == 2 and si.out_arity == 1
+
+
+def test_halfspec_maps_invert():
+    """The half-spectrum layout maps must behave like the four-step
+    digit maps: position_of_freq is the exact inverse of
+    freq_of_position on the stored bins, folds the Hermitian alias
+    k -> n-k above the Nyquist, and freq_of_position marks the
+    all_to_all padding positions with -1."""
+    from repro.core.fft.rfft import (half_bins, halfspec_freq_of_position,
+                                     halfspec_position_of_freq,
+                                     padded_half)
+    for n, p in [(8, 2), (24, 2), (96, 8), (56, 4)]:
+        hp = padded_half(n, p)
+        freq = halfspec_freq_of_position(n, hp)
+        pos = halfspec_position_of_freq(n)
+        h = half_bins(n)
+        assert len(freq) == hp and len(pos) == n
+        # stored bins: mutually inverse
+        np.testing.assert_array_equal(freq[pos[:h]], np.arange(h))
+        np.testing.assert_array_equal(pos[freq[:h]], np.arange(h))
+        # padding positions hold no bin
+        assert all(freq[h:] == -1)
+        # Hermitian fold: bin k above Nyquist lives at position n-k
+        for k in range(h, n):
+            assert pos[k] == n - k
+
+
+def test_mask_pencil_tf_r2c_layout():
+    """The r2c transpose-free mask must compose the axis-0 digit gather
+    with the last-axis half slice/pad — the layout the chain's
+    ``rotated-fourstep-half`` tag names."""
+    from repro.core.fft.distributed import fourstep_freq_of_position
+    from repro.core.fft.filters import (halfspec_mask, lowpass_mask,
+                                        mask_pencil_tf_3d_r2c, mask_r2c)
+    from repro.core.fft.rfft import half_bins
+
+    shape, p0, hp = (16, 8, 24), 4, 14
+    base = np.asarray(lowpass_mask(shape, 0.3))
+    got = np.asarray(mask_pencil_tf_3d_r2c(shape, p0, hp, keep_frac=0.3))
+    freq = fourstep_freq_of_position(shape[0], p0)
+    h = half_bins(shape[-1])
+    assert got.shape == (16, 8, hp)
+    for g in range(shape[0]):
+        np.testing.assert_array_equal(got[g, :, :h], base[freq[g], :, :h])
+    assert not got[..., h:].any(), "padding columns must be masked out"
+    # natural-order r2c mask: plain slice+pad
+    nat = np.asarray(mask_r2c(shape, hp, keep_frac=0.3))
+    np.testing.assert_array_equal(nat, np.asarray(
+        halfspec_mask(base, hp)))
 
 
 def test_wire_tuple_per_stage():
@@ -178,6 +254,18 @@ def test_bandpass_permutes_mask_for_digit_layouts():
     np.testing.assert_allclose(
         np.asarray(out2.arrays["field"][0]),
         np.asarray(re) * np.asarray(lowpass_mask((n0, n1, n2), 0.3)))
+    # r2c digit layout ("rotated-fourstep-half"): the mask must BOTH be
+    # gathered through the digit map and half-sliced/padded to the
+    # spectrum's padded half extent
+    hp = 6                       # half_bins(8)=5, padded to 6
+    datah = BridgeData(
+        arrays={"field": (re[..., :hp], im[..., :hp])}, grid=grid,
+        domain="spectral", layout="rotated-fourstep-half")
+    outh = ep.execute(datah)
+    wanth = np.zeros((n0, n1, hp), np.float32)
+    wanth[..., :5] = want[..., :5]
+    np.testing.assert_allclose(np.asarray(outh.arrays["field"][0]),
+                               np.asarray(re)[..., :hp] * wanth)
 
 
 # ---------------------------------------------------------------------------
@@ -312,6 +400,69 @@ SCRIPT = textwrap.dedent("""
                          batch_ndim=1, **kw)
         out[f"rpencil_{tag}_rt"] = float(np.max(np.abs(
             np.asarray(binv.execute(fr, fi)) - x3r)))
+
+    # ---- r2c slab3d (one mesh axis): batched + overlap + bf16 -------------
+    # the single exchange never touches the half axis, so the output
+    # half extent is UNPADDED: exactly half_bins(G[2])
+    for tag, kw in [("plain", {}), ("ov", {"overlap_chunks": 2}),
+                    ("bf16", {"wire_dtype": "bfloat16"})]:
+        f = plan_rfft(G, FORWARD, mesh, decomp="slab3d", batch_ndim=1,
+                      **kw)
+        fr, fi = f.execute(*f.place(x3r))
+        assert fr.shape[-1] == h3, (tag, fr.shape)
+        out[f"rslab3d_{tag}"] = relerr(cplx((fr, fi)), ref3r)
+        binv = plan_rfft(G, BACKWARD, mesh, decomp="slab3d",
+                         batch_ndim=1, **kw)
+        out[f"rslab3d_{tag}_rt"] = float(np.max(np.abs(
+            np.asarray(binv.execute(fr, fi)) - x3r)))
+
+    # ---- r2c transpose-free pencil: cyclic in, digit-permuted half out ----
+    xr1 = x3r[0]
+    xr1c = xr1[D.cyclic_order(G[0], P0)]
+    reftfr = np.fft.rfftn(xr1)[perm]
+    for tag, kw in [("plain", {}), ("ov", {"overlap_chunks": 2})]:
+        f = plan_rfft(G, FORWARD, mesh, decomp="pencil_tf", **kw)
+        fr, fi = f.execute(*f.place(xr1c))
+        out[f"rtf_{tag}"] = relerr(cplx((fr, fi))[..., :h3], reftfr)
+        # the tf inverse starts with the digit unfold: no overlap site
+        binv = plan_rfft(G, BACKWARD, mesh, decomp="pencil_tf")
+        out[f"rtf_{tag}_rt"] = float(np.max(np.abs(
+            np.asarray(binv.execute(fr, fi)) - xr1c)))
+    # batched r2c tf under one plan
+    xrbc = np.stack([xr1c, 2.0 * xr1c])
+    fb = plan_rfft(G, FORWARD, mesh, decomp="pencil_tf", batch_ndim=1)
+    fr, fi = fb.execute(*fb.place(xrbc))
+    out["rtf_batched"] = relerr(cplx((fr, fi))[..., :h3],
+                                np.stack([reftfr, 2.0 * reftfr]))
+
+    # ---- pencil2d: 2-axis decomposition of 2-D grids ----------------------
+    # batched + overlap + bf16 + PER-STAGE wire (cast one of the three
+    # exchanges only); natural frequency order, so the slab oracle ref2
+    # applies unchanged
+    for tag, kw in [("plain", {}), ("ov", {"overlap_chunks": 2}),
+                    ("bf16", {"wire_dtype": "bfloat16"}),
+                    ("psbf16", {"wire_dtype": (None, None, "bfloat16")})]:
+        f = plan_dft((N0, N1), FORWARD, mesh, decomp="pencil2d",
+                     batch_ndim=1, **kw)
+        b = plan_dft((N0, N1), BACKWARD, mesh, decomp="pencil2d",
+                     batch_ndim=1, **kw)
+        fr, fi = f.execute(*f.place(xb))
+        out[f"p2d_{tag}"] = relerr(cplx((fr, fi)), ref2)
+        out[f"p2d_{tag}_rt"] = float(np.max(np.abs(
+            cplx(b.execute(fr, fi)) - xb)))
+
+    # ---- pencil2d r2c: real gather + half-width spectral scatters ---------
+    hp2d = rfft.padded_half(N1r, 8)
+    for tag, kw in [("plain", {}), ("ov", {"overlap_chunks": 2})]:
+        f = plan_rfft((N0r, N1r), FORWARD, mesh, decomp="pencil2d",
+                      batch_ndim=1, **kw)
+        fr, fi = f.execute(*f.place(xrb))
+        assert fr.shape[-1] == hp2d, (tag, fr.shape)
+        out[f"rp2d_{tag}"] = relerr(cplx((fr, fi))[..., :h], refr)
+        binv = plan_rfft((N0r, N1r), BACKWARD, mesh, decomp="pencil2d",
+                         batch_ndim=1, **kw)
+        out[f"rp2d_{tag}_rt"] = float(np.max(np.abs(
+            np.asarray(binv.execute(fr, fi)) - xrb)))
 
     print(json.dumps(out))
 """)

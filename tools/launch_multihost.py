@@ -14,9 +14,13 @@ Modes:
   end-to-end demos, re-executing THIS file per process:
     - ``fft``: builds a DCN×ICI mesh with ``make_multihost_mesh``,
       runs pencil + slab3d distributed FFT plans whose ``AllToAll``
-      stages cross processes, checks them against the single-process
-      ``np.fft.fftn`` oracle, and runs the planner's per-topology
-      ``decomp="measure"`` sweep.
+      stages cross processes, checks them — plus the r2c slab3d
+      schedule (half-spectrum exchange) — against the single-process
+      ``np.fft.fftn``/``rfftn`` oracles, exercises the per-stage wire
+      policy (bfloat16 on the DCN rotation only, exact on ICI;
+      asserted via ``FFTPlan.topology()`` and the measured knob
+      sweep's ``wire_profile_candidates`` counter), and runs the
+      planner's per-topology ``decomp="measure"`` sweep.
     - ``transit``: splits the cluster into disjoint producer/consumer
       meshes, pushes a field through ``TransitBridge`` (host
       transport), asserts bit-identical delivery, and runs a
@@ -185,7 +189,9 @@ def _demo_fft() -> None:
     from jax.experimental.multihost_utils import process_allgather
     from jax.sharding import NamedSharding
 
-    from repro.core.fft.plan import plan_dft, FORWARD
+    from repro.core.fft import rfft as rfft_mod
+    from repro.core.fft.plan import (FORWARD, plan_cache_stats, plan_dft,
+                                     plan_rfft)
     from repro.launch.mesh import describe_mesh, make_multihost_mesh
 
     nproc = jax.process_count()
@@ -230,6 +236,50 @@ def _demo_fft() -> None:
     assert err1 < 1e-4, f"slab3d mismatch vs oracle: {err1}"
     _bench_row(f"multihost_fft_slab3d_{nproc}x{dpp}", us1,
                f"N={N[0]}x16x16;one-exchange")
+
+    # r2c schedule on the SAME cross-host slab3d topology: the
+    # half-spectrum exchange must match the np.fft.rfftn oracle
+    pr = plan_rfft(N, FORWARD, mesh1, decomp="slab3d",
+                   axis_names=("dcn",))
+    gx = _make_global(x, pr.input_sharding())
+    hr, hi = pr.execute(gx)
+    h = rfft_mod.half_bins(N[-1])
+    gotr = (np.asarray(process_allgather(hr, tiled=True))
+            + 1j * np.asarray(process_allgather(hi, tiled=True)))[..., :h]
+    refr = np.fft.rfftn(x)
+    errr = float(np.max(np.abs(gotr - refr)) / np.max(np.abs(refr)))
+    print(f"slab3d r2c rfftn rel err = {errr:.2e}", flush=True)
+    assert errr < 1e-4, f"slab3d r2c mismatch vs oracle: {errr}"
+    _bench_row(f"multihost_fft_slab3d_r2c_{nproc}x{dpp}", _timeit(
+        pr.execute, gx), f"N={N[0]}x16x16;half-spectrum-exchange")
+
+    # per-stage wire on the mixed DCN x ICI pencil topology: cast ONLY
+    # the cross-host rotation, keep the ICI one exact — the policy the
+    # FFTW_MEASURE knob sweep generates from the crosses_hosts flags
+    prof = tuple("bfloat16" if t["crosses_hosts"] else None
+                 for t in plan.topology())
+    if any(prof) and not all(prof):
+        pw = plan_dft(N, FORWARD, mesh, decomp="pencil",
+                      axis_names=("dcn", "data"), wire_dtype=prof)
+        wt = [(t["axis_name"], t["wire_dtype"], t["crosses_hosts"])
+              for t in pw.topology()]
+        print(f"per-stage wire topology: {wt}", flush=True)
+        assert all((w == "bfloat16") == c for _, w, c in wt), wt
+        gz = _make_global(np.zeros_like(x), pw.input_sharding())
+        _bench_row(f"multihost_fft_pencil_dcnwire_{nproc}x{dpp}",
+                   _timeit(pw.execute, _make_global(x, pw.input_sharding()),
+                           gz),
+                   f"wire={prof};cast-DCN-only")
+        # ...and the full measured sweep (decomp="measure" knob-tuning
+        # each candidate) must GENERATE that candidate from the
+        # topology (small non-pow2 grid keeps the sweep short)
+        Ns = (12 * nproc, 12, 12)
+        plan_dft(Ns, FORWARD, mesh, decomp="measure",
+                 axis_names=("dcn", "data"), backend="measure")
+        nprof = plan_cache_stats()["wire_profile_candidates"]
+        print(f"measure sweep generated {nprof} per-stage wire "
+              f"candidate(s)", flush=True)
+        assert nprof >= 1, plan_cache_stats()
 
     # per-topology decomposition sweep (the Verma-style slab/pencil call)
     swept = plan_dft(N, FORWARD, mesh, decomp="measure",
