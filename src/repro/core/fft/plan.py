@@ -91,10 +91,31 @@ leading dims — a whole stack of fields per step under ONE compiled
 plan, the in-situ chain's steady-state shape. Overlap chunking
 composes with both (it is an executor property, not a per-schedule
 special case).
+
+**Locking contract** (the serve engine's worker threads share these
+caches): every module-level structure — ``_PLAN_CACHE``,
+``_TUNE_CACHE``, ``_DECOMP_CACHE``, ``_TUNE_SKIPS``, ``_STATS`` — is
+guarded by one re-entrant module lock (``_LOCK``); all reads and
+writes go through it, so ``plan_cache_stats()`` /
+``autotune_skips()`` / ``plan_cache_clear()`` are safe from any
+thread. Cache *population* is **single-flight per key**
+(``_single_flight``): the first thread to request an uncached plan
+(or measured sweep) installs an in-flight marker and builds it
+OUTSIDE the lock — compilation and timing never serialize unrelated
+plans — while every other thread asking for the SAME key blocks on
+the marker and then reads the cached result. First-toucher measures,
+everyone else hits; a key is never compiled (or swept) twice, and a
+builder that raises clears its marker so a waiter retries the build
+rather than hanging. ``plan_cache_stats()["thread_waits"]`` counts
+the calls that blocked on another thread's in-flight build. Measured
+sweeps on multi-process meshes issue collectives; the single-flight
+discipline also guarantees only ONE thread per process enters them,
+keeping cluster-wide agreement (``_agree_choice``) unambiguous.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -129,7 +150,49 @@ _PLAN_CACHE: Dict[tuple, "FFTPlan"] = {}
 _TUNE_CACHE: Dict[tuple, dict] = {}
 _DECOMP_CACHE: Dict[tuple, str] = {}
 _TUNE_SKIPS: List[dict] = []
-_STATS = {"hits": 0, "misses": 0, "wire_profile_candidates": 0}
+_STATS = {"hits": 0, "misses": 0, "wire_profile_candidates": 0,
+          "thread_waits": 0}
+
+# One re-entrant lock guards every module-level structure above (see
+# the module docstring's locking contract); _PENDING holds the
+# in-flight single-flight markers, keyed by (cache name, cache key).
+_LOCK = threading.RLock()
+_PENDING: Dict[tuple, threading.Event] = {}
+
+
+def _single_flight(cache_name: str, cache: dict, key, build):
+    """Return ``(value, was_cached)`` for ``cache[key]``, building at
+    most once across threads. The builder runs OUTSIDE ``_LOCK`` (so
+    unrelated keys compile concurrently); threads racing the same key
+    wait on the builder's in-flight marker instead of re-building. A
+    builder that raises clears its marker — the exception propagates
+    to it alone, and one waiter becomes the next builder (retry, not
+    hang)."""
+    while True:
+        with _LOCK:
+            if key in cache:
+                return cache[key], True
+            ev = _PENDING.get((cache_name, key))
+            if ev is None:
+                _PENDING[(cache_name, key)] = threading.Event()
+                break
+            _STATS["thread_waits"] += 1
+        ev.wait()
+    try:
+        value = build()
+    except BaseException:
+        with _LOCK:
+            _PENDING.pop((cache_name, key)).set()
+        raise
+    with _LOCK:
+        cache[key] = value
+        _PENDING.pop((cache_name, key)).set()
+    return value, False
+
+
+def _record_skip(entry: dict) -> None:
+    with _LOCK:
+        _TUNE_SKIPS.append(entry)
 
 
 def _mesh_key(mesh: Mesh) -> tuple:
@@ -163,26 +226,33 @@ def plan_cache_stats() -> Dict[str, int]:
     ``autotune_skips()``), ``decomp_sweeps`` (cached topology sweeps),
     and ``wire_profile_candidates`` (per-stage wire tuples the knob
     sweep generated from a mixed ICI/DCN topology — 0 on single-host
-    meshes, where the candidate is skip-recorded instead). Guide:
-    ``docs/tuning.md``."""
-    return dict(_STATS, size=len(_PLAN_CACHE),
-                autotune_skipped=len(_TUNE_SKIPS),
-                decomp_sweeps=len(_DECOMP_CACHE))
+    meshes, where the candidate is skip-recorded instead), plus
+    ``thread_waits`` (calls that blocked on another thread's
+    in-flight build of the same key — the shared-warm-cache signal:
+    N serve workers racing one cold plan show N-1 waits and ONE
+    miss). Guide: ``docs/tuning.md``."""
+    with _LOCK:
+        return dict(_STATS, size=len(_PLAN_CACHE),
+                    autotune_skipped=len(_TUNE_SKIPS),
+                    decomp_sweeps=len(_DECOMP_CACHE))
 
 
 def autotune_skips() -> List[dict]:
     """Variants the FFTW_MEASURE sweep could not build/run, with the
     error that excluded each — the anti-silent-mis-tuning record."""
-    return list(_TUNE_SKIPS)
+    with _LOCK:
+        return list(_TUNE_SKIPS)
 
 
 def plan_cache_clear() -> None:
-    _PLAN_CACHE.clear()
-    _TUNE_CACHE.clear()
-    _DECOMP_CACHE.clear()
-    _TUNE_SKIPS.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
-    _STATS["wire_profile_candidates"] = 0
+    with _LOCK:
+        _PLAN_CACHE.clear()
+        _TUNE_CACHE.clear()
+        _DECOMP_CACHE.clear()
+        _TUNE_SKIPS.clear()
+        _STATS["hits"] = _STATS["misses"] = 0
+        _STATS["wire_profile_candidates"] = 0
+        _STATS["thread_waits"] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -322,24 +392,22 @@ def plan_dft(shape, direction: str, mesh: Mesh, *,
     key = _plan_key(shape, direction, mesh, decomp, axis_names, backend,
                     overlap_chunks, real, batch_ndim, wire,
                     allow_reduced_wire if backend == MEASURE else None)
-    plan = _PLAN_CACHE.get(key)
-    if plan is not None:
-        _STATS["hits"] += 1
-        return plan
-    _STATS["misses"] += 1
 
-    if backend == MEASURE:
-        tuned = _autotune(shape, direction, mesh, decomp, axis_names,
-                          real=real, batch_ndim=batch_ndim,
-                          allow_reduced_wire=allow_reduced_wire)
-        plan = plan_dft(shape, direction, mesh, decomp=decomp,
-                        axis_names=axis_names, real=real,
-                        batch_ndim=batch_ndim, **tuned)
-    else:
-        plan = FFTPlan(shape, direction, mesh, decomp, axis_names,
+    def _build() -> FFTPlan:
+        if backend == MEASURE:
+            tuned = _autotune(shape, direction, mesh, decomp, axis_names,
+                              real=real, batch_ndim=batch_ndim,
+                              allow_reduced_wire=allow_reduced_wire)
+            return plan_dft(shape, direction, mesh, decomp=decomp,
+                            axis_names=axis_names, real=real,
+                            batch_ndim=batch_ndim, **tuned)
+        return FFTPlan(shape, direction, mesh, decomp, axis_names,
                        backend, overlap_chunks, real, batch_ndim,
                        wire).compile()
-    _PLAN_CACHE[key] = plan
+
+    plan, cached = _single_flight("plan", _PLAN_CACHE, key, _build)
+    with _LOCK:
+        _STATS["hits" if cached else "misses"] += 1
     return plan
 
 
@@ -506,7 +574,8 @@ def _schedule_variants(shape, decomp, *, allow_reduced_wire,
                 prof = f"{type(e).__name__}: {e}"
             if isinstance(prof, tuple):
                 wires.append(prof)
-                _STATS["wire_profile_candidates"] += 1
+                with _LOCK:
+                    _STATS["wire_profile_candidates"] += 1
             elif record_skip is not None:
                 record_skip(prof)
     return [{"backend": be, "overlap_chunks": ov, "wire_dtype": wr}
@@ -539,83 +608,84 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
     control flow synchronized around candidates that fail on a subset
     of processes."""
     rank = len(shape)
-    dkey = (shape, direction, _mesh_key(mesh), axis_names, real,
-            batch_ndim, backend, overlap_chunks, _wire_name(wire_dtype),
-            allow_reduced_wire)
-    if dkey in _DECOMP_CACHE:
-        return _DECOMP_CACHE[dkey]
-
     candidates = _SWEEP_DECOMPS.get(rank)
     if candidates is None:
         # rank 1 has only the cyclic-layout four-step; nothing to sweep
         return _infer(shape, None, None, mesh)[0]
-    fallback = _infer(shape, None, None, mesh)[0]
-    span = _process_span(mesh)
-    if _subset_span(span):
-        # timing candidates here would BE the subset-collectives hang
-        # — pin the untimed default before any sweep work starts
-        _DECOMP_CACHE[dkey] = fallback
-        return fallback
-    best, best_t = None, float("inf")
-    for decomp in candidates:
-        caps = CAPS[decomp]
+    dkey = (shape, direction, _mesh_key(mesh), axis_names, real,
+            batch_ndim, backend, overlap_chunks, _wire_name(wire_dtype),
+            allow_reduced_wire)
 
-        def skip(err):
-            _TUNE_SKIPS.append({
-                "shape": shape, "direction": direction, "decomp": decomp,
-                "real": real, "batch_ndim": batch_ndim,
-                "backend": backend, "sweep": "decomp", "error": err})
+    def _sweep() -> str:
+        fallback = _infer(shape, None, None, mesh)[0]
+        span = _process_span(mesh)
+        if _subset_span(span):
+            # timing candidates here would BE the subset-collectives
+            # hang — pin the untimed default before any sweep starts
+            return fallback
+        best, best_t = None, float("inf")
+        for decomp in candidates:
+            caps = CAPS[decomp]
 
-        cand, args, err = None, None, None
-        try:  # build phase — no candidate collectives executed yet
-            if caps.mesh_axes > len(mesh.axis_names):
-                raise ValueError(
-                    f"{decomp} needs {caps.mesh_axes} mesh axes, mesh "
-                    f"has {len(mesh.axis_names)}")
-            if real and not caps.real:
-                raise ValueError(f"{decomp} has no r2c/c2r schedules")
-            # each candidate races over the axes the CALLER's plan will
-            # actually use (the prefix it needs of them)
-            cand_axes = tuple(axis_names if axis_names is not None
-                              else mesh.axis_names)[: caps.mesh_axes]
-            if backend == MEASURE:
-                tuned = _autotune(shape, direction, mesh, decomp,
-                                  cand_axes, real=real,
-                                  batch_ndim=batch_ndim,
-                                  allow_reduced_wire=allow_reduced_wire)
-            else:
-                tuned = {"backend": backend,
-                         "overlap_chunks": overlap_chunks,
-                         "wire_dtype": wire_dtype}
-            cand = FFTPlan(shape, direction, mesh, decomp, cand_axes,
-                           tuned["backend"], tuned["overlap_chunks"],
-                           real, batch_ndim,
-                           _wire_name(tuned["wire_dtype"])).compile()
-            args = _dummy_args(shape, direction, mesh, decomp, cand_axes,
-                               real, batch_ndim)
-        except Exception as e:  # noqa: BLE001 — candidate unsupported
-            err = f"{type(e).__name__}: {e}"
-        # every process must agree the candidate built before ANY of
-        # them enters the timed collectives, and that timing succeeded
-        # everywhere after — see _sweep_ok
-        if not _sweep_ok(err is None, span):
-            skip(err or "candidate failed on another process")
-            continue
-        try:
-            t = _time_plan(cand, args)
-        except Exception as e:  # noqa: BLE001 — candidate unsupported
-            err = f"{type(e).__name__}: {e}"
-        if not _sweep_ok(err is None, span):
-            skip(err or "timing failed on another process")
-            continue
-        if t < best_t:
-            best, best_t = decomp, t
-    if best is None:
-        best = fallback
-    # multi-process: every process of the mesh must cache the SAME
-    # winner (see _agree_choice) — per-process timings are only a vote
-    best = _agree_choice([*candidates, fallback], best, span)
-    _DECOMP_CACHE[dkey] = best
+            def skip(err):
+                _record_skip({
+                    "shape": shape, "direction": direction,
+                    "decomp": decomp, "real": real,
+                    "batch_ndim": batch_ndim, "backend": backend,
+                    "sweep": "decomp", "error": err})
+
+            cand, args, err = None, None, None
+            try:  # build phase — no candidate collectives executed yet
+                if caps.mesh_axes > len(mesh.axis_names):
+                    raise ValueError(
+                        f"{decomp} needs {caps.mesh_axes} mesh axes, "
+                        f"mesh has {len(mesh.axis_names)}")
+                if real and not caps.real:
+                    raise ValueError(
+                        f"{decomp} has no r2c/c2r schedules")
+                # each candidate races over the axes the CALLER's plan
+                # will actually use (the prefix it needs of them)
+                cand_axes = tuple(axis_names if axis_names is not None
+                                  else mesh.axis_names)[: caps.mesh_axes]
+                if backend == MEASURE:
+                    tuned = _autotune(
+                        shape, direction, mesh, decomp, cand_axes,
+                        real=real, batch_ndim=batch_ndim,
+                        allow_reduced_wire=allow_reduced_wire)
+                else:
+                    tuned = {"backend": backend,
+                             "overlap_chunks": overlap_chunks,
+                             "wire_dtype": wire_dtype}
+                cand = FFTPlan(shape, direction, mesh, decomp, cand_axes,
+                               tuned["backend"], tuned["overlap_chunks"],
+                               real, batch_ndim,
+                               _wire_name(tuned["wire_dtype"])).compile()
+                args = _dummy_args(shape, direction, mesh, decomp,
+                                   cand_axes, real, batch_ndim)
+            except Exception as e:  # noqa: BLE001 — candidate unsupported
+                err = f"{type(e).__name__}: {e}"
+            # every process must agree the candidate built before ANY
+            # of them enters the timed collectives, and that timing
+            # succeeded everywhere after — see _sweep_ok
+            if not _sweep_ok(err is None, span):
+                skip(err or "candidate failed on another process")
+                continue
+            try:
+                t = _time_plan(cand, args)
+            except Exception as e:  # noqa: BLE001 — candidate unsupported
+                err = f"{type(e).__name__}: {e}"
+            if not _sweep_ok(err is None, span):
+                skip(err or "timing failed on another process")
+                continue
+            if t < best_t:
+                best, best_t = decomp, t
+        if best is None:
+            best = fallback
+        # multi-process: every process of the mesh must cache the SAME
+        # winner (see _agree_choice) — per-process timings are a vote
+        return _agree_choice([*candidates, fallback], best, span)
+
+    best, _ = _single_flight("decomp", _DECOMP_CACHE, dkey, _sweep)
     return best
 
 
@@ -627,89 +697,94 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
     variants land in ``autotune_skips()``."""
     tkey = (shape, direction, _mesh_key(mesh), decomp, axis_names, real,
             batch_ndim, allow_reduced_wire)
-    if tkey in _TUNE_CACHE:
-        return _TUNE_CACHE[tkey]
 
-    fallback = {"backend": "auto", "overlap_chunks": 0, "wire_dtype": None}
-    span = _process_span(mesh)
-    if _subset_span(span):
-        # timing variants here would BE the subset-collectives hang —
-        # pin the untimed default before any sweep work starts
-        _TUNE_CACHE[tkey] = fallback
-        return fallback
-    err = None
-    try:
-        args = _dummy_args(shape, direction, mesh, decomp, axis_names,
-                           real, batch_ndim)
-    except Exception as e:  # noqa: BLE001 — per-process input failure
-        err = f"{type(e).__name__}: {e}"
-    # agreed BEFORE the variant loop: a process whose dummy input
-    # failed must not escape to an outer control point while its peers
-    # issue per-variant flag collectives below — the int32 flags would
-    # pair up across different control points and every later
-    # agreement would exchange values with the wrong partners
-    if not _sweep_ok(err is None, span):
-        _TUNE_SKIPS.append({
-            "shape": shape, "direction": direction, "decomp": decomp,
-            "real": real, "batch_ndim": batch_ndim, "sweep": "knobs",
-            "error": err or "dummy input failed on another process"})
-        _TUNE_CACHE[tkey] = fallback
-        return fallback
-    def _record_wire_skip(reason):
-        _TUNE_SKIPS.append({
-            "shape": shape, "direction": direction, "decomp": decomp,
-            "real": real, "batch_ndim": batch_ndim,
-            "sweep": "wire-profile", "wire_dtype": "per-stage",
-            "error": reason})
-
-    variants = _schedule_variants(shape, decomp,
-                                  allow_reduced_wire=allow_reduced_wire,
-                                  direction=direction, mesh=mesh,
-                                  axis_names=axis_names, real=real,
-                                  record_skip=_record_wire_skip)
-    best, best_t, best_plan = None, float("inf"), None
-    for variant in variants:
-        cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
-                       variant["backend"], variant["overlap_chunks"],
-                       real, batch_ndim, variant["wire_dtype"])
-        err, t = None, None
-        try:  # build phase: schedule construction + overlap checks —
-            # deterministic errors, no collectives executed yet
-            cand.compile()
-        except Exception as e:  # noqa: BLE001 — variant unsupported
-            err = f"{type(e).__name__}: {e}"
-        # same two sync points as the decomp sweep: agree the variant
-        # built everywhere before any process enters its timed
-        # collectives, and that timing succeeded everywhere after
-        if not _sweep_ok(err is None, span):
-            _TUNE_SKIPS.append({
-                "shape": shape, "direction": direction, "decomp": decomp,
-                "real": real, "batch_ndim": batch_ndim, **variant,
-                "error": err or "variant failed on another process"})
-            continue
+    def _sweep() -> dict:
+        fallback = {"backend": "auto", "overlap_chunks": 0,
+                    "wire_dtype": None}
+        span = _process_span(mesh)
+        if _subset_span(span):
+            # timing variants here would BE the subset-collectives hang
+            # — pin the untimed default before any sweep work starts
+            return fallback
+        err = None
         try:
-            t = _time_plan(cand, args)
-        except Exception as e:  # noqa: BLE001 — variant unsupported
+            args = _dummy_args(shape, direction, mesh, decomp,
+                               axis_names, real, batch_ndim)
+        except Exception as e:  # noqa: BLE001 — per-process input failure
             err = f"{type(e).__name__}: {e}"
+        # agreed BEFORE the variant loop: a process whose dummy input
+        # failed must not escape to an outer control point while its
+        # peers issue per-variant flag collectives below — the int32
+        # flags would pair up across different control points and every
+        # later agreement would exchange values with the wrong partners
         if not _sweep_ok(err is None, span):
-            _TUNE_SKIPS.append({
+            _record_skip({
                 "shape": shape, "direction": direction, "decomp": decomp,
-                "real": real, "batch_ndim": batch_ndim, **variant,
-                "error": err or "timing failed on another process"})
-            continue
-        if t < best_t:
-            best, best_t, best_plan = dict(variant), t, cand
-    if best is None:
-        best, best_plan = fallback, None
-    # multi-process: knobs, like decomps, must agree across the mesh's
-    # processes (see _agree_choice) or they compile divergent programs
-    agreed = _agree_choice([*variants, fallback], best, span)
-    if agreed == best and best_plan is not None:
-        # the winner is already compiled and warm — seed the plan cache
-        # so the follow-up plan_dft doesn't trace/compile it again
-        _PLAN_CACHE.setdefault(
-            _plan_key(shape, direction, mesh, decomp, axis_names,
-                      best["backend"], best["overlap_chunks"], real,
-                      batch_ndim, best["wire_dtype"]), best_plan)
-    _TUNE_CACHE[tkey] = agreed
+                "real": real, "batch_ndim": batch_ndim, "sweep": "knobs",
+                "error": err or "dummy input failed on another process"})
+            return fallback
+
+        def _record_wire_skip(reason):
+            _record_skip({
+                "shape": shape, "direction": direction, "decomp": decomp,
+                "real": real, "batch_ndim": batch_ndim,
+                "sweep": "wire-profile", "wire_dtype": "per-stage",
+                "error": reason})
+
+        variants = _schedule_variants(
+            shape, decomp, allow_reduced_wire=allow_reduced_wire,
+            direction=direction, mesh=mesh, axis_names=axis_names,
+            real=real, record_skip=_record_wire_skip)
+        best, best_t, best_plan = None, float("inf"), None
+        for variant in variants:
+            cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
+                           variant["backend"], variant["overlap_chunks"],
+                           real, batch_ndim, variant["wire_dtype"])
+            err, t = None, None
+            try:  # build phase: schedule construction + overlap checks
+                # — deterministic errors, no collectives executed yet
+                cand.compile()
+            except Exception as e:  # noqa: BLE001 — variant unsupported
+                err = f"{type(e).__name__}: {e}"
+            # same two sync points as the decomp sweep: agree the
+            # variant built everywhere before any process enters its
+            # timed collectives, and that timing succeeded everywhere
+            if not _sweep_ok(err is None, span):
+                _record_skip({
+                    "shape": shape, "direction": direction,
+                    "decomp": decomp, "real": real,
+                    "batch_ndim": batch_ndim, **variant,
+                    "error": err or "variant failed on another process"})
+                continue
+            try:
+                t = _time_plan(cand, args)
+            except Exception as e:  # noqa: BLE001 — variant unsupported
+                err = f"{type(e).__name__}: {e}"
+            if not _sweep_ok(err is None, span):
+                _record_skip({
+                    "shape": shape, "direction": direction,
+                    "decomp": decomp, "real": real,
+                    "batch_ndim": batch_ndim, **variant,
+                    "error": err or "timing failed on another process"})
+                continue
+            if t < best_t:
+                best, best_t, best_plan = dict(variant), t, cand
+        if best is None:
+            best, best_plan = fallback, None
+        # multi-process: knobs, like decomps, must agree across the
+        # mesh's processes (see _agree_choice) or they compile
+        # divergent programs
+        agreed = _agree_choice([*variants, fallback], best, span)
+        if agreed == best and best_plan is not None:
+            # the winner is already compiled and warm — seed the plan
+            # cache so the follow-up plan_dft doesn't trace it again
+            with _LOCK:
+                _PLAN_CACHE.setdefault(
+                    _plan_key(shape, direction, mesh, decomp, axis_names,
+                              best["backend"], best["overlap_chunks"],
+                              real, batch_ndim, best["wire_dtype"]),
+                    best_plan)
+        return agreed
+
+    agreed, _ = _single_flight("tune", _TUNE_CACHE, tkey, _sweep)
     return agreed

@@ -8,13 +8,19 @@ shardings compile).
 
 ``--monitor-every K`` attaches a **pipelined in-situ chain** to the
 request loop (stats → FFT → bandpass on the last-token logits, host
-writer at the tail): every K decode steps a logits snapshot is staged,
-and once ``--monitor-batch`` snapshots accumulate they are submitted
-as ONE batched field to the chain — *in-flight batching*: the decode
-loop never blocks on the monitor (the chain's device stages ride async
-dispatch, the host writer runs on the pipeline worker, and the bounded
-queue backpressures only if analysis falls far behind). The report
-gains the chain's overlap-efficiency numbers.
+writer at the tail): every K decode steps a logits snapshot is
+*submitted to an* :class:`~repro.serve.fft_engine.FFTServeEngine`
+monitor bucket, and the engine coalesces ``--monitor-batch`` snapshots
+into ONE batched field handed to the chain — *in-flight batching*: the
+decode loop never blocks on the monitor (the chain's device stages
+ride async dispatch, the host writer runs on the pipeline worker, and
+the engine's bounded admission backpressures only if analysis falls
+far behind). The trailing partial batch goes through the same
+``engine.flush()`` path as the in-loop submits — there is exactly one
+flush code path. The report gains the chain's overlap-efficiency
+numbers plus the engine's coalescing/queue accounting, and is emitted
+as BENCH rows (``--bench-out``, trend-gateable) rather than a bare
+JSON dump.
 """
 from __future__ import annotations
 
@@ -85,6 +91,63 @@ def _build_monitor(args, cfg, bridge=None):
     return chain
 
 
+def _attach_monitor_engine(args, chain, bridge=None):
+    """Wire the chain behind an :class:`FFTServeEngine` monitor bucket:
+    the decode loop submits raw in-flight snapshots; the engine
+    coalesces ``--monitor-batch`` of them into one stacked BridgeData
+    per chain execute. Returns the engine (manual tick mode — the
+    driver steps it, keeping ``chain.execute`` on the decode thread
+    inside the active mesh context)."""
+    from repro.core.insitu.bridge import BridgeData
+    from repro.serve.fft_engine import FFTServeEngine
+
+    def execute_batch(payloads, step_idx):
+        field = jnp.stack(list(payloads))
+        payload = BridgeData(arrays={"field": field}, step=step_idx,
+                             meta={"primary": "field"})
+        if bridge is not None:
+            payload = bridge.send(payload)
+            if not bridge.is_consumer():
+                return None       # producers hold None leaves, no chain
+        chain.execute(payload)
+        return None
+
+    engine = FFTServeEngine(max_pending=4 * args.monitor_batch,
+                            linger_s=float("inf"))  # flush-at only
+    engine.register_bucket("monitor", execute_batch,
+                           flush_at=args.monitor_batch)
+    return engine
+
+
+def _emit_report_rows(report: dict, path: str) -> None:
+    """End-of-run report as BENCH rows (the trend-gateable schema of
+    ``benchmarks/run.py``) instead of a bare JSON print: one row per
+    headline latency, the full report under ``derived``."""
+    from pathlib import Path
+
+    rows = {
+        "serve_run_prefill": {
+            "us_per_call": round(report["prefill_ms"] * 1e3, 1),
+            "derived": f"batch={report['batch']}"},
+        "serve_run_decode_token": {
+            "us_per_call": round(report["decode_ms_per_token"] * 1e3, 1),
+            "derived": f"tokens_per_s={report['tokens_per_s']}"},
+    }
+    if "monitor" in report:
+        mon = report["monitor"]
+        rows["serve_run_monitor_submit"] = {
+            "us_per_call": round(mon["engine"]["submit_us_p50"], 1),
+            "derived": (f"submits={mon['submits']} "
+                        f"coalesced={mon['snapshots']}->"
+                        f"{mon['submits']}")}
+    out = Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(
+        {"rows": rows, "unit": "us_per_call",
+         "source": "repro.launch.serve", "report": report},
+        indent=2, sort_keys=True) + "\n")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -99,6 +162,9 @@ def main(argv=None):
     ap.add_argument("--monitor-batch", type=int, default=4,
                     help="snapshots batched into one in-flight submit")
     ap.add_argument("--monitor-dir", default="results/serve_monitor")
+    ap.add_argument("--bench-out", default="results/BENCH_serve_run.json",
+                    help="end-of-run report lands here as BENCH rows "
+                         "(trend_check-compatible; '' disables)")
     ap.add_argument("--transit-consumers", type=int, default=0,
                     metavar="N",
                     help="in-transit M→N split: decode on all but the "
@@ -140,8 +206,9 @@ def main(argv=None):
 
     monitor = (_build_monitor(args, cfg, transit_bridge)
                if args.monitor_every else None)
-    staged = []                 # snapshots awaiting an in-flight submit
-    submits = 0
+    engine = (_attach_monitor_engine(args, monitor, transit_bridge)
+              if monitor is not None else None)
+    snapshots = 0
 
     with compat.set_mesh(mesh):
         t0 = time.perf_counter()
@@ -157,21 +224,22 @@ def main(argv=None):
             logits, state = decode(params, tok, state)
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
                      .astype(jnp.int32)
-            if monitor is not None and step % args.monitor_every == 0:
-                # stage the (still in-flight) logits; submit one batched
-                # field per --monitor-batch snapshots — the decode loop
-                # never waits for the analysis
-                staged.append(logits[:, -1])
-                if len(staged) == args.monitor_batch:
-                    submits += _submit_monitor(monitor, staged, submits,
-                                               transit_bridge)
+            if engine is not None and step % args.monitor_every == 0:
+                # submit the (still in-flight) logits to the monitor
+                # bucket; the engine coalesces --monitor-batch of them
+                # into ONE batched chain execute per tick — the decode
+                # loop never waits for the analysis
+                engine.submit(logits[:, -1], bucket="monitor")
+                snapshots += 1
+                engine.step()
         jax.block_until_ready(logits)
         t_decode = time.perf_counter() - t0
-        if monitor is not None and staged:
+        if engine is not None:
             # trailing partial batch: a different leading dim means a
-            # fresh trace — flush it outside the timed decode window
-            submits += _submit_monitor(monitor, staged, submits,
-                                       transit_bridge)
+            # fresh trace — same flush helper as the in-loop ticks,
+            # forced, outside the timed decode window
+            engine.flush()
+            engine.drain()
 
     gen = np.concatenate(out_tokens, axis=1)
     report = {
@@ -184,11 +252,14 @@ def main(argv=None):
     }
     if monitor is not None:
         monitor.drain()
+        erep = engine.report()
+        engine.stop()
         mrep = monitor.marshaling_report()
         files = monitor.finalize()["writer"]["files"]
         pipe = mrep.get("pipeline", {})
         report["monitor"] = {
-            "submits": submits,
+            "submits": erep["batching"]["executes"],
+            "snapshots": snapshots,
             "snapshot_batch": args.monitor_batch,
             "files": len(files),
             "overlap_efficiency": round(
@@ -196,30 +267,23 @@ def main(argv=None):
             "host_busy_ms": round(pipe.get("host_busy_s", 0.0) * 1e3, 2),
             "backpressure_ms": round(
                 pipe.get("backpressure_s", 0.0) * 1e3, 2),
+            "engine": {
+                "batched_execute_ratio":
+                    erep["batching"]["batched_execute_ratio"],
+                "submit_us_p50": erep["latency_ms"]["p50"] * 1e3,
+                "submit_us_p99": erep["latency_ms"]["p99"] * 1e3,
+                "queue_depth_max": erep["queue"]["depth_max"],
+            },
         }
     if transit_bridge is not None:
         report["transit"] = transit_bridge.report()
-    print(json.dumps(report))
+    if args.bench_out and jax.process_index() == 0:
+        _emit_report_rows(report, args.bench_out)
+        print(f"serve: decode {report['decode_ms_per_token']} ms/token, "
+              f"{report['tokens_per_s']} tok/s -> {args.bench_out}")
+    else:
+        print(json.dumps(report))
     return report
-
-
-def _submit_monitor(chain, staged, submit_idx, bridge=None) -> int:
-    """Stack the staged snapshots into one batched BridgeData and hand
-    it to the pipelined chain (returns immediately; 1 = one submit).
-    With ``bridge`` the batched field first hops onto the consumer
-    mesh, so the chain's device stages run off the decode devices."""
-    from repro.core.insitu.bridge import BridgeData
-
-    field = jnp.stack(staged)
-    staged.clear()
-    payload = BridgeData(arrays={"field": field}, step=submit_idx,
-                         meta={"primary": "field"})
-    if bridge is not None:
-        payload = bridge.send(payload)
-        if not bridge.is_consumer():
-            return 1              # producers hold None leaves, no chain
-    chain.execute(payload)
-    return 1
 
 
 if __name__ == "__main__":

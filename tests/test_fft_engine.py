@@ -1,0 +1,304 @@
+"""FFTServeEngine: bounded admission (backpressure), continuous
+shape-batched execution (bucketing, coalescing), per-request result
+identity, failure containment, and SLO accounting.
+
+In-process on a single-device mesh (cache keying / batching semantics
+need no collectives — the distributed execution paths are covered by
+``test_fft_distributed.py`` / ``test_rfft.py`` subprocess checks).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core.fft.filters import lowpass_mask
+from repro.serve.fft_engine import AdmissionFull, FFTServeEngine
+
+
+@pytest.fixture()
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _drain(eng):
+    eng.drain(timeout=60.0)
+
+
+# ---------------------------------------------------------------------------
+# correctness + coalescing
+# ---------------------------------------------------------------------------
+
+def test_c2c_batch_correct_and_coalesced(mesh):
+    eng = FFTServeEngine(mesh, max_batch=8, linger_s=0.0)
+    rng = _rng(1)
+    fields = [(rng.standard_normal((16, 24))
+               + 1j * rng.standard_normal((16, 24))).astype(np.complex64)
+              for _ in range(5)]
+    futs = [eng.submit(f, op="fft") for f in fields]
+    eng.step(force=True)
+    _drain(eng)
+    for f, fut in zip(fields, futs):
+        np.testing.assert_allclose(fut.result(timeout=30),
+                                   np.fft.fftn(f), rtol=2e-4, atol=2e-3)
+    rep = eng.report()
+    assert rep["requests"]["submitted"] == 5
+    assert rep["requests"]["completed"] == 5
+    # the continuous-batching claim: 5 requests, ONE batched execute
+    assert rep["batching"]["executes"] == 1
+    assert rep["batching"]["rows"] == 5
+    assert rep["batching"]["batched_execute_ratio"] < 1.0
+    assert rep["latency_ms"]["p99"] >= rep["latency_ms"]["p50"] > 0
+    eng.stop()
+
+
+def test_r2c_serving_trims_half_spectrum(mesh):
+    eng = FFTServeEngine(mesh, max_batch=4, linger_s=0.0)
+    rng = _rng(2)
+    fields = [rng.standard_normal((16, 24)).astype(np.float32)
+              for _ in range(3)]
+    futs = [eng.submit(f, op="fft", real=True) for f in fields]
+    eng.step(force=True)
+    _drain(eng)
+    for f, fut in zip(fields, futs):
+        got = fut.result(timeout=30)
+        ref = np.fft.rfftn(f)
+        assert got.shape == ref.shape        # trimmed, not padded
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-3)
+    eng.stop()
+
+
+@pytest.mark.parametrize("real", [False, True])
+def test_bandpass_roundtrip_matches_numpy(mesh, real):
+    eng = FFTServeEngine(mesh, max_batch=4, linger_s=0.0)
+    rng = _rng(3)
+    shape, keep = (16, 16), 0.25
+    x = rng.standard_normal(shape).astype(np.float32)
+    payload = x if real else x.astype(np.complex64)
+    fut = eng.submit(payload, op="bandpass", real=real, keep_frac=keep)
+    eng.step(force=True)
+    _drain(eng)
+    got = fut.result(timeout=30)
+    mask = np.asarray(lowpass_mask(shape, keep))
+    ref = np.fft.ifftn(np.fft.fftn(x) * mask)
+    ref = ref.real if real else ref
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-3)
+    eng.stop()
+
+
+def test_per_request_identity_is_ordered(mesh):
+    """Each future gets ITS OWN row back — no cross-request mixing even
+    when everything batches into one execute."""
+    eng = FFTServeEngine(mesh, max_batch=8, linger_s=0.0)
+    fields = [np.full((8, 8), k, np.complex64) for k in range(1, 7)]
+    futs = [eng.submit(f) for f in fields]
+    eng.step(force=True)
+    _drain(eng)
+    for k, fut in enumerate(futs, start=1):
+        got = fut.result(timeout=30)
+        # constant field: all energy in the DC bin, scaled by k
+        np.testing.assert_allclose(got[0, 0], 64.0 * k, rtol=1e-5)
+        assert abs(got[1, 1]) < 1e-2
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# bucketing rules
+# ---------------------------------------------------------------------------
+
+def test_mixed_shapes_never_cross_batch(mesh):
+    eng = FFTServeEngine(mesh, max_batch=8, linger_s=0.0)
+    a = [np.ones((16, 16), np.complex64) for _ in range(3)]
+    b = [np.ones((8, 32), np.complex64) for _ in range(3)]
+    futs = [eng.submit(f) for f in a + b]
+    eng.step(force=True)
+    _drain(eng)
+    for fut in futs:
+        fut.result(timeout=30)
+    rep = eng.report()
+    # one execute per shape bucket — never one for both
+    assert rep["batching"]["executes"] == 2
+    assert len(rep["buckets"]) == 2
+    for brep in rep["buckets"].values():
+        assert brep["requests"] == 3
+        assert brep["executes"] == 1
+    eng.stop()
+
+
+def test_r2c_and_c2c_same_shape_are_isolated(mesh):
+    eng = FFTServeEngine(mesh, max_batch=8, linger_s=0.0)
+    real = [np.ones((16, 16), np.float32) for _ in range(2)]
+    cplx = [np.ones((16, 16), np.complex64) for _ in range(2)]
+    futs = ([eng.submit(f, real=True) for f in real]
+            + [eng.submit(f) for f in cplx])
+    eng.step(force=True)
+    _drain(eng)
+    rep = eng.report()
+    assert rep["batching"]["executes"] == 2
+    kinds = {k.split("|")[2] for k in rep["buckets"]}
+    assert kinds == {"r2c", "c2c"}
+    # and the results have the kind-correct spectral shapes
+    assert futs[0].result(timeout=30).shape == (16, 9)
+    assert futs[2].result(timeout=30).shape == (16, 16)
+    eng.stop()
+
+
+def test_invalid_requests_rejected_synchronously(mesh):
+    eng = FFTServeEngine(mesh)
+    with pytest.raises(ValueError, match="rank >= 2"):
+        eng.submit(np.ones(64, np.complex64))
+    with pytest.raises(ValueError, match="forward"):
+        eng.submit(np.ones((8, 8), np.float32), real=True,
+                   direction="backward")
+    with pytest.raises(ValueError, match="round-trip"):
+        eng.submit(np.ones((8, 8)), op="bandpass", direction="backward")
+    with pytest.raises(ValueError, match="op must be"):
+        eng.submit(np.ones((8, 8)), op="dct")
+    with pytest.raises(ValueError, match="unknown bucket"):
+        eng.submit("x", bucket="nope")
+    assert eng.stats()["submitted"] == 0
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# admission backpressure
+# ---------------------------------------------------------------------------
+
+def test_admission_backpressure_bounds_queue(mesh):
+    eng = FFTServeEngine(mesh, max_pending=2, linger_s=0.0)
+    eng.submit(np.ones((8, 8), np.complex64))
+    eng.submit(np.ones((8, 8), np.complex64))
+    with pytest.raises(AdmissionFull):
+        eng.submit(np.ones((8, 8), np.complex64), block=False)
+    with pytest.raises(AdmissionFull):
+        eng.submit(np.ones((8, 8), np.complex64), timeout=0.05)
+    assert eng.stats()["rejected"] == 2
+    # launching frees admission capacity
+    eng.step(force=True)
+    fut = eng.submit(np.ones((8, 8), np.complex64), block=False)
+    eng.step(force=True)
+    _drain(eng)
+    fut.result(timeout=30)
+    rep = eng.report()
+    assert rep["queue"]["depth_max"] == 2
+    assert rep["requests"]["rejected"] == 2
+    eng.stop()
+
+
+def test_blocked_submit_wakes_when_scheduler_launches(mesh):
+    """block=True submits park in backpressure and complete once the
+    scheduler thread drains the queue."""
+    with FFTServeEngine(mesh, max_pending=2, max_batch=2,
+                        linger_s=0.0005) as eng:
+        futs = [eng.submit(np.ones((8, 8), np.complex64), timeout=30)
+                for _ in range(6)]
+        for fut in futs:
+            fut.result(timeout=30)
+        rep = eng.report()
+    assert rep["requests"]["completed"] == 6
+    assert rep["batching"]["executes"] >= 3      # max_batch=2 bound
+    assert rep["queue"]["depth_max"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# failure containment
+# ---------------------------------------------------------------------------
+
+def test_poisoned_request_spares_batch_mates(mesh):
+    calls = []
+
+    def batch_exec(payloads, step):
+        calls.append(list(payloads))
+        if any(p == "poison" for p in payloads):
+            raise RuntimeError("poisoned batch")
+        return [p.upper() for p in payloads]
+
+    eng = FFTServeEngine(mesh, linger_s=0.0)
+    eng.register_bucket("txt", batch_exec, flush_at=4)
+    futs = [eng.submit(p, bucket="txt") for p in ("a", "poison", "b")]
+    eng.step(force=True)
+    _drain(eng)
+    assert futs[0].result(timeout=30) == "A"
+    assert futs[2].result(timeout=30) == "B"
+    with pytest.raises(RuntimeError, match="poisoned"):
+        futs[1].result(timeout=30)
+    # batch attempt first, then one single retry per request
+    assert len(calls) == 4
+    rep = eng.report()
+    assert rep["requests"]["completed"] == 2
+    assert rep["requests"]["failed"] == 1
+    assert rep["batching"]["single_retries"] == 3
+    eng.stop()
+
+
+def test_custom_bucket_coalesces_and_flushes(mesh):
+    calls = []
+
+    def sink(payloads, step):
+        calls.append(len(payloads))
+        return None                   # fire-and-forget
+
+    eng = FFTServeEngine(mesh, linger_s=10.0)   # linger never expires
+    eng.register_bucket("mon", sink, flush_at=4)
+    futs = [eng.submit(i, bucket="mon") for i in range(4)]
+    eng.step()                        # full bucket: no force needed
+    assert calls == [4]
+    futs += [eng.submit(i, bucket="mon") for i in range(3)]
+    eng.step()                        # partial + long linger: holds
+    assert calls == [4]
+    eng.flush()                       # the one trailing-flush helper
+    assert calls == [4, 3]
+    _drain(eng)
+    assert all(f.result(timeout=30) is None for f in futs)
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# threaded end-to-end + shared warm plan cache
+# ---------------------------------------------------------------------------
+
+def test_threaded_mixed_traffic_end_to_end(mesh):
+    from repro.core.fft import plan as planmod
+    planmod.plan_cache_clear()          # deterministic miss accounting
+    rng = _rng(7)
+    shapes = [(16, 16), (8, 32)]
+    with FFTServeEngine(mesh, max_batch=4, linger_s=0.001) as eng:
+        work = []
+        for k in range(10):
+            shape = shapes[k % 2]
+            f = (rng.standard_normal(shape)
+                 + 1j * rng.standard_normal(shape)).astype(np.complex64)
+            work.append((f, eng.submit(f)))
+        errs = []
+
+        def check(f, fut):
+            try:
+                np.testing.assert_allclose(fut.result(timeout=60),
+                                           np.fft.fftn(f),
+                                           rtol=2e-4, atol=2e-3)
+            except Exception as e:  # noqa: BLE001 — collected for assert
+                errs.append(e)
+
+        threads = [threading.Thread(target=check, args=wf) for wf in work]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        rep = eng.report()
+    assert not errs
+    assert rep["requests"]["completed"] == 10
+    assert rep["batching"]["executes"] < 10        # coalescing happened
+    assert rep["throughput_rps"] > 0
+    # the shared plan cache: 2 buckets -> 2 misses, everything else hits
+    assert rep["plan_cache"]["misses"] == 2
+
+
+def test_stop_rejects_new_submits(mesh):
+    eng = FFTServeEngine(mesh)
+    eng.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        eng.submit(np.ones((8, 8), np.complex64))

@@ -54,7 +54,97 @@ def test_plan_cache_hit_and_miss_identity():
                                           "size": 0,
                                           "autotune_skipped": 0,
                                           "decomp_sweeps": 0,
-                                          "wire_profile_candidates": 0}
+                                          "wire_profile_candidates": 0,
+                                          "thread_waits": 0}
+
+
+def test_plan_cache_thread_race_compiles_once():
+    """Two threads racing the SAME uncached plan must compile it once:
+    the first toucher builds, the other blocks on the in-flight marker
+    (counted in ``thread_waits``) and reads the cached plan — the
+    serve engine's shared-warm-cache contract (module docstring's
+    locking section)."""
+    import threading
+
+    from repro.compat import make_mesh
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, FFTPlan, plan_dft
+
+    planmod.plan_cache_clear()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    compiles = []
+    orig_compile = FFTPlan.compile
+
+    def counting_compile(self):
+        compiles.append(self)
+        return orig_compile(self)
+
+    barrier = threading.Barrier(2)
+    got, errs = [None, None], []
+
+    def racer(i):
+        try:
+            barrier.wait()
+            got[i] = plan_dft((48, 64), FORWARD, mesh)
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errs.append(e)
+
+    FFTPlan.compile = counting_compile
+    try:
+        ts = [threading.Thread(target=racer, args=(i,)) for i in (0, 1)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=120)
+    finally:
+        FFTPlan.compile = orig_compile
+    assert not errs, errs
+    assert got[0] is got[1], "both threads must see ONE cached plan"
+    assert len(compiles) == 1, "racing threads must not compile twice"
+    stats = planmod.plan_cache_stats()
+    assert stats["misses"] == 1
+    assert stats["hits"] == 1
+    assert stats["thread_waits"] >= 1, \
+        "the losing racer must have waited on the in-flight build"
+    planmod.plan_cache_clear()
+
+
+def test_plan_cache_concurrent_distinct_keys_no_serialization():
+    """Distinct keys build concurrently (single-flight is per key, not
+    a global build lock): N threads planning N different shapes all
+    miss once each, no waits required, all plans distinct + cached."""
+    import threading
+
+    from repro.compat import make_mesh
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, plan_dft
+
+    planmod.plan_cache_clear()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    shapes = [(16, 32), (16, 48), (32, 32), (32, 48)]
+    out, errs = {}, []
+    barrier = threading.Barrier(len(shapes))
+
+    def worker(shape):
+        try:
+            barrier.wait()
+            out[shape] = plan_dft(shape, FORWARD, mesh)
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(s,)) for s in shapes]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=240)
+    assert not errs, errs
+    assert len({id(p) for p in out.values()}) == len(shapes)
+    stats = planmod.plan_cache_stats()
+    assert stats["misses"] == len(shapes)
+    # warm second pass: every thread-built plan is shared
+    for s in shapes:
+        assert plan_dft(s, FORWARD, mesh) is out[s]
+    planmod.plan_cache_clear()
 
 
 def test_autotune_records_skipped_variants():
