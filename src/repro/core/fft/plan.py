@@ -53,6 +53,22 @@ Three FFTW behaviors are reproduced on top of that:
   half the collective bytes; pass ``allow_reduced_wire=False`` to keep
   the sweep exact. Full guide: ``docs/tuning.md``.
 
+* **Wisdom** — FFTW's measured winners outlive the process
+  (``fftw_export_wisdom``); so do ours. When a wisdom store is
+  configured (``set_wisdom(path, mode)``, or the ``REPRO_WISDOM_FILE``
+  / ``REPRO_WISDOM_MODE`` env contract), both measured sweeps become
+  read-through/write-behind over ``core/fft/wisdom.py``: a recorded
+  winner for this (shape, knobs, mesh TOPOLOGY, jax/sweep revision)
+  skips the timed sweep entirely — zero candidates timed, zero sweep
+  collectives — and a freshly measured winner is persisted exactly as
+  agreed cluster-wide, so every rank writes identical wisdom. Stale
+  or invalid wisdom (version bump, unknown backend, corrupt file)
+  falls through to a normal measurement, deterministically on every
+  rank. ``plan_cache_stats()`` reports ``wisdom_hits`` /
+  ``wisdom_misses`` / ``wisdom_stale`` and ``sweep_candidates_timed``
+  (the warm-start assertion signal: a wisdom-warm bring-up shows
+  hits > 0 and zero timed candidates). Full guide: ``docs/wisdom.md``.
+
 Decompositions (``decomp=``): ``slab`` (2-D, 1 mesh axis), ``slab3d``
 (3-D, 1 mesh axis), ``pencil`` (3-D, 2 mesh axes), ``pencil_tf``
 (transpose-free pencil — output in the documented digit-permuted
@@ -115,15 +131,18 @@ keeping cluster-wide agreement (``_agree_choice``) unambiguous.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.fft import rfft as rfft_mod
+from repro.core.fft import wisdom as wisdom_mod
 from repro.core.fft.dft import to_complex, to_pair
 from repro.core.fft.schedule import (CAPS, Schedule, build_schedule,
                                      exchange_topology, execute_schedule,
@@ -151,7 +170,16 @@ _TUNE_CACHE: Dict[tuple, dict] = {}
 _DECOMP_CACHE: Dict[tuple, str] = {}
 _TUNE_SKIPS: List[dict] = []
 _STATS = {"hits": 0, "misses": 0, "wire_profile_candidates": 0,
-          "thread_waits": 0}
+          "thread_waits": 0, "sweep_candidates_timed": 0,
+          "wisdom_hits": 0, "wisdom_misses": 0, "wisdom_stale": 0}
+
+# Persistent wisdom (core/fft/wisdom.py). None until first use: the
+# explicit set_wisdom() wins; otherwise the REPRO_WISDOM_FILE /
+# REPRO_WISDOM_MODE env contract is consulted once, lazily. The store
+# deliberately survives plan_cache_clear() — persistence across cache
+# resets is its entire point.
+_WISDOM: Optional[wisdom_mod.WisdomStore] = None
+_WISDOM_INIT = False
 
 # One re-entrant lock guards every module-level structure above (see
 # the module docstring's locking contract); _PENDING holds the
@@ -230,7 +258,11 @@ def plan_cache_stats() -> Dict[str, int]:
     ``thread_waits`` (calls that blocked on another thread's
     in-flight build of the same key — the shared-warm-cache signal:
     N serve workers racing one cold plan show N-1 waits and ONE
-    miss). Guide: ``docs/tuning.md``."""
+    miss). ``sweep_candidates_timed`` counts individual candidates the
+    measured sweeps actually timed — zero on a wisdom-warm bring-up —
+    and ``wisdom_hits``/``wisdom_misses``/``wisdom_stale`` account the
+    persistent-wisdom read-through (all zero when no store is
+    configured). Guides: ``docs/tuning.md``, ``docs/wisdom.md``."""
     with _LOCK:
         return dict(_STATS, size=len(_PLAN_CACHE),
                     autotune_skipped=len(_TUNE_SKIPS),
@@ -245,14 +277,47 @@ def autotune_skips() -> List[dict]:
 
 
 def plan_cache_clear() -> None:
+    """Empty every in-memory planner structure — the three caches, the
+    sweep-skip record, and ALL stats counters (generically, so a newly
+    added counter can never survive a clear as a ghost of the previous
+    session). The persistent wisdom store is NOT touched: outliving
+    cache resets is its entire point — the next measured plan after a
+    clear warm-starts from wisdom instead of re-sweeping."""
     with _LOCK:
         _PLAN_CACHE.clear()
         _TUNE_CACHE.clear()
         _DECOMP_CACHE.clear()
         _TUNE_SKIPS.clear()
-        _STATS["hits"] = _STATS["misses"] = 0
-        _STATS["wire_profile_candidates"] = 0
-        _STATS["thread_waits"] = 0
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def set_wisdom(path, mode: str = "readwrite"):
+    """Configure persistent wisdom for this process: ``path`` names the
+    store file, ``mode`` ∈ ``off|read|readwrite``. ``set_wisdom(None)``
+    (or ``mode="off"``) disables it. An explicit call overrides the
+    ``REPRO_WISDOM_FILE``/``REPRO_WISDOM_MODE`` env contract; drivers
+    expose this as ``--wisdom``/``--wisdom-mode``. Returns the active
+    store (or None)."""
+    global _WISDOM, _WISDOM_INIT
+    store = None
+    if path is not None and mode != "off":
+        store = wisdom_mod.WisdomStore(path, mode=mode)
+    with _LOCK:
+        _WISDOM, _WISDOM_INIT = store, True
+    return store
+
+
+def wisdom_store() -> Optional[wisdom_mod.WisdomStore]:
+    """The active wisdom store: whatever ``set_wisdom`` configured, or
+    (checked once, lazily) the env contract. None ⇒ wisdom off and the
+    sweeps run exactly as they did before wisdom existed."""
+    global _WISDOM, _WISDOM_INIT
+    with _LOCK:
+        if not _WISDOM_INIT:
+            _WISDOM = wisdom_mod.store_from_env()
+            _WISDOM_INIT = True
+        return _WISDOM
 
 
 # ---------------------------------------------------------------------------
@@ -484,7 +549,119 @@ def _agree_choice(options: list, choice, span: set):
     return options[int(broadcast_one_to_all(jnp.int32(idx)))]
 
 
+# ---------------------------------------------------------------------------
+# Persistent wisdom read-through (core/fft/wisdom.py)
+# ---------------------------------------------------------------------------
+
+_WISDOM_BACKENDS = {"auto", "jnp", "fourstep", "stockham", "pallas"}
+_WISDOM_BLOB_BYTES = 1024
+
+
+def _tune_from_wisdom(value):
+    """Validate + normalize a recorded knob dict. JSON round-trips wire
+    tuples to lists (normalized back here); anything structurally off —
+    or naming a backend this build no longer has — is STALE wisdom and
+    returns None, sending the caller into a normal measured sweep."""
+    if not isinstance(value, dict):
+        return None
+    try:
+        backend = value["backend"]
+        overlap = int(value["overlap_chunks"])
+        wire = value["wire_dtype"]
+    except (KeyError, TypeError, ValueError):
+        return None
+    if backend not in _WISDOM_BACKENDS or overlap < 0:
+        return None
+    if isinstance(wire, (list, tuple)):
+        wire = tuple(None if w is None else str(w) for w in wire)
+    elif wire is not None and not isinstance(wire, str):
+        return None
+    return {"backend": backend, "overlap_chunks": overlap,
+            "wire_dtype": wire}
+
+
+def _agree_wisdom_value(value, span):
+    """Broadcast process 0's wisdom value verbatim (JSON bytes in a
+    fixed 1 KiB length-prefixed buffer — every rank must contribute an
+    identically shaped array to ``broadcast_one_to_all``). Same
+    discipline as ``_agree_choice``, different payload: here the
+    options list lives in a FILE that may have drifted between hosts,
+    so an index is not enough — the value itself must travel. Every
+    rank decodes the same bytes, so a decode failure (oversized or
+    mangled value) returns None on every rank at once: a deterministic
+    cluster-wide fall-through to the measured sweep, never divergence."""
+    if len(span) <= 1:
+        return value
+    from jax.experimental.multihost_utils import broadcast_one_to_all
+    buf = np.zeros(_WISDOM_BLOB_BYTES, np.uint8)
+    blob = json.dumps(value, sort_keys=True).encode()
+    if len(blob) <= _WISDOM_BLOB_BYTES - 2:
+        buf[0] = len(blob) & 0xFF
+        buf[1] = len(blob) >> 8
+        buf[2:2 + len(blob)] = np.frombuffer(blob, np.uint8)
+    # element-wise cast back: some backends widen small dtypes for the
+    # collective (uint8 arrives as int32), so reinterpret VALUES, not
+    # raw bytes
+    out = np.asarray(broadcast_one_to_all(jnp.asarray(buf)))
+    out = out.astype(np.uint8)
+    n = int(out[0]) | (int(out[1]) << 8)
+    if n == 0:
+        return None
+    try:
+        return json.loads(out[2:2 + n].tobytes().decode())
+    except Exception:  # noqa: BLE001 — same bytes, same failure, all ranks
+        return None
+
+
+def _wisdom_sweep_hit(kind: str, key: str, span: set, decode):
+    """The read-through: an agreed, validated wisdom hit for this
+    sweep, or None (⇒ measure as usual). The hit must be
+    ALL-or-nothing across the mesh's processes (``_sweep_ok``): a
+    mixed hit/miss would send some ranks into the timed sweep's
+    collectives while the rest skip them — the same desync the sweeps
+    guard every candidate against. On an agreed hit, process 0's
+    recorded value is broadcast and used verbatim everywhere
+    (``_agree_wisdom_value``), so per-host wisdom files that drifted
+    can never compile divergent collective programs. Invalid recorded
+    values are re-booked as stale (here and in the store) and fall
+    through to measurement, deterministically on every rank."""
+    store = wisdom_store()
+    if store is None:
+        return None
+    raw = store.lookup(kind, key)
+    value = decode(raw) if raw is not None else None
+    if raw is not None and value is None:
+        store.count_stale()
+        with _LOCK:
+            _STATS["wisdom_stale"] += 1
+    if len(span) > 1:
+        # agree the hit, then agree the value itself
+        if not _sweep_ok(value is not None, span):
+            value = None
+        else:
+            agreed = _agree_wisdom_value(value, span)
+            value = decode(agreed) if agreed is not None else None
+    with _LOCK:
+        _STATS["wisdom_hits" if value is not None else
+               "wisdom_misses"] += 1
+    return value
+
+
+def _wisdom_record(kind: str, key: str, value) -> None:
+    """The write-behind: persist a freshly AGREED winner. Called after
+    ``_agree_choice``, so the value is identical on every rank of the
+    mesh — all ranks write byte-identical wisdom (last atomic replace
+    wins, content already agreed)."""
+    store = wisdom_store()
+    if store is not None:
+        store.record(kind, key, value)
+
+
 def _time_plan(plan: FFTPlan, args, iters: int = 3) -> float:
+    with _LOCK:
+        # the warm-start signal: a wisdom-warm bring-up times ZERO
+        # candidates (see docs/wisdom.md and the fft_wisdom_* benches)
+        _STATS["sweep_candidates_timed"] += 1
     jax.block_until_ready(plan.execute(*args))            # compile + warm
     t0 = time.perf_counter()
     for _ in range(iters):
@@ -623,6 +800,24 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
             # timing candidates here would BE the subset-collectives
             # hang — pin the untimed default before any sweep starts
             return fallback
+        wkey = wisdom_mod.wisdom_key(
+            "decomp", mesh, shape=shape, direction=direction,
+            axis_names=axis_names, real=real, batch_ndim=batch_ndim,
+            backend=backend, overlap_chunks=overlap_chunks,
+            wire_dtype=_wire_name(wire_dtype),
+            allow_reduced_wire=allow_reduced_wire)
+
+        def _decode(value):
+            # a recorded decomp must still be a legal substitution for
+            # this rank — anything else is stale wisdom, not a winner
+            if isinstance(value, str) and (value in candidates
+                                           or value == fallback):
+                return value
+            return None
+
+        hit = _wisdom_sweep_hit("decomp", wkey, span, _decode)
+        if hit is not None:
+            return hit
         best, best_t = None, float("inf")
         for decomp in candidates:
             caps = CAPS[decomp]
@@ -683,7 +878,11 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
             best = fallback
         # multi-process: every process of the mesh must cache the SAME
         # winner (see _agree_choice) — per-process timings are a vote
-        return _agree_choice([*candidates, fallback], best, span)
+        agreed = _agree_choice([*candidates, fallback], best, span)
+        # persist exactly the agreed winner: all ranks write identical
+        # wisdom, and the next boot of this topology skips the sweep
+        _wisdom_record("decomp", wkey, agreed)
+        return agreed
 
     best, _ = _single_flight("decomp", _DECOMP_CACHE, dkey, _sweep)
     return best
@@ -706,6 +905,13 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
             # timing variants here would BE the subset-collectives hang
             # — pin the untimed default before any sweep work starts
             return fallback
+        wkey = wisdom_mod.wisdom_key(
+            "tune", mesh, shape=shape, direction=direction,
+            decomp=decomp, axis_names=axis_names, real=real,
+            batch_ndim=batch_ndim, allow_reduced_wire=allow_reduced_wire)
+        hit = _wisdom_sweep_hit("tune", wkey, span, _tune_from_wisdom)
+        if hit is not None:
+            return hit
         err = None
         try:
             args = _dummy_args(shape, direction, mesh, decomp,
@@ -775,6 +981,9 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
         # mesh's processes (see _agree_choice) or they compile
         # divergent programs
         agreed = _agree_choice([*variants, fallback], best, span)
+        # persist exactly the agreed knobs (post-broadcast): all ranks
+        # write identical wisdom for the next boot of this topology
+        _wisdom_record("tune", wkey, agreed)
         if agreed == best and best_plan is not None:
             # the winner is already compiled and warm — seed the plan
             # cache so the follow-up plan_dft doesn't trace it again

@@ -1,0 +1,291 @@
+"""FFTW-wisdom-style persistent autotune store.
+
+Every measured decision the planner makes — the ``backend="measure"``
+knob-sweep winners (backend × overlap × wire, including per-stage wire
+profiles) and the ``decomp="measure"`` topology-sweep winners — is
+worth exactly one process lifetime today: ``plan.py``'s
+``_TUNE_CACHE``/``_DECOMP_CACHE`` are in-memory. At fleet scale that
+means every restart of every process re-runs collective, timed sweeps
+to rediscover the same answers. FFTW solved this thirty years ago:
+measured plans are *wisdom*, and wisdom outlives the process
+(``fftw_export_wisdom``); FluidFFT (arXiv:1807.01775) makes the same
+argument for putting plan/tuning state behind the common API.
+
+This module is that store. ``plan.py`` wires it in as a
+read-through/write-behind layer under its single-flight machinery
+(see ``plan._autotune``/``plan._autotune_decomp``): a wisdom **hit**
+skips the timed sweep entirely — the winner still compiles, but zero
+candidates are timed and zero sweep collectives run; a **miss**
+measures as before, agrees the winner cluster-wide, then persists
+exactly the agreed choice, so every rank writes identical wisdom.
+
+File format (JSON, human-diffable, atomic-replace writes)::
+
+    {
+      "format": "repro-fft-wisdom",
+      "schema": 1,                      # file-layout version
+      "software": {"jax": "0.4.37", "sweep_rev": 1},
+      "entries": {
+        "<canonical key>": {"kind": "tune" | "decomp", "value": ...},
+        ...
+      }
+    }
+
+**Key anatomy** — a key captures everything that makes a measured
+winner transferable, nothing more:
+
+* the sweep kind (``tune`` knobs vs ``decomp`` choice) and its inputs:
+  shape, direction, decomp (or the caller knobs, for decomp keys),
+  axis names, real/complex, batch rank, ``allow_reduced_wire``;
+* the **topology fingerprint** (:func:`topology_fingerprint`): mesh
+  axis extents, per-device ids *and process indices*, process count,
+  platform, and the per-axis host-crossing profile
+  (``compat.mesh_process_topology``). The same 8 devices on one host
+  vs across two hosts are different topologies — their winners must
+  never be exchanged (the whole point of the topology sweeps).
+
+Schema/software versions live at the *file* level: a schema bump, a
+different JAX, or a bumped ``SWEEP_REV`` (bump it whenever the
+candidate space in ``plan._schedule_variants``/``_SWEEP_DECOMPS``
+changes meaning) invalidates the whole file — counted as ``stale``,
+never silently reused. A topology or shape change simply misses (it
+is part of the key). A corrupt or unreadable file is a **cold start,
+never a crash**: serving must come up tuned-from-scratch rather than
+not at all.
+
+Concurrency: one store instance is thread-safe (one lock around the
+lazily-loaded entry map and the file writes). Cross-process writers
+(all ranks of a cluster persisting the same agreed winner to a shared
+path) are safe because writes are atomic replaces of identical
+content — last writer wins and all writers agree.
+
+Env/flag contract (read by ``plan.py``): ``REPRO_WISDOM_FILE`` names
+the store, ``REPRO_WISDOM_MODE`` ∈ ``off|read|readwrite`` (default
+``readwrite``); drivers expose the same pair as ``--wisdom`` /
+``--wisdom-mode``. Full guide: ``docs/wisdom.md``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+FORMAT = "repro-fft-wisdom"
+SCHEMA = 1
+
+# Bump whenever the meaning of a recorded winner changes: the sweep
+# candidate spaces (plan._schedule_variants, plan._SWEEP_DECOMPS), the
+# knob-dict fields, or the timing methodology. Old wisdom then reads
+# as stale (cold start) instead of pinning a winner from a race that
+# no longer exists.
+SWEEP_REV = 1
+
+MODES = ("off", "read", "readwrite")
+
+
+def software_fingerprint() -> Dict[str, Any]:
+    """The file-level validity scope: measured winners do not survive
+    a JAX upgrade (different compiler, different collectives) or a
+    sweep-space revision."""
+    import jax
+    return {"jax": jax.__version__, "sweep_rev": SWEEP_REV}
+
+
+def topology_fingerprint(mesh) -> dict:
+    """Everything about process/device placement that a measured
+    winner depends on. Two meshes with equal fingerprints time
+    identically (same extents, same device ids in the same order on
+    the same processes, same DCN-crossing profile), so wisdom recorded
+    on one cluster boot is valid on the next boot of the *same*
+    cluster shape — and on nothing else."""
+    import jax
+
+    from repro.compat import mesh_process_topology
+
+    devs = list(mesh.devices.flat)
+    return {
+        "mesh_shape": [[str(name), int(n)] for name, n in mesh.shape.items()],
+        "device_ids": [int(d.id) for d in devs],
+        "process_placement": [int(d.process_index) for d in devs],
+        "num_processes": int(jax.process_count()),
+        "platform": str(getattr(devs[0], "platform", "unknown")),
+        "axis_crosses_hosts": sorted(
+            (str(k), bool(v))
+            for k, v in mesh_process_topology(mesh).items()),
+    }
+
+
+def wisdom_key(kind: str, mesh, **fields) -> str:
+    """Canonical entry key: the sweep kind, the caller's sweep inputs,
+    and the mesh's topology fingerprint, serialized deterministically
+    (sorted keys, tuples as lists). Stable across processes and
+    restarts — identical inputs on an identical topology produce the
+    byte-identical key on every rank."""
+
+    def norm(v):
+        if isinstance(v, (tuple, list)):
+            return [norm(x) for x in v]
+        if isinstance(v, dict):
+            return {str(k): norm(x) for k, x in sorted(v.items())}
+        return v
+
+    payload = {"kind": kind, "topology": topology_fingerprint(mesh)}
+    payload.update({k: norm(v) for k, v in fields.items()})
+    return json.dumps(norm(payload), sort_keys=True,
+                      separators=(",", ":"))
+
+
+class WisdomStore:
+    """One on-disk wisdom file: lazy validated load, thread-safe
+    lookups, atomic write-behind persists. ``mode``:
+
+    * ``"read"``      — lookups only; never writes the file.
+    * ``"readwrite"`` — lookups + persist every newly agreed winner.
+
+    (``"off"`` is handled by the caller never constructing a store.)
+    """
+
+    def __init__(self, path, mode: str = "readwrite"):
+        if mode not in MODES:
+            raise ValueError(f"wisdom mode must be one of {MODES}, "
+                             f"got {mode!r}")
+        self.path = Path(path)
+        self.mode = mode
+        self._lock = threading.RLock()
+        self._entries: Optional[Dict[str, dict]] = None
+        self._stats = {"hits": 0, "misses": 0, "stale": 0, "writes": 0,
+                       "load_errors": 0, "write_errors": 0}
+
+    # -- load ----------------------------------------------------------------
+    def _load_locked(self) -> None:
+        """Read + validate the file once (idempotent; caller holds the
+        lock). Any failure mode — missing, unreadable, corrupt JSON,
+        wrong format/schema, different software fingerprint — degrades
+        to an empty entry map: unreadable wisdom is a cold start,
+        never a crash."""
+        if self._entries is not None:
+            return
+        self._entries = {}
+        if not self.path.exists():
+            return
+        try:
+            payload = json.loads(self.path.read_text())
+            if (not isinstance(payload, dict)
+                    or payload.get("format") != FORMAT):
+                raise ValueError(f"not a {FORMAT} file")
+        except Exception:  # noqa: BLE001 — corrupt/unreadable: cold start
+            self._stats["load_errors"] += 1
+            return
+        entries = payload.get("entries")
+        entries = entries if isinstance(entries, dict) else {}
+        if (payload.get("schema") != SCHEMA
+                or payload.get("software") != software_fingerprint()):
+            # versioned invalidation: every entry measured under the
+            # old schema/jax/sweep-space is stale, wholesale
+            self._stats["stale"] += max(1, len(entries))
+            return
+        self._entries = entries
+
+    # -- read-through ---------------------------------------------------------
+    def lookup(self, kind: str, key: str):
+        """The recorded winner for ``key``, or ``None`` (miss). A key
+        present with the wrong ``kind`` counts as stale, not a hit."""
+        with self._lock:
+            self._load_locked()
+            entry = self._entries.get(key)
+            if not isinstance(entry, dict) or "value" not in entry:
+                self._stats["misses"] += 1
+                return None
+            if entry.get("kind") != kind:
+                self._stats["stale"] += 1
+                self._stats["misses"] += 1
+                return None
+            self._stats["hits"] += 1
+            value = entry["value"]
+        return json.loads(json.dumps(value))    # defensive copy
+
+    def count_stale(self, n: int = 1) -> None:
+        """Caller-side invalidation accounting: a looked-up value that
+        failed the caller's validation (e.g. a knob dict naming a
+        backend that no longer exists) is stale wisdom, and the hit
+        that returned it must be re-booked as such."""
+        with self._lock:
+            self._stats["stale"] += n
+            self._stats["hits"] = max(0, self._stats["hits"] - n)
+            self._stats["misses"] += n
+
+    # -- write-behind ---------------------------------------------------------
+    def record(self, kind: str, key: str, value) -> None:
+        """Persist one agreed winner (no-op unless ``readwrite``).
+        The in-memory map updates first, then the whole store is
+        rewritten atomically (temp file + ``os.replace`` in the target
+        directory, so concurrent identical writers can only produce a
+        complete file). Write failures are counted, not raised — a
+        read-only deployment still serves, just without new wisdom."""
+        if self.mode != "readwrite":
+            return
+        with self._lock:
+            self._load_locked()
+            self._entries[key] = {"kind": kind,
+                                  "value": json.loads(json.dumps(value))}
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        payload = {"format": FORMAT, "schema": SCHEMA,
+                   "software": software_fingerprint(),
+                   "entries": self._entries}
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                prefix=self.path.name + ".", suffix=".tmp",
+                dir=str(self.path.parent))
+            try:
+                with os.fdopen(fd, "w") as fh:
+                    fh.write(json.dumps(payload, indent=1,
+                                        sort_keys=True) + "\n")
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            self._stats["writes"] += 1
+        except Exception:  # noqa: BLE001 — persistence is best-effort
+            self._stats["write_errors"] += 1
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._stats)
+
+    def size(self) -> int:
+        with self._lock:
+            self._load_locked()
+            return len(self._entries)
+
+    def reload(self) -> None:
+        """Drop the in-memory map so the next lookup re-reads the file
+        (e.g. after another process appended wisdom to a shared
+        path)."""
+        with self._lock:
+            self._entries = None
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"WisdomStore(path={str(self.path)!r}, "
+                f"mode={self.mode!r})")
+
+
+def store_from_env() -> Optional[WisdomStore]:
+    """The env contract: ``REPRO_WISDOM_FILE`` names the file,
+    ``REPRO_WISDOM_MODE`` (default ``readwrite``) gates it. Returns
+    ``None`` when unset or explicitly ``off`` — the planner then runs
+    exactly as before this module existed."""
+    path = os.environ.get("REPRO_WISDOM_FILE", "").strip()
+    mode = os.environ.get("REPRO_WISDOM_MODE", "readwrite").strip()
+    if not path or mode == "off":
+        return None
+    return WisdomStore(path, mode=mode)

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro import compat
 from repro.configs import registry
+from repro.core.fft import plan as plan_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.runtime.cluster import (add_cluster_args, config_from_args,
@@ -165,6 +166,15 @@ def main(argv=None):
     ap.add_argument("--bench-out", default="results/BENCH_serve_run.json",
                     help="end-of-run report lands here as BENCH rows "
                          "(trend_check-compatible; '' disables)")
+    ap.add_argument("--wisdom", default=None, metavar="FILE",
+                    help="persistent autotune wisdom file: measured "
+                         "sweep winners are read at bring-up and new "
+                         "ones persisted, so restarts skip the timed "
+                         "sweeps (overrides REPRO_WISDOM_FILE; "
+                         "docs/wisdom.md)")
+    ap.add_argument("--wisdom-mode", default="readwrite",
+                    choices=("off", "read", "readwrite"),
+                    help="read = consult wisdom but never write it")
     ap.add_argument("--transit-consumers", type=int, default=0,
                     metavar="N",
                     help="in-transit M→N split: decode on all but the "
@@ -176,6 +186,9 @@ def main(argv=None):
                          "subset collectives)")
     add_cluster_args(ap)
     args = ap.parse_args(argv)
+    if args.wisdom:
+        # before any measured planning (restarts warm-start from it)
+        plan_mod.set_wisdom(args.wisdom, args.wisdom_mode)
     # multi-process bring-up (env/flag-driven; single-process no-op)
     init_cluster(config_from_args(args))
 

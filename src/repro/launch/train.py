@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro import compat
 
 from repro.configs import registry
+from repro.core.fft import plan as plan_mod
 from repro.core.insitu.chain import InSituChain
 from repro.core.insitu.endpoints.spectral_monitor import SpectralMonitorEndpoint
 from repro.data import synthetic
@@ -68,8 +69,20 @@ def main(argv=None):
                     help="inject failures at these steps (FT test)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--wisdom", default=None, metavar="FILE",
+                    help="persistent autotune wisdom file: measured "
+                         "sweep winners are read at bring-up and new "
+                         "ones persisted, so restarts skip the timed "
+                         "sweeps (overrides REPRO_WISDOM_FILE; "
+                         "docs/wisdom.md)")
+    ap.add_argument("--wisdom-mode", default="readwrite",
+                    choices=("off", "read", "readwrite"),
+                    help="read = consult wisdom but never write it")
     add_cluster_args(ap)
     args = ap.parse_args(argv)
+    if args.wisdom:
+        # before any measured planning (restarts warm-start from it)
+        plan_mod.set_wisdom(args.wisdom, args.wisdom_mode)
     # multi-process bring-up (env/flag-driven; single-process no-op) —
     # must precede the first device query below
     init_cluster(config_from_args(args))

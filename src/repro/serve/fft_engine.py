@@ -161,6 +161,13 @@ def _pad_rows(n: int, cap: int) -> int:
     return max(n, min(p, cap))
 
 
+# planner counters report()/prewarm() surface as deltas: the shared
+# plan-cache traffic plus the persistent-wisdom read-through (a
+# wisdom-warm engine shows wisdom_hits > 0 with misses near zero)
+_PLAN_DELTA_KEYS = ("hits", "misses", "thread_waits",
+                    "wisdom_hits", "wisdom_misses", "wisdom_stale")
+
+
 def _percentiles(lat_ms: Sequence[float]) -> Dict[str, float]:
     if not lat_ms:
         return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0,
@@ -383,6 +390,91 @@ class FFTServeEngine:
         op, shape, kind, direction, extra = key
         return {"op": op, "shape": tuple(shape), "kind": kind,
                 "direction": direction, "keep_frac": extra}
+
+    # -- warm start -------------------------------------------------------------
+    def prewarm(self, signatures: Sequence[dict], *, ladder: bool = True,
+                timeout: float = 300.0) -> Dict[str, Any]:
+        """Build and compile every plan a list of request signatures
+        will need BEFORE the first real request arrives, moving the
+        compile-ladder cost out of first-request latency; with a
+        wisdom store configured (``plan.set_wisdom`` / the
+        ``REPRO_WISDOM_FILE`` env contract) the plans come up with
+        zero timed sweeps — the serving warm-start recipe in
+        ``docs/wisdom.md``.
+
+        ``signatures`` is a list of dicts: ``{"shape": (64, 64)}`` plus
+        any ``submit()`` plan-op kwargs (``op``, ``direction``,
+        ``real``, ``keep_frac``). Each signature is exercised with
+        synthetic zero payloads through the REAL serving path (submit →
+        batch → execute → complete), so bucket state, batched plans,
+        and masks are all hot. ``ladder=True`` warms every power-of-two
+        padded batch size up to ``max_batch`` — the full O(log
+        max_batch) per-bucket compile set — so no later batch size
+        triggers a first-request compile; ``ladder=False`` warms size 1
+        only.
+
+        Call it while the engine is otherwise idle (typically right
+        after construction, before ``start()``; a started engine works
+        too). The SLO window is reset afterwards — prewarm traffic
+        never pollutes ``report()``'s latency/throughput numbers — but
+        the plan-cache baseline from construction is kept, so the
+        wisdom/miss deltas prewarm generated stay visible in
+        ``report()["plan_cache"]``. Returns a summary dict."""
+        t0 = time.perf_counter()
+        plan0 = plan_cache_stats()
+        sizes_all = []
+        n = 1
+        while n < self.max_batch:
+            sizes_all.append(n)
+            n <<= 1
+        sizes_all.append(self.max_batch)
+        sizes = sizes_all if ladder else [1]
+        # a rung can never exceed what admission lets us enqueue from
+        # this one thread without a consumer
+        sizes = sorted({min(s, self.max_pending) for s in sizes})
+        futs = []
+        for sig in signatures:
+            sig = dict(sig)
+            shape = tuple(int(s) for s in sig.pop("shape"))
+            real = bool(sig.get("real", False))
+            zero = (np.zeros(shape, np.float32) if real
+                    else np.zeros(shape, np.complex64))
+            for size in sizes:
+                for _ in range(size):
+                    futs.append(self.submit(zero, **sig))
+                # flush each rung as ONE batch so exactly the padded
+                # sizes the ladder targets get compiled
+                self.flush()
+                self.drain(timeout=timeout)
+        errors = [repr(f.exception()) for f in futs
+                  if f.exception() is not None]
+        plan1 = plan_cache_stats()
+        summary = {
+            "signatures": len(list(signatures)),
+            "requests": len(futs),
+            "errors": errors,
+            "batch_sizes": sizes,
+            "wall_s": round(time.perf_counter() - t0, 3),
+            "plan_cache": {k: plan1.get(k, 0) - plan0.get(k, 0)
+                           for k in _PLAN_DELTA_KEYS},
+        }
+        self._reset_slo_window()
+        return summary
+
+    def _reset_slo_window(self) -> None:
+        """Zero the SLO accounting (request/latency/throughput state)
+        while KEEPING bucket plan state and the construction-time
+        plan-cache baseline. Only safe while no requests are in flight
+        — ``prewarm`` drains before calling."""
+        with self._cond:
+            for k in self._stats:
+                self._stats[k] = 0.0 if k == "backpressure_s" else 0
+            for b in self._buckets.values():
+                b.requests = b.executes = b.rows = b.failed = 0
+                b.latencies_ms.clear()
+            self._t_first = self._t_last = None
+        with self._done_cond:
+            self._resolved = 0
 
     # -- scheduling ------------------------------------------------------------
     def step(self, *, force: bool = False) -> int:
@@ -715,7 +807,7 @@ class FFTServeEngine:
         execs = stats["executes"]
         plan_now = plan_cache_stats()
         plan_delta = {k: plan_now.get(k, 0) - self._plan_stats0.get(k, 0)
-                      for k in ("hits", "misses", "thread_waits")}
+                      for k in _PLAN_DELTA_KEYS}
         return {
             "requests": {"submitted": stats["submitted"],
                          "completed": stats["completed"],

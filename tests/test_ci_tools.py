@@ -111,6 +111,41 @@ def test_trend_check_ignores_error_rows(tmp_path):
     assert trend_check.main(["--baseline", base, "--current", cur]) == 0
 
 
+def test_bench_writer_never_clobbers_artifact_with_zero_rows(
+        tmp_path, monkeypatch, capsys):
+    """The BENCH_fft.json clobber regression: a ``--only`` subset that
+    produces only serve rows (or errors out before any fft row lands)
+    must keep the committed fft artifact intact — an empty ``rows``
+    map would silently disarm the trend gate forever after."""
+    import run as benchrun
+
+    committed = {"fft_keep_me": {"us_per_call": 42.0, "derived": "x"}}
+    fft_json = tmp_path / "BENCH_fft.json"
+    fft_json.write_text(json.dumps({"rows": committed,
+                                    "unit": "us_per_call",
+                                    "source": "previous run"}))
+    monkeypatch.setattr(benchrun, "ROOT", tmp_path)
+    # a serve-only run: no fft rows at all
+    monkeypatch.setattr(benchrun, "ROWS",
+                        [("serve_fft_p50", 10.0, "d")])
+    benchrun.write_outputs(emit_json=True, partial=True)
+    assert json.loads(fft_json.read_text())["rows"] == committed, \
+        "zero fft rows must not replace the committed artifact"
+    assert "skipping BENCH_fft.json" in capsys.readouterr().err
+    # ...while the serve artifact it DID produce rows for is written
+    serve = json.loads((tmp_path / "BENCH_serve.json").read_text())
+    assert serve["rows"] == {"serve_fft_p50":
+                             {"us_per_call": 10.0, "derived": "d"}}
+
+    # and an fft-producing run still updates the fft artifact normally
+    monkeypatch.setattr(benchrun, "ROWS",
+                        [("fft_wisdom_warm_bringup", 5.0, "")])
+    benchrun.write_outputs(emit_json=True, partial=True)
+    got = json.loads(fft_json.read_text())["rows"]
+    assert got == {"fft_wisdom_warm_bringup":
+                   {"us_per_call": 5.0, "derived": ""}}
+
+
 def test_link_checker_detects_broken_and_valid(tmp_path):
     (tmp_path / "good.md").write_text("# Title\n\nsome heading text\n")
     md = tmp_path / "index.md"

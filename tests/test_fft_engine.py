@@ -297,6 +297,79 @@ def test_threaded_mixed_traffic_end_to_end(mesh):
     assert rep["plan_cache"]["misses"] == 2
 
 
+# ---------------------------------------------------------------------------
+# prewarm: compile-ladder warm-up + SLO window reset
+# ---------------------------------------------------------------------------
+
+def test_prewarm_compiles_ladder_and_resets_slo_window(mesh):
+    """prewarm() walks every pow-2 padded batch size per signature
+    through the REAL serving path, then resets the SLO window so
+    report() starts clean — and the first real traffic after it is
+    pure plan-cache hits (zero new misses)."""
+    from repro.core.fft import plan as planmod
+    planmod.plan_cache_clear()          # deterministic miss accounting
+    eng = FFTServeEngine(mesh, max_batch=4, linger_s=0.0)
+    summary = eng.prewarm([
+        {"shape": (16, 16)},
+        {"shape": (16, 16), "real": True},
+    ])
+    assert summary["signatures"] == 2
+    assert summary["batch_sizes"] == [1, 2, 4]
+    assert summary["requests"] == 2 * (1 + 2 + 4)
+    assert summary["errors"] == []
+    assert summary["wall_s"] > 0
+    assert summary["plan_cache"]["misses"] > 0    # the warmed compiles
+    # SLO window reset: prewarm traffic invisible to report()
+    rep = eng.report()
+    assert rep["requests"]["submitted"] == 0
+    assert rep["requests"]["completed"] == 0
+    for brep in rep["buckets"].values():
+        assert brep["requests"] == 0 and brep["executes"] == 0
+    # ...but the plan-cache delta keeps the prewarm compiles visible
+    assert rep["plan_cache"]["misses"] == summary["plan_cache"]["misses"]
+
+    # real traffic at a warmed batch size: no new plan compiles
+    rng = _rng(11)
+    fields = [(rng.standard_normal((16, 16))
+               + 1j * rng.standard_normal((16, 16))).astype(np.complex64)
+              for _ in range(4)]
+    futs = [eng.submit(f) for f in fields]
+    eng.step(force=True)
+    _drain(eng)
+    for f, fut in zip(fields, futs):
+        np.testing.assert_allclose(fut.result(timeout=30),
+                                   np.fft.fftn(f), rtol=2e-4, atol=2e-3)
+    rep = eng.report()
+    assert rep["requests"]["completed"] == 4
+    assert rep["plan_cache"]["misses"] == summary["plan_cache"]["misses"], \
+        "prewarmed traffic must not compile new plans"
+    eng.stop()
+
+
+def test_prewarm_report_carries_wisdom_counters(mesh):
+    """report()['plan_cache'] exposes the wisdom delta keys, so an
+    operator can tell a wisdom-warmed bring-up from a cold one."""
+    eng = FFTServeEngine(mesh, max_batch=2, linger_s=0.0)
+    summary = eng.prewarm([{"shape": (8, 8)}], ladder=False)
+    assert summary["batch_sizes"] == [1]
+    assert summary["requests"] == 1
+    for key in ("wisdom_hits", "wisdom_misses", "wisdom_stale"):
+        assert key in summary["plan_cache"]
+        assert key in eng.report()["plan_cache"]
+    eng.stop()
+
+
+def test_prewarm_respects_admission_bound(mesh):
+    """A ladder rung can never exceed max_pending — prewarm on a tiny
+    admission window must still complete instead of deadlocking on its
+    own backpressure."""
+    eng = FFTServeEngine(mesh, max_batch=8, max_pending=2, linger_s=0.0)
+    summary = eng.prewarm([{"shape": (8, 8)}])
+    assert summary["batch_sizes"] == [1, 2]       # capped at max_pending
+    assert summary["errors"] == []
+    eng.stop()
+
+
 def test_stop_rejects_new_submits(mesh):
     eng = FFTServeEngine(mesh)
     eng.stop()

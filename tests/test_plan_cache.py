@@ -55,7 +55,38 @@ def test_plan_cache_hit_and_miss_identity():
                                           "autotune_skipped": 0,
                                           "decomp_sweeps": 0,
                                           "wire_profile_candidates": 0,
-                                          "thread_waits": 0}
+                                          "thread_waits": 0,
+                                          "sweep_candidates_timed": 0,
+                                          "wisdom_hits": 0,
+                                          "wisdom_misses": 0,
+                                          "wisdom_stale": 0}
+
+
+def test_plan_cache_clear_resets_every_counter_and_skip_record():
+    """plan_cache_clear() must leave NO stale accounting behind: every
+    _STATS counter back to zero (including ones added after the clear
+    helper was written — the generic loop, not a hand-kept list) and
+    the autotune skip log empty."""
+    from repro.compat import make_mesh
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, MEASURE, plan_dft
+
+    planmod.plan_cache_clear()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    # drive hits, misses, a measured sweep (timed candidates + skips)
+    plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+    plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+    stats = planmod.plan_cache_stats()
+    assert stats["misses"] >= 1 and stats["hits"] >= 1
+    assert stats["sweep_candidates_timed"] > 0
+    assert planmod.autotune_skips()
+
+    planmod.plan_cache_clear()
+    cleared = planmod.plan_cache_stats()
+    assert cleared["size"] == 0
+    for key, val in cleared.items():
+        assert val == 0, f"stale counter after clear: {key}={val}"
+    assert planmod.autotune_skips() == []
 
 
 def test_plan_cache_thread_race_compiles_once():

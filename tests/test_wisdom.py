@@ -1,0 +1,322 @@
+"""Persistent wisdom store + planner read-through integration.
+
+Store semantics (round-trip, versioned invalidation, corrupt-file
+tolerance) run in-process on a single-device mesh. The planner
+integration tests exercise the real contract: a measured sweep records
+wisdom, and the next bring-up — same process after a cache clear, a
+racing thread, or a brand-new subprocess — plans from it with ZERO
+timed sweep candidates. The subprocess cold/warm pair is the
+single-process version of the launcher's ``--demo wisdom`` two-boot
+assertion.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _mesh11():
+    from repro.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Store semantics
+# ---------------------------------------------------------------------------
+
+def test_wisdom_store_roundtrip_across_instances(tmp_path):
+    """record() then lookup() from a FRESH store on the same path —
+    the restart contract: wisdom outlives the process that measured
+    it."""
+    from repro.core.fft import wisdom
+
+    wfile = tmp_path / "w.json"
+    key = wisdom.wisdom_key("tune", _mesh11(), shape=(24, 24),
+                            direction="forward", decomp="slab")
+    value = {"backend": "stockham", "overlap_chunks": 2,
+             "wire_dtype": ["bfloat16", None]}
+    w1 = wisdom.WisdomStore(wfile, mode="readwrite")
+    assert w1.lookup("tune", key) is None           # cold miss
+    w1.record("tune", key, value)
+    assert w1.stats()["writes"] == 1
+
+    w2 = wisdom.WisdomStore(wfile, mode="read")     # "next process"
+    got = w2.lookup("tune", key)
+    assert got == value
+    got["backend"] = "mutated"                      # defensive copy
+    assert w2.lookup("tune", key) == value
+    assert w2.size() == 1
+    # the same key with the wrong kind is stale, never a hit
+    assert w2.lookup("decomp", key) is None
+    s = w2.stats()
+    assert s["hits"] == 2 and s["stale"] == 1
+
+    # read mode never writes
+    w2.record("tune", key + "x", {"backend": "jnp"})
+    assert w2.stats()["writes"] == 0
+    assert wisdom.WisdomStore(wfile).size() == 1
+
+
+def test_wisdom_key_separates_topology_and_inputs():
+    """Keys are deterministic for identical inputs and distinct for
+    any sweep-input or topology difference — including two meshes with
+    the same device COUNT but different axis extents (their measured
+    winners are not transferable)."""
+    from repro.compat import make_mesh
+    from repro.core.fft import wisdom
+
+    mesh = _mesh11()
+    k = lambda m, **f: wisdom.wisdom_key("tune", m, **f)  # noqa: E731
+    base = dict(shape=(32, 32), direction="forward", decomp="slab")
+    assert k(mesh, **base) == k(mesh, **base)
+    assert k(mesh, **base) != k(mesh, **{**base, "shape": (32, 64)})
+    assert k(mesh, **base) != k(mesh, **{**base, "direction": "backward"})
+    assert k(mesh, **base) != wisdom.wisdom_key("decomp", mesh, **base)
+    # tuples and lists canonicalize identically (JSON has no tuples)
+    assert k(mesh, **{**base, "shape": [32, 32]}) == k(mesh, **base)
+
+    import jax
+    if len(jax.devices()) >= 2:
+        other = make_mesh((2, 1), ("data", "model"))
+        assert k(other, **base) != k(mesh, **base)
+    f1 = wisdom.topology_fingerprint(mesh)
+    assert f1 == wisdom.topology_fingerprint(_mesh11())
+    assert f1["num_processes"] == 1
+
+
+def test_wisdom_stale_software_fingerprint_invalidates_file(tmp_path):
+    """A schema bump or different jax/sweep revision invalidates the
+    WHOLE file: every lookup misses, staleness is counted, and a new
+    record() rewrites the file under the current fingerprint."""
+    from repro.core.fft import wisdom
+
+    wfile = tmp_path / "w.json"
+    key = wisdom.wisdom_key("tune", _mesh11(), shape=(8, 8))
+    w1 = wisdom.WisdomStore(wfile)
+    w1.record("tune", key, {"backend": "jnp"})
+
+    payload = json.loads(wfile.read_text())
+    payload["software"]["sweep_rev"] = wisdom.SWEEP_REV + 999
+    wfile.write_text(json.dumps(payload))
+
+    w2 = wisdom.WisdomStore(wfile)
+    assert w2.lookup("tune", key) is None
+    s = w2.stats()
+    assert s["stale"] >= 1 and s["hits"] == 0
+    # re-recording heals the file back to the live fingerprint
+    w2.record("tune", key, {"backend": "jnp"})
+    assert wisdom.WisdomStore(wfile).lookup("tune", key) == \
+        {"backend": "jnp"}
+
+
+def test_wisdom_corrupt_file_is_cold_start_never_crash(tmp_path):
+    """Truncated JSON, the wrong format, a directory in the way —
+    every unreadable store degrades to an empty map (load_errors
+    counted) and keeps serving lookups/records."""
+    from repro.core.fft import wisdom
+
+    key = wisdom.wisdom_key("tune", _mesh11(), shape=(8, 8))
+    for bad in ('{"format": "repro-fft-wis', '{"format": "other"}', '[]'):
+        wfile = tmp_path / "bad.json"
+        wfile.write_text(bad)
+        w = wisdom.WisdomStore(wfile)
+        assert w.lookup("tune", key) is None
+        assert w.stats()["load_errors"] == 1
+        w.record("tune", key, {"backend": "jnp"})   # heals the file
+        assert wisdom.WisdomStore(wfile).lookup("tune", key) is not None
+
+    # unwritable path: record() counts a write error, never raises
+    w = wisdom.WisdomStore(tmp_path)                # path IS a directory
+    w.record("tune", key, {"backend": "jnp"})
+    assert w.stats()["write_errors"] == 1
+
+
+def test_store_from_env_contract(tmp_path, monkeypatch):
+    from repro.core.fft import wisdom
+
+    monkeypatch.delenv("REPRO_WISDOM_FILE", raising=False)
+    monkeypatch.delenv("REPRO_WISDOM_MODE", raising=False)
+    assert wisdom.store_from_env() is None
+    monkeypatch.setenv("REPRO_WISDOM_FILE", str(tmp_path / "w.json"))
+    store = wisdom.store_from_env()
+    assert store is not None and store.mode == "readwrite"
+    monkeypatch.setenv("REPRO_WISDOM_MODE", "read")
+    assert wisdom.store_from_env().mode == "read"
+    monkeypatch.setenv("REPRO_WISDOM_MODE", "off")
+    assert wisdom.store_from_env() is None
+
+
+# ---------------------------------------------------------------------------
+# Planner read-through integration (in-process, single-device mesh)
+# ---------------------------------------------------------------------------
+
+def test_planner_warm_starts_from_wisdom_after_cache_clear(tmp_path):
+    """The tentpole in one process: a measured plan records wisdom;
+    after plan_cache_clear() (which must NOT clear the store) the same
+    plan comes back with wisdom_hits > 0 and zero timed candidates,
+    and picks the identical winner."""
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, MEASURE, plan_dft, set_wisdom
+
+    planmod.plan_cache_clear()
+    try:
+        set_wisdom(tmp_path / "w.json")
+        mesh = _mesh11()
+        cold = plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+        s = planmod.plan_cache_stats()
+        assert s["wisdom_misses"] >= 1 and s["wisdom_hits"] == 0
+        assert s["sweep_candidates_timed"] > 0
+
+        planmod.plan_cache_clear()
+        warm = plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+        s = planmod.plan_cache_stats()
+        assert s["wisdom_hits"] >= 1, s
+        assert s["sweep_candidates_timed"] == 0, \
+            "a wisdom hit must skip the timed sweep entirely"
+        assert (warm.backend, warm.overlap_chunks, warm.wire_dtype) == \
+            (cold.backend, cold.overlap_chunks, cold.wire_dtype)
+    finally:
+        set_wisdom(None)
+        planmod.plan_cache_clear()
+
+
+def test_wisdom_read_through_under_thread_single_flight(tmp_path):
+    """Two threads racing the same measured signature against a warm
+    store: single-flight admits ONE wisdom consult (one hit), the
+    loser waits, nobody times a candidate, both see the same plan."""
+    import threading
+
+    from repro.core.fft import plan as planmod
+    from repro.core.fft.plan import FORWARD, MEASURE, plan_dft, set_wisdom
+
+    planmod.plan_cache_clear()
+    try:
+        set_wisdom(tmp_path / "w.json")
+        mesh = _mesh11()
+        plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)  # populate
+        planmod.plan_cache_clear()
+
+        barrier = threading.Barrier(2)
+        got, errs = [None, None], []
+
+        def racer(i):
+            try:
+                barrier.wait()
+                got[i] = plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+            except Exception as e:  # noqa: BLE001 — surfaced below
+                errs.append(e)
+
+        ts = [threading.Thread(target=racer, args=(i,)) for i in (0, 1)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=240)
+        assert not errs, errs
+        assert got[0] is got[1]
+        s = planmod.plan_cache_stats()
+        assert s["wisdom_hits"] == 1, s
+        assert s["sweep_candidates_timed"] == 0, s
+    finally:
+        set_wisdom(None)
+        planmod.plan_cache_clear()
+
+
+def test_planner_stale_wisdom_falls_back_to_sweep(tmp_path):
+    """A wisdom value that no longer validates (e.g. a backend outside
+    the allowed set) is counted stale and the sweep runs — bad wisdom
+    degrades to a cold start, never a broken plan."""
+    from repro.core.fft import plan as planmod, wisdom
+    from repro.core.fft.plan import FORWARD, MEASURE, plan_dft, set_wisdom
+
+    planmod.plan_cache_clear()
+    try:
+        store = set_wisdom(tmp_path / "w.json")
+        mesh = _mesh11()
+        plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+
+        # poison every recorded tune value with an unknown backend
+        payload = json.loads((tmp_path / "w.json").read_text())
+        for entry in payload["entries"].values():
+            if entry["kind"] == "tune":
+                entry["value"]["backend"] = "no-such-backend"
+        (tmp_path / "w.json").write_text(json.dumps(payload))
+        store.reload()
+
+        planmod.plan_cache_clear()
+        p = plan_dft((6, 96), FORWARD, mesh, backend=MEASURE)
+        s = planmod.plan_cache_stats()
+        assert s["wisdom_stale"] >= 1, s
+        assert s["wisdom_hits"] == 0, s
+        assert s["sweep_candidates_timed"] > 0, \
+            "stale wisdom must re-measure"
+        assert p.backend in wisdom_allowed()
+    finally:
+        set_wisdom(None)
+        planmod.plan_cache_clear()
+
+
+def wisdom_allowed():
+    from repro.core.fft.plan import _WISDOM_BACKENDS
+    return _WISDOM_BACKENDS
+
+
+# ---------------------------------------------------------------------------
+# Subprocess cold → warm bring-up (8 host devices, real sweeps)
+# ---------------------------------------------------------------------------
+
+_BRINGUP = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np, jax
+    from repro.compat import make_mesh
+    from repro.core.fft.plan import (FORWARD, plan_cache_stats, plan_dft,
+                                     set_wisdom)
+
+    set_wisdom(sys.argv[1], "readwrite")
+    mesh = make_mesh((4, 2), ("data", "model"))
+    t0 = time.perf_counter()
+    p = plan_dft((24, 24, 24), FORWARD, mesh, decomp="measure",
+                 backend="measure")
+    jax.block_until_ready(p.execute_complex(
+        np.zeros((24, 24, 24), np.complex64)))
+    wall = time.perf_counter() - t0
+    s = plan_cache_stats()
+    print(json.dumps({"wall": wall, "decomp": p.decomp,
+                      "backend": p.backend,
+                      "timed": s["sweep_candidates_timed"],
+                      "wisdom_hits": s["wisdom_hits"],
+                      "wisdom_misses": s["wisdom_misses"]}))
+""")
+
+
+def test_second_process_boots_warm_with_zero_timed_sweeps(tmp_path):
+    """The acceptance criterion, single-process flavor: boot two
+    fresh interpreters against one wisdom file. The first measures
+    (timed > 0, misses > 0); the second plans the same signatures
+    entirely from wisdom — wisdom_hits > 0, ZERO timed candidates,
+    same winners."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    wfile = str(tmp_path / "w.json")
+
+    def boot():
+        res = subprocess.run([sys.executable, "-c", _BRINGUP, wfile],
+                             env=env, capture_output=True, text=True,
+                             timeout=900)
+        assert res.returncode == 0, res.stderr[-3000:]
+        return json.loads(res.stdout.strip().splitlines()[-1])
+
+    cold = boot()
+    assert cold["wisdom_misses"] >= 1 and cold["timed"] > 0, cold
+    warm = boot()
+    assert warm["wisdom_hits"] >= 1, warm
+    assert warm["timed"] == 0, \
+        f"warm boot must time NOTHING: {warm}"
+    assert (warm["decomp"], warm["backend"]) == \
+        (cold["decomp"], cold["backend"]), (cold, warm)

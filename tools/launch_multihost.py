@@ -10,7 +10,7 @@ process placement (here: one machine) differs. See
 
 Modes:
 
-* ``--demo fft|transit|all`` (default ``all``) — the built-in
+* ``--demo fft|transit|wisdom|all`` (default ``all``) — the built-in
   end-to-end demos, re-executing THIS file per process:
     - ``fft``: builds a DCN×ICI mesh with ``make_multihost_mesh``,
       runs pencil + slab3d distributed FFT plans whose ``AllToAll``
@@ -25,6 +25,12 @@ Modes:
       meshes, pushes a field through ``TransitBridge`` (host
       transport), asserts bit-identical delivery, and runs a
       consumer-mesh FFT on the delivered field.
+    - ``wisdom``: boots the SAME cluster twice against one shared
+      wisdom file (``docs/wisdom.md``): the cold boot measures the
+      full decomp+knob sweeps and persists the winners, the warm boot
+      must plan entirely from wisdom — ``wisdom_hits > 0`` and ZERO
+      timed sweep candidates, asserted in-child — and the launcher
+      asserts the warm bring-up is ≥5x faster than cold.
 * ``-- CMD ...`` — run an arbitrary command per process under the
   cluster env (the command must call
   ``repro.runtime.cluster.init_cluster()`` early, as the launch
@@ -51,6 +57,7 @@ import os
 import socket
 import subprocess
 import sys
+import tempfile
 import threading
 import time
 from pathlib import Path
@@ -72,7 +79,8 @@ def _free_port() -> int:
         return s.getsockname()[1]
 
 
-def _child_env(proc_id: int, nprocs: int, port: int, dpp: int) -> dict:
+def _child_env(proc_id: int, nprocs: int, port: int, dpp: int,
+               extra_env=None) -> dict:
     env = dict(os.environ)
     env["REPRO_COORDINATOR"] = f"127.0.0.1:{port}"
     env["REPRO_NUM_PROCESSES"] = str(nprocs)
@@ -81,18 +89,22 @@ def _child_env(proc_id: int, nprocs: int, port: int, dpp: int) -> dict:
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={dpp}"
     env["PYTHONPATH"] = SRC + (os.pathsep + env["PYTHONPATH"]
                                if env.get("PYTHONPATH") else "")
+    if extra_env:
+        env.update(extra_env)
     return env
 
 
 def launch(nprocs: int, dpp: int, cmd, *, timeout: float = 600.0,
-           port: int = 0):
+           port: int = 0, extra_env=None):
     """Run ``cmd`` as ``nprocs`` coordinated processes; returns
-    (exit_code, list of per-process stdout strings)."""
+    (exit_code, list of per-process stdout strings). ``extra_env``
+    entries are added to every child's environment (e.g. the shared
+    ``REPRO_WISDOM_FILE`` of the wisdom demo's two boots)."""
     port = port or _free_port()
     procs = []
     for pid in range(nprocs):
         procs.append(subprocess.Popen(
-            cmd, env=_child_env(pid, nprocs, port, dpp),
+            cmd, env=_child_env(pid, nprocs, port, dpp, extra_env),
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
     # drain every child's pipe CONCURRENTLY: a verbose child that fills
     # its 64KB stdout pipe would otherwise block on print while an
@@ -139,13 +151,21 @@ def launch(nprocs: int, dpp: int, cmd, *, timeout: float = 600.0,
     return (bad[0] if bad else 0), outs
 
 
-def _collect_bench(outs, json_path: str) -> None:
+def _bench_rows(outs) -> dict:
+    """Process 0's BENCHROW lines as a BENCH-style row dict."""
     rows = {}
     for line in outs[0].splitlines():
         if not line.startswith("BENCHROW,"):
             continue
         _, name, us, derived = line.split(",", 3)
         rows[name] = {"us_per_call": round(float(us), 1), "derived": derived}
+    return rows
+
+
+def _collect_bench(rows: dict, json_path: str) -> None:
+    """Write the ACCUMULATED rows (possibly from several launches —
+    the wisdom demo's cold and warm boots both contribute) as one
+    trend_check-compatible artifact."""
     payload = {"rows": rows, "unit": "us_per_call",
                "source": "tools/launch_multihost.py"}
     Path(json_path).write_text(json.dumps(payload, indent=2,
@@ -354,6 +374,55 @@ def _demo_transit() -> None:
     print("transit demo OK", flush=True)
 
 
+def _demo_wisdom() -> None:
+    """One bring-up of the measured planner under a shared wisdom file
+    (``REPRO_WISDOM_FILE`` is injected by the parent's wisdom phase).
+    ``REPRO_WISDOM_PHASE`` tells this child which boot it is: the cold
+    boot must MEASURE (misses > 0, timed candidates > 0, winners
+    persisted), the warm boot — a brand-new cluster, same topology —
+    must plan purely from wisdom: hits > 0 and ZERO timed sweep
+    candidates (the acceptance assertion)."""
+    import jax
+
+    from repro.core.fft.plan import (FORWARD, plan_cache_stats, plan_dft,
+                                     wisdom_store)
+    from repro.launch.mesh import make_multihost_mesh
+
+    phase = os.environ.get("REPRO_WISDOM_PHASE", "cold")
+    store = wisdom_store()
+    assert store is not None, \
+        "wisdom demo needs REPRO_WISDOM_FILE in the child env"
+    nproc = jax.process_count()
+    dpp = len(jax.local_devices())
+    mesh = make_multihost_mesh(dcn_axes={"dcn": nproc},
+                               ici_axes={"data": dpp})
+    # the sweep-heavy bring-up: decomp AND knobs measured (small
+    # non-pow2 grid keeps the cold sweep short)
+    N = (12 * nproc, 12, 12)
+    t0 = time.perf_counter()
+    plan = plan_dft(N, FORWARD, mesh, decomp="measure",
+                    axis_names=("dcn", "data"), backend="measure")
+    wall = time.perf_counter() - t0
+    s = plan_cache_stats()
+    print(f"wisdom[{phase}]: bring-up {wall:.2f}s decomp={plan.decomp} "
+          f"wisdom_hits={s['wisdom_hits']} "
+          f"wisdom_misses={s['wisdom_misses']} "
+          f"timed={s['sweep_candidates_timed']} "
+          f"store={store.stats()}", flush=True)
+    if phase == "warm":
+        assert s["wisdom_hits"] > 0, f"warm boot found no wisdom: {s}"
+        assert s["sweep_candidates_timed"] == 0, \
+            f"warm boot still timed sweep candidates: {s}"
+    else:
+        assert s["wisdom_misses"] > 0, s
+        assert s["sweep_candidates_timed"] > 0, s
+    _bench_row(f"multihost_wisdom_{phase}_{nproc}x{dpp}", wall * 1e6,
+               f"decomp={plan.decomp}"
+               f";timed={s['sweep_candidates_timed']}"
+               f";wisdom_hits={s['wisdom_hits']}")
+    print("wisdom demo OK", flush=True)
+
+
 def _child_main(demo: str) -> int:
     try:
         from repro.runtime import cluster
@@ -373,6 +442,11 @@ def _child_main(demo: str) -> int:
         _demo_fft()
     if demo in ("transit", "all"):
         _demo_transit()
+    if demo == "wisdom":
+        # never part of a child's "all": one boot can't be cold AND
+        # warm — the parent's wisdom phase launches two dedicated
+        # clusters instead (see _wisdom_phase)
+        _demo_wisdom()
     if jax.process_count() > 1:
         # leave together: demo work is asymmetric (producer processes
         # finish first) and a skewed exit trips the shutdown barrier
@@ -383,6 +457,47 @@ def _child_main(demo: str) -> int:
 
 
 # ---------------------------------------------------------------------------
+
+def _wisdom_phase(ns, rows: dict) -> int:
+    """Cold-vs-warm wisdom bring-up: boot the SAME cluster topology
+    twice against one shared wisdom file. The children assert the
+    planner-level contract (cold measures + persists; warm plans with
+    wisdom_hits > 0 and zero timed candidates — see ``_demo_wisdom``);
+    the launcher asserts the fleet-level one: the warm boot's plan
+    bring-up is ≥5x faster than cold. Both boots' BENCHROW lines are
+    merged into ``rows``."""
+    cmd = [sys.executable, str(Path(__file__).resolve()), "--child",
+           "--demo", "wisdom"]
+    walls = {}
+    with tempfile.TemporaryDirectory(prefix="repro_wisdom_") as tmp:
+        wfile = os.path.join(tmp, "wisdom.json")
+        for phase in ("cold", "warm"):
+            rc, outs = launch(
+                ns.nprocs, ns.devices_per_proc, cmd,
+                timeout=ns.timeout, port=ns.port,
+                extra_env={"REPRO_WISDOM_FILE": wfile,
+                           "REPRO_WISDOM_MODE": "readwrite",
+                           "REPRO_WISDOM_PHASE": phase})
+            if rc != 0:
+                return rc
+            prows = _bench_rows(outs)
+            rows.update(prows)
+            key = (f"multihost_wisdom_{phase}_"
+                   f"{ns.nprocs}x{ns.devices_per_proc}")
+            if key not in prows:
+                print(f"[launcher] FAIL: {phase} wisdom boot emitted "
+                      f"no {key} row")
+                return 1
+            walls[phase] = prows[key]["us_per_call"]
+    speedup = walls["cold"] / max(walls["warm"], 1e-9)
+    print(f"[launcher] wisdom bring-up: cold={walls['cold'] / 1e6:.2f}s "
+          f"warm={walls['warm'] / 1e6:.2f}s ({speedup:.1f}x)")
+    if speedup < 5.0:
+        print(f"[launcher] FAIL: warm wisdom bring-up only "
+              f"{speedup:.1f}x faster than cold (need >=5x)")
+        return 1
+    return 0
+
 
 def main(argv=None) -> int:
     args = list(sys.argv[1:] if argv is None else argv)
@@ -399,7 +514,7 @@ def main(argv=None) -> int:
                     help="CPU placeholder devices per process "
                          "(XLA_FLAGS, set before the child imports jax)")
     ap.add_argument("--demo", default="all",
-                    choices=("fft", "transit", "all"))
+                    choices=("fft", "transit", "wisdom", "all"))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="collect process 0's BENCHROW lines into a "
                          "BENCH-style JSON artifact")
@@ -412,15 +527,25 @@ def main(argv=None) -> int:
     if ns.child:
         return _child_main(ns.demo)
 
-    cmd = passthrough or [sys.executable, str(Path(__file__).resolve()),
-                          "--child", "--demo", ns.demo]
-    rc, outs = launch(ns.nprocs, ns.devices_per_proc, cmd,
-                      timeout=ns.timeout, port=ns.port)
-    if rc == UNSUPPORTED_RC:
-        print("[launcher] multi-process unsupported here (rc 99)")
-        return rc
+    rc, rows = 0, {}
+    if passthrough is not None or ns.demo != "wisdom":
+        cmd = passthrough or [sys.executable,
+                              str(Path(__file__).resolve()),
+                              "--child", "--demo", ns.demo]
+        rc, outs = launch(ns.nprocs, ns.devices_per_proc, cmd,
+                          timeout=ns.timeout, port=ns.port)
+        if rc == UNSUPPORTED_RC:
+            print("[launcher] multi-process unsupported here (rc 99)")
+            return rc
+        if passthrough is None:
+            rows.update(_bench_rows(outs))
+    if rc == 0 and passthrough is None and ns.demo in ("wisdom", "all"):
+        rc = _wisdom_phase(ns, rows)
+        if rc == UNSUPPORTED_RC:
+            print("[launcher] multi-process unsupported here (rc 99)")
+            return rc
     if rc == 0 and ns.json and passthrough is None:
-        _collect_bench(outs, ns.json)
+        _collect_bench(rows, ns.json)
     print(f"[launcher] {ns.nprocs} process(es) x "
           f"{ns.devices_per_proc} device(s): "
           f"{'OK' if rc == 0 else f'FAILED rc={rc}'}")

@@ -1,0 +1,106 @@
+"""Wisdom warm-up / warm-start assertion CLI (docs/wisdom.md).
+
+Plans the canonical measured signatures — the same sweep-heavy
+bring-up the ``fft_wisdom_*`` bench and CI exercise — against a
+persistent wisdom file, then prints one JSON stats line. Two jobs:
+
+* **Warm-up** (populate): on a cold file, the measured sweeps run and
+  their winners are persisted, so the NEXT process (or the next CI run,
+  via the ``actions/cache`` step that keeps ``.ci_wisdom/`` across
+  runs) boots warm.
+* **Assertion** (``--require-hits``): exit non-zero unless this run
+  actually planned from wisdom (``wisdom_hits > 0``); with
+  ``--require-zero-timed`` additionally demand that not a single sweep
+  candidate was timed. CI passes these only when the cache step
+  restored a file from a previous run — a restored-but-useless cache
+  (stale version, wrong topology) fails loudly instead of silently
+  re-measuring forever.
+
+Usage:
+  python tools/wisdom_warmup.py --file .ci_wisdom/wisdom.json
+  python tools/wisdom_warmup.py --file .ci_wisdom/wisdom.json \\
+         --require-hits --require-zero-timed
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+sys.path.insert(0, SRC)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--file", required=True, metavar="PATH",
+                    help="wisdom file to read/populate")
+    ap.add_argument("--mode", default="readwrite",
+                    choices=("read", "readwrite"))
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host platform device count (set before jax "
+                         "imports; the mesh is devices/2 x 2)")
+    ap.add_argument("--require-hits", action="store_true",
+                    help="fail unless wisdom_hits > 0 (the CI "
+                         "warm-start assertion)")
+    ap.add_argument("--require-zero-timed", action="store_true",
+                    help="fail if ANY sweep candidate was timed")
+    args = ap.parse_args(argv)
+
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}")
+
+    import numpy as np
+
+    import jax
+    from repro.compat import make_mesh
+    from repro.core.fft.plan import (FORWARD, plan_cache_stats, plan_dft,
+                                     plan_rfft, set_wisdom)
+
+    store = set_wisdom(args.file, args.mode)
+    mesh = make_mesh((max(1, args.devices // 2), 2), ("data", "model"))
+
+    # the canonical measured signatures (mirror bench_fft_wisdom: one
+    # decomp+knob double sweep, one r2c knob sweep), brought all the
+    # way up to "ready to serve" — first executes included
+    t0 = time.perf_counter()
+    p3 = plan_dft((24, 24, 24), FORWARD, mesh, decomp="measure",
+                  backend="measure")
+    pr = plan_rfft((48, 64), FORWARD, mesh, decomp="slab",
+                   axis_names=("data",), backend="measure")
+    jax.block_until_ready(p3.execute_complex(
+        np.zeros((24, 24, 24), np.complex64)))
+    jax.block_until_ready(pr.execute(
+        *pr.place(np.zeros((48, 64), np.float32))))
+    wall = time.perf_counter() - t0
+
+    s = plan_cache_stats()
+    out = {"wall_s": round(wall, 3), "wisdom_file": args.file,
+           "wisdom_hits": s["wisdom_hits"],
+           "wisdom_misses": s["wisdom_misses"],
+           "wisdom_stale": s["wisdom_stale"],
+           "sweep_candidates_timed": s["sweep_candidates_timed"],
+           "store": store.stats() if store else None}
+    print(json.dumps(out, indent=2, sort_keys=True))
+
+    if args.require_hits and s["wisdom_hits"] == 0:
+        print("FAIL: --require-hits but this run planned nothing from "
+              "wisdom (cold or stale file?)", file=sys.stderr)
+        return 1
+    if args.require_zero_timed and s["sweep_candidates_timed"] > 0:
+        print(f"FAIL: --require-zero-timed but "
+              f"{s['sweep_candidates_timed']} sweep candidate(s) were "
+              f"timed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
