@@ -27,6 +27,10 @@ performance study as future work. The harness therefore covers:
                          persistent wisdom file (docs/wisdom.md): the
                          warm process must plan with ZERO timed sweep
                          candidates and come up >=5x faster
+  solver_step_*        — pseudo-spectral solver steps (NS2D slab /
+                         pencil2d, Boussinesq3D slab3d) on the plan
+                         cache + a warm-wisdom solver bring-up that
+                         must plan with ZERO timed sweeps
   fft_overlap_*        — chunked-pipeline slab variant (beyond-paper)
   fft_*_r2c_* / fft_rfft_batched* — real-input (Hermitian) transforms
                          vs the complex path: wire bytes + time, and
@@ -631,6 +635,105 @@ def bench_fft_wisdom():
         f";wisdom_hits={warm['wisdom_hits']};zero-timed-sweeps")
 
 
+def bench_solver_step():
+    """Pseudo-spectral solver steps on the plan cache (docs/solver.md):
+    per-step wall time of the 2-D NS vorticity solver under slab vs
+    2-axis pencil2d r2c schedules and the 3-D Boussinesq solver under
+    slab3d r2c, on an 8-device (4,2) mesh in a fresh subprocess — the
+    repeated-transform, c2r-dominated production workload the serving
+    and in-situ layers exist for. A cold/warm wisdom bring-up pair for
+    the SAME solver asserts the restart contract end-to-end: the warm
+    process must construct the whole solver (both directions + the
+    batched RHS plans) with ZERO timed sweep candidates."""
+    import tempfile
+
+    script = textwrap.dedent("""
+        import os, json, sys, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import jax
+        from repro.compat import make_mesh
+        from repro.core.fft.plan import plan_cache_stats, set_wisdom
+        from repro.core.solver import Boussinesq3DSolver, NS2DSolver
+
+        wfile = sys.argv[1] if len(sys.argv) > 1 else None
+        if wfile:
+            set_wisdom(wfile, "readwrite")
+        mesh = make_mesh((4, 2), ("data", "model"))
+
+        def timed_steps(s, iters=5):
+            s.step(1)                       # compile + first exchange
+            jax.block_until_ready(s.state)
+            t0 = time.perf_counter()
+            s.step(iters)
+            jax.block_until_ready(s.state)
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        out = {}
+        if wfile:
+            # wisdom bring-up economics for the solver's full plan set
+            t0 = time.perf_counter()
+            s = NS2DSolver((64, 64), mesh, decomp="slab",
+                           axis_names=("data",), backend="measure")
+            s.init_taylor_green()
+            s.step(1)
+            jax.block_until_ready(s.state)
+            out["bringup_s"] = time.perf_counter() - t0
+            st = plan_cache_stats()
+            out["timed"] = st["sweep_candidates_timed"]
+            out["wisdom_hits"] = st["wisdom_hits"]
+            out["us"] = timed_steps(s)
+        else:
+            s = NS2DSolver((64, 64), mesh, decomp="slab",
+                           axis_names=("data",))
+            s.init_taylor_green()
+            out["ns2d_slab"] = timed_steps(s)
+            s2 = NS2DSolver((64, 64), mesh, decomp="pencil2d")
+            s2.init_taylor_green()
+            out["ns2d_pencil2d"] = timed_steps(s2)
+            s3 = Boussinesq3DSolver((32, 32, 32), mesh, decomp="slab3d",
+                                    axis_names=("data",), gravity=1.0)
+            s3.init_beltrami()
+            out["bq3d_slab3d"] = timed_steps(s3, iters=3)
+        print(json.dumps(out))
+    """)
+
+    def run(extra=()):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env.pop("XLA_FLAGS", None)
+        res = subprocess.run([sys.executable, "-c", script, *extra],
+                             env=env, capture_output=True, text=True,
+                             timeout=600)
+        if res.returncode != 0:
+            raise RuntimeError(f"solver bench subprocess failed:\\n"
+                               f"{res.stdout}\\n{res.stderr}")
+        return json.loads(res.stdout.strip().splitlines()[-1])
+
+    try:
+        steps = run()
+        with tempfile.TemporaryDirectory(prefix="repro_solverw_") as tmp:
+            wfile = os.path.join(tmp, "wisdom.json")
+            cold = run((wfile,))
+            assert cold["timed"] > 0, cold
+            warm = run((wfile,))
+            assert warm["wisdom_hits"] > 0, warm
+            assert warm["timed"] == 0, \
+                f"warm solver bring-up still timed sweeps: {warm}"
+    except Exception as err:  # noqa: BLE001 — surfaced as an ERROR row
+        print(f"solver_step ERROR: {err}", file=sys.stderr)
+        row("solver_step_ns2d_slab", -1, "ERROR")
+        return
+    row("solver_step_ns2d_slab", steps["ns2d_slab"], "grid=64x64;r2c")
+    row("solver_step_ns2d_pencil2d", steps["ns2d_pencil2d"],
+        "grid=64x64;r2c;2-axis")
+    row("solver_step_bq3d_slab3d", steps["bq3d_slab3d"],
+        "grid=32^3;r2c;4-field-state")
+    row("solver_step_warm_bringup", warm["bringup_s"] * 1e6,
+        f"cold_s={cold['bringup_s']:.2f};timed={warm['timed']}"
+        f";wisdom_hits={warm['wisdom_hits']};zero-timed-sweeps")
+
+
 def bench_serve_fft():
     """Serving load harness: replay one sustained mixed-traffic trace —
     two shapes, c2c FFT + r2c FFT + r2c bandpass interleaved — through
@@ -799,6 +902,7 @@ BENCHES = [
     ("fft_slab_scaling", bench_fft_slab_scaling),
     ("fft_kernel", bench_fft_kernels),
     ("fft_wisdom", bench_fft_wisdom),
+    ("solver_step", bench_solver_step),
     ("serve_fft", bench_serve_fft),
     ("model_steps", bench_model_steps),
 ]
@@ -832,7 +936,7 @@ def write_outputs(emit_json: bool, partial: bool = False) -> None:
         _write_bench_json(ROOT / "BENCH_fft.json", {
             n: {"us_per_call": round(u, 1), "derived": d}
             for n, u, d in ROWS
-            if n.startswith(("fft", "chain_pipeline"))})
+            if n.startswith(("fft", "chain_pipeline", "solver_step"))})
         # BENCH_serve.json: the serving SLO trajectory (load harness
         # latency percentiles / throughput), gated like the FFT rows
         _write_bench_json(ROOT / "BENCH_serve.json", {

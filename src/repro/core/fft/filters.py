@@ -48,6 +48,23 @@ def lowpass_mask(shape: Sequence[int], keep_frac: float) -> jnp.ndarray:
     return jnp.asarray(out)
 
 
+def twothirds_mask(shape: Sequence[int]) -> jnp.ndarray:
+    """Orszag 2/3-rule dealiasing mask: keep |k| < n/3 per axis (box
+    criterion), so quadratic products computed pointwise in real space
+    alias only into discarded modes. The pseudo-spectral solvers
+    (``core/solver``) push this through the layout-aware builders below
+    (``mask_r2c`` / ``mask_pencil_tf_3d[_r2c]``) so one rule covers
+    every schedule's output layout."""
+    shape = tuple(shape)
+    out = np.ones(shape, bool)
+    for ax, n in enumerate(shape):
+        m = freq_index(n) * 3 < n
+        view = [None] * len(shape)
+        view[ax] = slice(None)
+        out &= m[tuple(view)]
+    return jnp.asarray(out)
+
+
 def highpass_mask(shape: Sequence[int], cut_frac: float) -> jnp.ndarray:
     return jnp.logical_not(lowpass_mask(shape, cut_frac))
 

@@ -54,6 +54,32 @@ def radial_spectrum(re, im, nbins: int = 32) -> Tuple[jnp.ndarray,
     return centers, e / jnp.maximum(cnt, 1.0)
 
 
+def radial_spectrum_k(re, im, kmag, nbins: int = 32, *, weights=None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Layout-aware isotropic spectrum: shell-SUMMED weighted power,
+    binned by a caller-supplied ``|k|`` array in the SAME (possibly
+    digit-permuted / padded half-spectrum) layout as ``re``/``im``.
+
+    Unlike ``radial_spectrum`` (which infers natural-order frequencies
+    from the array shape and averages per shell), this trusts ``kmag``
+    — so a solver can hand in its basis' wavenumber grid and get the
+    physical E(k) no matter which schedule produced the spectrum —
+    and sums per shell, the turbulence-spectrum convention. Hermitian
+    multiplicity / normalization factors fold into ``weights`` (zero
+    on half-spectrum pad columns)."""
+    kmag = np.asarray(kmag, np.float64)
+    kmax = float(kmag.max())
+    bins = np.clip((kmag / (kmax + 1e-9) * nbins).astype(np.int32), 0,
+                   nbins - 1)
+    bins = jnp.asarray(bins.reshape(-1))
+    p = power(re, im)
+    if weights is not None:
+        p = p * weights
+    e = jnp.zeros((nbins,), jnp.float32).at[bins].add(p.reshape(-1))
+    centers = jnp.linspace(0, kmax, nbins)
+    return centers, e
+
+
 def tensor_spectrum_summary(x, nbins: int = 16):
     """In-situ training payload: 1-D FFT along the last axis of a (…, N)
     tensor (gradient row, activation channel, …), radially binned.

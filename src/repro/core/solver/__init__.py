@@ -1,0 +1,21 @@
+"""Pseudo-spectral solver suite — the physics workload driving the
+in-situ FFT stack (the paper's "simulation" producing the fields the
+chain analyzes, here a first-class consumer of the plan cache).
+
+* ``spectral.SpectralBasis`` — plans + layout-matched wavenumbers,
+  2/3-rule dealiasing, Hermitian weights for every decomposition.
+* ``stepper`` — RK4 and integrating-factor RK4 over state pytrees.
+* ``ns2d.NS2DSolver`` — 2-D incompressible Navier–Stokes (vorticity).
+* ``bq3d.Boussinesq3DSolver`` — 3-D Boussinesq convection, same
+  stepper/base machinery.
+
+``docs/solver.md`` has the equations, the dealiasing-through-layouts
+contract, and the restart recipe; ``launch/solver.py`` is the driver.
+"""
+from repro.core.solver.base import SpectralSolverBase
+from repro.core.solver.bq3d import Boussinesq3DSolver
+from repro.core.solver.ns2d import NS2DSolver
+from repro.core.solver.spectral import SpectralBasis
+
+__all__ = ["SpectralBasis", "SpectralSolverBase", "NS2DSolver",
+           "Boussinesq3DSolver"]

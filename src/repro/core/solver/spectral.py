@@ -1,0 +1,275 @@
+"""Layout-aware spectral basis — the glue between a PDE solver and the
+distributed FFT plan cache.
+
+A pseudo-spectral solver needs four things besides the transforms
+themselves: per-axis wavenumber grids, the inverse Laplacian, a
+dealiasing mask, and Hermitian multiplicity weights for energy sums.
+All four depend on the *layout* the chosen schedule leaves its spectrum
+in — natural order for slab/slab3d/pencil/pencil2d, four-step
+digit-permuted on axis 0 for ``pencil_tf``/``fourstep1d``, and a
+truncated+padded half axis for every r2c plan. ``SpectralBasis`` builds
+them all from the resolved plan, so solver code is written once against
+``(k, k2, dealias, weights)`` and runs unchanged under every
+decomposition — which is exactly what the cross-schedule equivalence
+tests in ``tests/test_solver.py`` assert.
+
+The basis also owns placement/gather: ``pencil_tf`` (and
+``fourstep1d``) plans take their INPUT in cyclic order along axis 0
+(``docs/layouts.md``), so natural-layout initial conditions are
+permuted on the way in and un-permuted on the way out. Pointwise
+products in real space — the only thing a pseudo-spectral solver does
+there — are permutation-invariant, so the solver itself never sees the
+cyclic layout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft import plan as plan_mod
+from repro.core.fft.distributed import (cyclic_inverse_order, cyclic_order,
+                                        fourstep_freq_of_position)
+from repro.core.fft.filters import (mask_fourstep_1d, mask_pencil_tf_3d,
+                                    mask_pencil_tf_3d_r2c, mask_r2c,
+                                    twothirds_mask)
+from repro.core.fft.plan import BACKWARD, FORWARD, plan_dft, plan_rfft
+from repro.core.fft.rfft import half_bins, spectral_half_extent
+
+_DIGIT_PERMUTED = ("pencil_tf", "fourstep1d")
+
+
+def _signed_freq(n: int) -> np.ndarray:
+    """Integer wavenumbers in unshifted FFT order: 0,1,…,-n/2,…,-1."""
+    return np.fft.fftfreq(n, d=1.0 / n)
+
+
+class SpectralBasis:
+    """Forward/backward plans plus the layout-matched spectral operators
+    for one grid on one mesh.
+
+    ``real=True`` (the default) plans r2c/c2r half-spectrum transforms;
+    ``real=False`` runs the same physics through full c2c plans (the
+    equivalence tests exercise both). ``decomp``/``backend`` accept the
+    planner's ``"measure"`` sweeps — the backward plan is always built
+    against the decomposition the forward plan RESOLVED to, so a tuned
+    pair can never disagree about layout.
+    """
+
+    def __init__(self, shape: Sequence[int], mesh, *,
+                 decomp: Optional[str] = None,
+                 axis_names: Optional[Tuple[str, ...]] = None,
+                 real: bool = True, backend: str = "auto",
+                 overlap_chunks: int = 0, wire_dtype=None):
+        self.shape = tuple(int(s) for s in shape)
+        self.mesh = mesh
+        self.real = bool(real)
+        plan_fn = plan_rfft if self.real else plan_dft
+        kw = dict(decomp=decomp, axis_names=axis_names, backend=backend,
+                  overlap_chunks=overlap_chunks, wire_dtype=wire_dtype)
+        self.fwd = plan_fn(self.shape, FORWARD, mesh, **kw)
+        kw.update(decomp=self.fwd.decomp, axis_names=self.fwd.axis_names)
+        self.bwd = plan_fn(self.shape, BACKWARD, mesh, **kw)
+        self.decomp = self.fwd.decomp
+        self.axis_names = self.fwd.axis_names
+        # batched plans reuse the RESOLVED backend/wire of the tuned
+        # forward plan — no second sweep for the batch_ndim variant
+        self._backend = self.fwd.backend
+        self._wire_dtype = self.fwd.wire_dtype
+        self._fwd_b = None
+        self._bwd_b = None
+        self.cyclic = self.decomp in _DIGIT_PERMUTED
+        self._p0 = mesh.shape[self.axis_names[0]]
+        if self.real:
+            self.hp = spectral_half_extent(self.decomp, self.shape[-1],
+                                           mesh, self.axis_names)
+            self.spectral_shape = self.shape[:-1] + (self.hp,)
+        else:
+            self.hp = None
+            self.spectral_shape = self.shape
+        self._build_wavenumbers()
+        self._build_dealias()
+
+    # -- spectral operator tables -------------------------------------------
+    def _axis_wavenumbers(self, ax: int) -> np.ndarray:
+        n = self.shape[ax]
+        if self.real and ax == len(self.shape) - 1:
+            k = np.zeros(self.hp)
+            k[: half_bins(n)] = np.arange(half_bins(n))
+        else:
+            k = _signed_freq(n)
+            if ax == 0 and self.cyclic:
+                k = k[fourstep_freq_of_position(n, self._p0)]
+        return k
+
+    def _build_wavenumbers(self) -> None:
+        nd = len(self.shape)
+        self.k = []
+        for ax in range(nd):
+            k = self._axis_wavenumbers(ax)
+            view = [1] * nd
+            view[ax] = k.shape[0]
+            self.k.append(jnp.asarray(k.reshape(view), jnp.float32))
+        k2 = np.zeros(self.spectral_shape)
+        for ax in range(nd):
+            k2 = k2 + np.asarray(self.k[ax], np.float64) ** 2
+        self.k2_np = k2
+        self.k2 = jnp.asarray(k2, jnp.float32)
+        self.inv_k2 = jnp.asarray(np.where(k2 > 0, 1.0 / np.maximum(k2, 1e-30),
+                                           0.0), jnp.float32)
+        self.kmag = np.sqrt(k2)
+        # Hermitian multiplicity of each stored bin under Parseval: the
+        # half layout keeps only k_last >= 0, so interior bins stand in
+        # for their conjugate partners (x2), the k_last=0 plane and (even
+        # n) Nyquist plane are self-conjugate (x1), pad columns hold
+        # nothing (x0). c2c spectra store every bin once.
+        if self.real:
+            n = self.shape[-1]
+            w = np.zeros(self.hp)
+            h = half_bins(n)
+            w[:h] = 2.0
+            w[0] = 1.0
+            if n % 2 == 0:
+                w[h - 1] = 1.0
+            view = [1] * len(self.shape)
+            view[-1] = self.hp
+            self.weights = jnp.asarray(w.reshape(view), jnp.float32)
+        else:
+            self.weights = jnp.ones((1,) * len(self.shape), jnp.float32)
+        self.norm = float(np.prod(self.shape))
+
+    def _build_dealias(self) -> None:
+        if self.real:
+            if self.decomp == "pencil_tf":
+                m = mask_pencil_tf_3d_r2c(self.shape, self._p0, self.hp,
+                                          build=twothirds_mask)
+            else:
+                m = mask_r2c(self.shape, self.hp, build=twothirds_mask)
+        elif self.decomp == "pencil_tf":
+            m = mask_pencil_tf_3d(self.shape, self._p0,
+                                  build=twothirds_mask)
+        elif self.decomp == "fourstep1d":
+            m = mask_fourstep_1d(self.shape[0], self._p0,
+                                 build=twothirds_mask)
+        else:
+            m = twothirds_mask(self.shape)
+        self.dealias = jnp.asarray(m, jnp.float32)
+
+    # -- batched plans -------------------------------------------------------
+    # A pseudo-spectral RHS needs SEVERAL independent transforms per
+    # stage (velocities, gradients, flux components). Dispatching them
+    # as separate executes would put concurrent all_to_alls with no
+    # data dependency in flight at once — on overlapping device groups
+    # their rendezvous can interleave (a deadlock on the CPU backend)
+    # and each pays a separate small-message exchange. Solvers instead
+    # stack the fields on a leading batch axis and run ONE
+    # ``batch_ndim=1`` plan per direction per stage: sequential by
+    # construction, and the wire moves in one large message.
+    @property
+    def fwd_batch(self):
+        if self._fwd_b is None:
+            self._fwd_b = self._plan_batched(FORWARD)
+        return self._fwd_b
+
+    @property
+    def bwd_batch(self):
+        if self._bwd_b is None:
+            self._bwd_b = self._plan_batched(BACKWARD)
+        return self._bwd_b
+
+    def _plan_batched(self, direction):
+        plan_fn = plan_rfft if self.real else plan_dft
+        return plan_fn(self.shape, direction, self.mesh,
+                       decomp=self.decomp, axis_names=self.axis_names,
+                       backend=self._backend, wire_dtype=self._wire_dtype,
+                       batch_ndim=1)
+
+    def forward_batch(self, x):
+        """(B, *shape) real device stack → batched spectral pair."""
+        if self.real:
+            return self.fwd_batch.execute(x)
+        return self.fwd_batch.execute(x, jnp.zeros_like(x))
+
+    def to_real_batch(self, re, im):
+        """Batched spectral pair → (B, *shape) real device stack."""
+        out = self.bwd_batch.execute(re, im)
+        return out[0] if isinstance(out, tuple) else out
+
+    # -- placement / transforms ---------------------------------------------
+    def _place(self, arr: np.ndarray, sharding):
+        arr = np.asarray(arr, np.float32)
+        if jax.process_count() == 1:
+            return jax.device_put(jnp.asarray(arr), sharding)
+        idx = sharding.addressable_devices_indices_map(arr.shape)
+        shards = [jax.device_put(arr[i], d) for d, i in idx.items()]
+        return jax.make_array_from_single_device_arrays(
+            arr.shape, sharding, shards)
+
+    def forward(self, x):
+        """Device real field (plan spatial layout) → spectral pair."""
+        if self.real:
+            return self.fwd.execute(x)
+        return self.fwd.execute(x, jnp.zeros_like(x))
+
+    def to_real(self, re, im):
+        """Spectral pair → device real field (plan spatial layout)."""
+        out = self.bwd.execute(re, im)
+        return out[0] if isinstance(out, tuple) else out
+
+    def to_spectral(self, x: np.ndarray):
+        """Natural-layout numpy real field → placed spectral pair."""
+        x = np.asarray(x, np.float32)
+        assert x.shape == self.shape, (x.shape, self.shape)
+        if self.cyclic:
+            x = x[cyclic_order(self.shape[0], self._p0)]
+        sh = self.fwd.input_sharding()
+        if self.real:
+            return self.forward(self._place(x, sh))
+        return self.fwd.execute(self._place(x, sh),
+                                self._place(np.zeros_like(x), sh))
+
+    def gather_real(self, x) -> np.ndarray:
+        """Device real field (plan spatial layout) → natural numpy."""
+        if jax.process_count() > 1:
+            from jax.experimental.multihost_utils import process_allgather
+            x = process_allgather(x, tiled=True)
+        x = np.asarray(x)
+        if self.cyclic:
+            x = x[cyclic_inverse_order(self.shape[0], self._p0)]
+        return x
+
+    def gather_spectral(self, x) -> np.ndarray:
+        """Spectral leaf → numpy in the plan's own layout (no
+        un-permutation: checkpoints restore into the same basis)."""
+        if jax.process_count() > 1:
+            from jax.experimental.multihost_utils import process_allgather
+            x = process_allgather(x, tiled=True)
+        return np.asarray(x)
+
+    def place_spectral(self, arr: np.ndarray):
+        """Numpy spectral leaf (plan layout) → placed device array."""
+        return self._place(arr, self.fwd.output_sharding())
+
+    def replicated(self, arr: np.ndarray):
+        """Host array → globally-REPLICATED device constant.
+
+        Stepper glue (integrating factors, decay rates) multiplies
+        these against sharded state in eager (non-jit) math. A plain
+        ``jnp.asarray`` would live on one local device, uncommitted —
+        in a multi-process run, mixing it with a global array forces an
+        implicit cross-process transfer at dispatch time, whose
+        collectives can interleave with the plan exchanges already in
+        flight (the same rendezvous hazard as ``bwd_batch``'s note).
+        A replicated global array needs no communication at use sites:
+        every device already holds the full value."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        return self._place(np.asarray(arr),
+                           NamedSharding(self.mesh, PartitionSpec()))
+
+    def plan_stats(self) -> dict:
+        """Subset of ``plan_cache_stats`` a solver run reports."""
+        st = plan_mod.plan_cache_stats()
+        return {k: st.get(k, 0) for k in
+                ("hits", "misses", "wisdom_hits", "sweep_candidates_timed")}

@@ -1,0 +1,190 @@
+"""Solver driver: ``python -m repro.launch.solver --solver ns2d --grid 64 64 …``
+
+Runs the pseudo-spectral solvers (``core/solver``) as the in-situ
+chain's producer: a time-stepping loop whose every stage flows through
+the cached distributed FFT plans, with energy/enstrophy monitoring, the
+shell-summed spectrum shipped through a pipelined ``WriterEndpoint``
+chain, checkpoint/restart via ``ckpt/``, and ``--wisdom`` warm-start
+(a restarted solver plans with ZERO timed sweeps — the bench asserts
+it). Single-process by default; on a cluster (``--coordinator`` etc.
+or the ``REPRO_*`` env contract) the same entry point runs the solve
+over a DCN-spanning mesh, exactly like ``launch/train.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.fft import plan as plan_mod
+from repro.core.insitu.bridge import BridgeData, GridMeta
+from repro.core.insitu.chain import InSituChain
+from repro.core.insitu.endpoints.writer import WriterEndpoint
+from repro.core.solver import Boussinesq3DSolver, NS2DSolver
+from repro.launch.mesh import make_host_mesh, make_multihost_mesh
+from repro.runtime.cluster import (add_cluster_args, config_from_args,
+                                   init_cluster)
+
+
+def build_solver(args, mesh):
+    grid = tuple(args.grid)
+    common = dict(nu=args.nu, dt=args.dt, decomp=args.decomp,
+                  real=not args.c2c, backend=args.backend,
+                  stepper=args.stepper)
+    if args.solver == "ns2d":
+        assert len(grid) == 2, "--solver ns2d wants --grid N0 N1"
+        s = NS2DSolver(grid, mesh, **common)
+        if args.init == "taylor-green":
+            s.init_taylor_green()
+        else:
+            s.init_random(seed=args.seed)
+    else:
+        assert len(grid) == 3, "--solver bq3d wants --grid N0 N1 N2"
+        s = Boussinesq3DSolver(grid, mesh, kappa=args.kappa,
+                               gravity=args.gravity, **common)
+        if args.init == "beltrami":
+            s.init_beltrami()
+        else:
+            s.init_random(seed=args.seed)
+    return s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--solver", default="ns2d", choices=("ns2d", "bq3d"))
+    ap.add_argument("--grid", type=int, nargs="+", default=[64, 64])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--dt", type=float, default=5e-3)
+    ap.add_argument("--nu", type=float, default=1e-3)
+    ap.add_argument("--kappa", type=float, default=1e-3)
+    ap.add_argument("--gravity", type=float, default=1.0)
+    ap.add_argument("--decomp", default=None,
+                    help="slab/pencil/pencil_tf/pencil2d/slab3d/measure "
+                         "(default: inferred from grid rank and mesh)")
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--c2c", action="store_true",
+                    help="run through full c2c plans instead of r2c/c2r")
+    ap.add_argument("--stepper", default="if_rk4",
+                    choices=("rk4", "if_rk4"))
+    ap.add_argument("--init", default="auto",
+                    help="taylor-green | beltrami | random | auto "
+                         "(taylor-green for ns2d, beltrami for bq3d)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-shape", type=int, nargs="+", default=None,
+                    help="single-process mesh shape over host devices, "
+                         "e.g. --mesh-shape 4 2 (default: all devices "
+                         "on one axis)")
+    ap.add_argument("--monitor-every", type=int, default=5)
+    ap.add_argument("--spectrum-bins", type=int, default=16)
+    ap.add_argument("--spectra-dir", default=None,
+                    help="persist per-report E(k) through a pipelined "
+                         "WriterEndpoint chain (.npy per report)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N steps (0 = off)")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--ckpt-dir before stepping")
+    ap.add_argument("--wisdom", default=None, metavar="FILE",
+                    help="persistent autotune wisdom file (read at "
+                         "bring-up, new winners persisted; "
+                         "docs/wisdom.md)")
+    ap.add_argument("--wisdom-mode", default="readwrite",
+                    choices=("off", "read", "readwrite"))
+    add_cluster_args(ap)
+    args = ap.parse_args(argv)
+    if args.init == "auto":
+        args.init = "taylor-green" if args.solver == "ns2d" else "beltrami"
+    if args.wisdom:
+        plan_mod.set_wisdom(args.wisdom, args.wisdom_mode)
+    init_cluster(config_from_args(args))
+
+    if jax.process_count() > 1:
+        mesh = make_multihost_mesh()
+        axes = None                    # plan inference picks the prefix
+    else:
+        shape = (tuple(args.mesh_shape) if args.mesh_shape
+                 else (len(jax.devices()),))
+        names = ("data", "model")[: len(shape)]
+        mesh = make_host_mesh(shape, names)
+        axes = None
+    del axes
+
+    t0 = time.perf_counter()
+    solver = build_solver(args, mesh)
+    bringup_s = time.perf_counter() - t0
+    stats0 = solver.basis.plan_stats()
+
+    if args.ckpt_dir and jax.process_count() > 1:
+        # replicated gathers, same bytes per process — but the atomic
+        # tmp-dir rename races across processes sharing one directory
+        args.ckpt_dir = str(Path(args.ckpt_dir)
+                            / f"proc{jax.process_index()}")
+    if args.restore:
+        assert args.ckpt_dir, "--restore needs --ckpt-dir"
+        step = solver.restore(args.ckpt_dir)
+        print(f"restored step {step} (t={solver.t:.4f})")
+
+    chain = None
+    if args.spectra_dir:
+        chain = InSituChain(
+            [WriterEndpoint(array="spectrum", out_dir=args.spectra_dir,
+                            prefix=f"{args.solver}_spectrum")],
+            mesh=mesh, mode="pipelined").initialize(
+                grid=GridMeta(dims=tuple(args.grid)))
+
+    reports = []
+    t1 = time.perf_counter()
+    done = 0
+    while done < args.steps:
+        n = min(args.monitor_every, args.steps - done)
+        solver.step(n)
+        done += n
+        rep = {"step": solver.step_count, "t": round(solver.t, 6),
+               "energy": solver.energy()}
+        if args.solver == "ns2d":
+            rep["enstrophy"] = solver.enstrophy()
+        else:
+            rep["scalar_variance"] = solver.scalar_variance()
+        reports.append(rep)
+        if jax.process_index() == 0:
+            print(json.dumps(rep))
+        if chain is not None:
+            _, ek = solver.spectrum(args.spectrum_bins)
+            chain.execute(BridgeData(arrays={"spectrum": np.asarray(ek)},
+                                     step=solver.step_count,
+                                     domain="spectral"))
+        if (args.ckpt_every and args.ckpt_dir
+                and solver.step_count % args.ckpt_every == 0):
+            solver.save(args.ckpt_dir)
+    wall = time.perf_counter() - t1
+
+    files = []
+    if chain is not None:
+        fin = chain.finalize()
+        files = fin.get("writer", {}).get("files", [])
+    stats1 = solver.basis.plan_stats()
+    summary = {
+        "solver": args.solver, "grid": list(args.grid),
+        "decomp": solver.basis.decomp, "real": solver.basis.real,
+        "steps": args.steps, "wall_s": round(wall, 4),
+        "steps_per_s": round(args.steps / max(wall, 1e-9), 3),
+        "bringup_s": round(bringup_s, 4),
+        "final": reports[-1] if reports else None,
+        "spectra_files": len(files),
+        "plan_stats": {"wisdom_hits": stats1["wisdom_hits"],
+                       "sweep_candidates_timed":
+                           stats1["sweep_candidates_timed"],
+                       "bringup_misses": stats0["misses"]},
+    }
+    if jax.process_index() == 0:
+        print(json.dumps(summary))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -246,3 +246,15 @@ def test_two_process_transit_bit_identical():
     assert res.returncode == 0, res.stdout[-4000:] + res.stderr[-2000:]
     assert "transit delivery bit-identical" in res.stdout
     assert "transit demo OK" in res.stdout
+
+
+def test_two_process_solver_spectrum_agreement():
+    """2-process cluster: the NS2D solve's transforms cross processes
+    every RK4 stage; the child asserts the Taylor–Green closed-form
+    decay AND that both processes compute the identical E(k) shells
+    (the in-situ monitoring agreement contract)."""
+    res = _run_launcher("--demo", "solver")
+    assert res.returncode == 0, res.stdout[-4000:] + res.stderr[-2000:]
+    assert "solver TG decay" in res.stdout
+    assert "spectrum cross-process spread" in res.stdout
+    assert "solver demo OK" in res.stdout

@@ -10,8 +10,8 @@ process placement (here: one machine) differs. See
 
 Modes:
 
-* ``--demo fft|transit|wisdom|all`` (default ``all``) — the built-in
-  end-to-end demos, re-executing THIS file per process:
+* ``--demo fft|transit|solver|wisdom|all`` (default ``all``) — the
+  built-in end-to-end demos, re-executing THIS file per process:
     - ``fft``: builds a DCN×ICI mesh with ``make_multihost_mesh``,
       runs pencil + slab3d distributed FFT plans whose ``AllToAll``
       stages cross processes, checks them — plus the r2c slab3d
@@ -25,6 +25,11 @@ Modes:
       meshes, pushes a field through ``TransitBridge`` (host
       transport), asserts bit-identical delivery, and runs a
       consumer-mesh FFT on the delivered field.
+    - ``solver``: a short Taylor–Green NS2D solve (``core/solver``)
+      on a host-crossing 2-axis mesh — every RK4 stage's transforms
+      cross processes — asserting the closed-form viscous decay and
+      that all processes compute the identical E(k) shell sums
+      (the in-situ monitoring agreement contract).
     - ``wisdom``: boots the SAME cluster twice against one shared
       wisdom file (``docs/wisdom.md``): the cold boot measures the
       full decomp+knob sweeps and persists the winners, the warm boot
@@ -423,6 +428,60 @@ def _demo_wisdom() -> None:
     print("wisdom demo OK", flush=True)
 
 
+def _demo_solver() -> None:
+    """Short Taylor–Green NS2D solve on a host-crossing 2-axis mesh:
+    every RK4 stage's transforms cross processes. Asserts the
+    closed-form viscous decay E(t) = E₀·e^{-4νt} (the in-solver
+    analytic oracle, now under real multi-process collectives) and
+    that every process computes the IDENTICAL shell-summed spectrum —
+    the cross-process agreement contract of the in-situ monitoring
+    path (each process feeds its own chain; they must not diverge)."""
+    import numpy as np
+    import jax
+    from jax.experimental.multihost_utils import process_allgather
+
+    from repro.core.solver import NS2DSolver
+    from repro.launch.mesh import make_multihost_mesh
+
+    nproc = jax.process_count()
+    dpp = len(jax.local_devices())
+    mesh = make_multihost_mesh(dcn_axes={"dcn": nproc},
+                               ici_axes={"data": dpp})
+    nu, dt, steps = 0.1, 0.01, 10
+    s = NS2DSolver((32, 32), mesh, nu=nu, dt=dt, decomp="pencil2d",
+                   axis_names=("dcn", "data"))
+    s.init_taylor_green()
+    e0 = s.energy()
+    t0 = time.perf_counter()
+    s.step(steps)
+    got = s.energy()
+    jax.block_until_ready(s.state)
+    us = (time.perf_counter() - t0) / steps * 1e6
+    want = e0 * float(np.exp(-4.0 * nu * steps * dt))
+    err = abs(got - want) / want
+    print(f"solver TG decay: E={got:.6f} want={want:.6f} "
+          f"rel err={err:.2e}", flush=True)
+    assert err < 1e-4, f"TG decay off the closed form: {err}"
+
+    # spectrum agreement: each process materializes the (replicated)
+    # shell sums, then allgathers its OWN host copy — any divergence
+    # (e.g. layout-dependent binning) shows up as a row mismatch
+    _, ek = s.spectrum(8)
+    mine = np.asarray(ek)
+    allp = np.asarray(process_allgather(mine))
+    allp = allp.reshape(nproc, -1)
+    spread = float(np.max(np.abs(allp - allp[0])))
+    scale = float(np.max(np.abs(allp[0]))) or 1.0
+    print(f"spectrum cross-process spread = {spread / scale:.2e}",
+          flush=True)
+    assert spread <= 1e-6 * scale, \
+        f"processes disagree on E(k): spread={spread}"
+    _bench_row(f"multihost_solver_ns2d_{nproc}x{dpp}", us,
+               f"grid=32x32;pencil2d;decay_err={err:.1e}"
+               f";spectrum_spread={spread / scale:.1e}")
+    print("solver demo OK", flush=True)
+
+
 def _child_main(demo: str) -> int:
     try:
         from repro.runtime import cluster
@@ -442,6 +501,8 @@ def _child_main(demo: str) -> int:
         _demo_fft()
     if demo in ("transit", "all"):
         _demo_transit()
+    if demo in ("solver", "all"):
+        _demo_solver()
     if demo == "wisdom":
         # never part of a child's "all": one boot can't be cold AND
         # warm — the parent's wisdom phase launches two dedicated
@@ -514,7 +575,7 @@ def main(argv=None) -> int:
                     help="CPU placeholder devices per process "
                          "(XLA_FLAGS, set before the child imports jax)")
     ap.add_argument("--demo", default="all",
-                    choices=("fft", "transit", "wisdom", "all"))
+                    choices=("fft", "transit", "solver", "wisdom", "all"))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="collect process 0's BENCHROW lines into a "
                          "BENCH-style JSON artifact")
