@@ -121,6 +121,16 @@ def mesh_process_topology(mesh):
             for name in mesh.axis_names}
 
 
+def mesh_process_span(mesh):
+    """The sorted process indices owning ``mesh``'s devices — the set
+    that decides whether a collective over the mesh is safe (span ==
+    whole cluster), process-local (span of one), or the forbidden
+    strict subset (``transit.require_producer_spans_cluster``, the
+    sweep gating in ``core/fft/plan.py``, and the rescale gating in
+    ``runtime/elastic.py`` all key off it)."""
+    return sorted({int(d.process_index) for d in mesh.devices.flat})
+
+
 def backend_initialized() -> bool:
     """True when a JAX backend already exists in this process — past
     that point, bring-up configuration (the gloo collectives selector,

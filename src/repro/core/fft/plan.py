@@ -292,6 +292,28 @@ def plan_cache_clear() -> None:
             _STATS[k] = 0
 
 
+def plan_cache_evict(mesh: Mesh) -> int:
+    """Drop every cached plan, knob-sweep winner, and decomp winner
+    keyed on ``mesh``; return how many entries went. The elastic
+    controller (``runtime/elastic.py``) calls this on every rescale:
+    cached plans pin compiled programs and shardings of a mesh that no
+    longer exists (or is being freshly brought up), and the honest
+    bring-up path for the rescaled mesh is plan-cache miss → wisdom
+    read-through — which is exactly what the warm-rescale acceptance
+    (``wisdom_hits > 0``, ``sweep_candidates_timed == 0``) measures.
+    Stats counters and the wisdom store are untouched."""
+    mk = _mesh_key(mesh)
+    evicted = 0
+    with _LOCK:
+        # all three caches key as (shape, direction, mesh_key, ...)
+        for cache in (_PLAN_CACHE, _TUNE_CACHE, _DECOMP_CACHE):
+            doomed = [k for k in cache if k[2] == mk]
+            for k in doomed:
+                del cache[k]
+            evicted += len(doomed)
+    return evicted
+
+
 def set_wisdom(path, mode: str = "readwrite"):
     """Configure persistent wisdom for this process: ``path`` names the
     store file, ``mode`` ∈ ``off|read|readwrite``. ``set_wisdom(None)``

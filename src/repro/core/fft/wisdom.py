@@ -38,11 +38,16 @@ winner transferable, nothing more:
   shape, direction, decomp (or the caller knobs, for decomp keys),
   axis names, real/complex, batch rank, ``allow_reduced_wire``;
 * the **topology fingerprint** (:func:`topology_fingerprint`): mesh
-  axis extents, per-device ids *and process indices*, process count,
-  platform, and the per-axis host-crossing profile
+  axis extents, the per-position process placement and per-process
+  device counts (but *not* raw device ids — which local device a
+  process contributes is a scheduling accident, not a topology),
+  process count, platform, and the per-axis host-crossing profile
   (``compat.mesh_process_topology``). The same 8 devices on one host
   vs across two hosts are different topologies — their winners must
-  never be exchanged (the whole point of the topology sweeps).
+  never be exchanged (the whole point of the topology sweeps). The
+  same process's devices in a different order, or a rescaled consumer
+  mesh that landed on a sibling device (``runtime/elastic.py``), are
+  the *same* topology and warm-start from the recorded winner.
 
 Schema/software versions live at the *file* level: a schema bump, a
 different JAX, or a bumped ``SWEEP_REV`` (bump it whenever the
@@ -78,10 +83,12 @@ SCHEMA = 1
 
 # Bump whenever the meaning of a recorded winner changes: the sweep
 # candidate spaces (plan._schedule_variants, plan._SWEEP_DECOMPS), the
-# knob-dict fields, or the timing methodology. Old wisdom then reads
-# as stale (cold start) instead of pinning a winner from a race that
-# no longer exists.
-SWEEP_REV = 1
+# knob-dict fields, the key anatomy, or the timing methodology. Old
+# wisdom then reads as stale (cold start) instead of pinning a winner
+# from a race that no longer exists.
+# rev 2: topology_fingerprint canonicalized (device ids dropped in
+# favor of per-process device counts) for elastic rescale warm-starts.
+SWEEP_REV = 2
 
 MODES = ("off", "read", "readwrite")
 
@@ -96,19 +103,29 @@ def software_fingerprint() -> Dict[str, Any]:
 
 def topology_fingerprint(mesh) -> dict:
     """Everything about process/device placement that a measured
-    winner depends on. Two meshes with equal fingerprints time
-    identically (same extents, same device ids in the same order on
-    the same processes, same DCN-crossing profile), so wisdom recorded
-    on one cluster boot is valid on the next boot of the *same*
-    cluster shape — and on nothing else."""
+    winner depends on — and nothing it doesn't. Two meshes with equal
+    fingerprints time identically: same axis extents, the same process
+    at every mesh position, the same number of devices contributed per
+    process, the same cluster size and DCN-crossing profile. Raw
+    device ids are deliberately **not** part of the fingerprint:
+    within one process every local CPU/GPU device is interchangeable
+    for timing purposes, so a mesh rebuilt over a sibling device (the
+    elastic-rescale case, ``runtime/elastic.py``) or with its local
+    devices permuted warm-starts from the same wisdom. Anything that
+    moves work across the process boundary — a different process at a
+    mesh position, a different process count, a changed host-crossing
+    profile — changes the fingerprint and misses."""
     import jax
 
     from repro.compat import mesh_process_topology
 
     devs = list(mesh.devices.flat)
+    counts: Dict[int, int] = {}
+    for d in devs:
+        counts[int(d.process_index)] = counts.get(int(d.process_index), 0) + 1
     return {
         "mesh_shape": [[str(name), int(n)] for name, n in mesh.shape.items()],
-        "device_ids": [int(d.id) for d in devs],
+        "devices_per_process": sorted([p, n] for p, n in counts.items()),
         "process_placement": [int(d.process_index) for d in devs],
         "num_processes": int(jax.process_count()),
         "platform": str(getattr(devs[0], "platform", "unknown")),

@@ -50,6 +50,13 @@ serve behind ``--transit-consumers``) must call
 ``require_producer_spans_cluster`` first: a producer mesh that
 excludes some processes strands those processes in the jitted step —
 the "subset collectives hang" failure mode of ``docs/multihost.md``.
+
+A bridge is immutable: it pins one producer/consumer mesh pair. When
+the consumer side rescales at runtime, ``runtime/elastic.py`` builds
+a **new** bridge over the surviving devices and routes subsequent
+sends through it (``ElasticController.send``); in-flight serving
+requests on the old mesh drain or fail-contained first
+(``docs/elastic.md``).
 """
 from __future__ import annotations
 
@@ -60,6 +67,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import mesh_process_span
 from repro.core.insitu.bridge import BridgeData
 
 VIAS = ("auto", "device_put", "host")
@@ -87,7 +95,7 @@ def require_producer_spans_cluster(producer_mesh,
     nproc = jax.process_count()
     if nproc <= 1:
         return
-    span = sorted({d.process_index for d in producer_mesh.devices.flat})
+    span = mesh_process_span(producer_mesh)
     if len(span) < nproc:
         raise ValueError(
             f"{flag}: the producer mesh spans only processes {span} of a "

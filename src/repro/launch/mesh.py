@@ -30,7 +30,7 @@ import jax
 import numpy as np
 
 from repro.compat import (make_explicit_mesh, make_mesh,
-                          mesh_process_topology)
+                          mesh_process_span, mesh_process_topology)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -108,18 +108,28 @@ def make_multihost_mesh(dcn_axes: Optional[Dict[str, int]] = None,
 
 def make_transit_meshes(m: int, n: int, *,
                         producer_axes: Sequence[str] = ("data",),
-                        consumer_axes: Sequence[str] = ("data",)
+                        consumer_axes: Sequence[str] = ("data",),
+                        exclude_ids: Optional[Sequence[int]] = None
                         ) -> Tuple[object, object]:
     """Disjoint producer/consumer meshes for the M→N in-transit path
     (``core/insitu/transit.TransitBridge``): the first ``m`` devices
     (process-major order) produce, the last ``n`` consume. 1-D meshes
     over each group; reshape on your own for fancier splits. Requires
     ``m + n <=`` the global device count — producer and consumer must
-    not share devices, that is the whole point."""
+    not share devices, that is the whole point.
+
+    ``exclude_ids`` removes devices (by ``Device.id``) from the pool
+    before the split — the elastic-rescale path
+    (``runtime/elastic.py``) uses it to rebuild the consumer mesh over
+    the survivors of a failure while the producer prefix, which never
+    overlaps the exclusions, stays byte-identical."""
     devs = _process_major_devices()
+    if exclude_ids:
+        dead = {int(i) for i in exclude_ids}
+        devs = np.array([d for d in devs if d.id not in dead])
     if m + n > len(devs):
         raise ValueError(f"transit split {m}+{n} exceeds "
-                         f"{len(devs)} global devices")
+                         f"{len(devs)} available devices")
     if m < 1 or n < 1:
         raise ValueError("both meshes need at least one device")
     pshape = (m,) + (1,) * (len(producer_axes) - 1)
@@ -162,11 +172,44 @@ def make_transit_setup(n_consumers: int, *,
     return producer_mesh, TransitBridge(producer_mesh, consumer_mesh)
 
 
+def make_elastic_setup(n_consumers: int, *,
+                       producer_axes: Sequence[str] = ("data", "model"),
+                       consumer_axes: Sequence[str] = ("data",),
+                       noun: str = "producer",
+                       flag: str = "--elastic",
+                       **controller_kwargs):
+    """The drivers' ``--elastic`` bring-up: like ``make_transit_setup``
+    but the consumer side is owned by an
+    ``runtime.elastic.ElasticController`` that can rescale it at
+    runtime (failure-driven shrink, operator grow) while the producer
+    mesh — and the driver's jitted loop compiled against it — stays
+    untouched. Returns ``(producer_mesh, controller)``; the controller
+    duck-types the bridge surface (``send``/``is_consumer``/...), so
+    drivers pass it anywhere a ``TransitBridge`` goes and sends
+    automatically route to the newest bridge. Invalid splits raise
+    ``SystemExit`` naming ``flag``. ``controller_kwargs`` forward to
+    ``ElasticController`` (``lease=``, ``max_misses=``, ``clock=``,
+    ``plan_kwargs=``, ...)."""
+    from repro.runtime.elastic import ElasticController
+    ndev = len(jax.devices())
+    if n_consumers >= ndev:
+        raise SystemExit(
+            f"{flag} with {n_consumers} consumers leaves no {noun} "
+            f"devices (have {ndev})")
+    try:
+        controller = ElasticController(
+            n_consumers, producer_axes=producer_axes,
+            consumer_axes=consumer_axes, flag=flag, **controller_kwargs)
+    except ValueError as err:
+        raise SystemExit(str(err)) from None
+    return controller.producer_mesh, controller
+
+
 def describe_mesh(mesh) -> Dict[str, object]:
     """Operator-facing mesh summary: shape, axis → crosses-hosts, and
     process span — the first thing ``docs/multihost.md`` says to print
     when a schedule is slower than expected."""
-    procs = sorted({d.process_index for d in mesh.devices.flat})
+    procs = mesh_process_span(mesh)
     return {
         "shape": dict(mesh.shape),
         "axis_crosses_hosts": mesh_process_topology(mesh),

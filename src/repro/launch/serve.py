@@ -184,6 +184,17 @@ def main(argv=None):
                          "every process must keep at least one decode "
                          "device or the run aborts (docs/multihost.md, "
                          "subset collectives)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="put the monitor's consumer mesh under an "
+                         "ElasticController: consumer ranks heartbeat "
+                         "at monitor cadence and a rank missing its "
+                         "lease is rescaled away without restarting "
+                         "decode (docs/elastic.md; requires "
+                         "--transit-consumers)")
+    ap.add_argument("--elastic-lease", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="heartbeat lease; a consumer rank missing 3 "
+                         "leases is declared dead")
     add_cluster_args(ap)
     args = ap.parse_args(argv)
     if args.wisdom:
@@ -196,12 +207,25 @@ def main(argv=None):
            else registry.get_config(args.arch))
     assert cfg.family != "encdec", "use whisper serve example for enc-dec"
     transit_bridge = None
+    elastic = None
     if args.transit_consumers:
         # M→N in-transit: decode on the producer mesh, monitor on the
         # disjoint consumer mesh
-        from repro.launch.mesh import make_transit_setup
-        mesh, transit_bridge = make_transit_setup(args.transit_consumers,
-                                                  noun="decode")
+        if args.elastic:
+            # the controller duck-types the bridge: monitor warm-up and
+            # every engine submit route to the newest generation's mesh
+            from repro.launch.mesh import make_elastic_setup
+            mesh, elastic = make_elastic_setup(
+                args.transit_consumers, noun="decode",
+                lease=args.elastic_lease)
+            transit_bridge = elastic
+        else:
+            from repro.launch.mesh import make_transit_setup
+            mesh, transit_bridge = make_transit_setup(
+                args.transit_consumers, noun="decode")
+    elif args.elastic:
+        raise SystemExit("--elastic requires --transit-consumers N "
+                         "(there is no consumer mesh to rescale)")
     else:
         mesh = make_host_mesh()
     policy = make_policy(mesh, global_batch=args.batch)
@@ -245,6 +269,12 @@ def main(argv=None):
                 engine.submit(logits[:, -1], bucket="monitor")
                 snapshots += 1
                 engine.step()
+                if elastic is not None:
+                    # lease renewal + failure poll at monitor cadence;
+                    # tick() is collective and every process reaches
+                    # this point at the same decode step
+                    elastic.heartbeat_all()
+                    elastic.tick()
         jax.block_until_ready(logits)
         t_decode = time.perf_counter() - t0
         if engine is not None:
@@ -289,7 +319,9 @@ def main(argv=None):
             },
         }
     if transit_bridge is not None:
-        report["transit"] = transit_bridge.report()
+        # controller.report() nests the live bridge's transit accounting
+        report["elastic" if elastic is not None else "transit"] = \
+            transit_bridge.report()
     if args.bench_out and jax.process_index() == 0:
         _emit_report_rows(report, args.bench_out)
         print(f"serve: decode {report['decode_ms_per_token']} ms/token, "

@@ -83,6 +83,23 @@ def main(argv=None):
     ap.add_argument("--spectra-dir", default=None,
                     help="persist per-report E(k) through a pipelined "
                          "WriterEndpoint chain (.npy per report)")
+    ap.add_argument("--transit-consumers", type=int, default=0,
+                    metavar="N",
+                    help="M→N in-transit split: solve on all but the "
+                         "last N devices and ship each E(k) report to "
+                         "a disjoint N-device consumer mesh through "
+                         "core/insitu/transit.TransitBridge (0 = "
+                         "persist in place)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="put the transit consumer mesh under an "
+                         "ElasticController: consumer ranks heartbeat "
+                         "every report, missed leases trigger a "
+                         "restart-free rescale (docs/elastic.md; "
+                         "requires --transit-consumers)")
+    ap.add_argument("--elastic-lease", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="heartbeat lease; a consumer rank missing 3 "
+                         "leases is declared dead")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="checkpoint every N steps (0 = off)")
@@ -103,16 +120,31 @@ def main(argv=None):
         plan_mod.set_wisdom(args.wisdom, args.wisdom_mode)
     init_cluster(config_from_args(args))
 
-    if jax.process_count() > 1:
+    transit_bridge = None
+    elastic = None
+    if args.transit_consumers:
+        # M→N in-transit: solve on a producer mesh excluding the last
+        # N devices; E(k) reports hop to the consumer mesh
+        if args.elastic:
+            from repro.launch.mesh import make_elastic_setup
+            mesh, elastic = make_elastic_setup(
+                args.transit_consumers, noun="solver",
+                lease=args.elastic_lease)
+            transit_bridge = elastic
+        else:
+            from repro.launch.mesh import make_transit_setup
+            mesh, transit_bridge = make_transit_setup(
+                args.transit_consumers, noun="solver")
+    elif args.elastic:
+        raise SystemExit("--elastic requires --transit-consumers N "
+                         "(there is no consumer mesh to rescale)")
+    elif jax.process_count() > 1:
         mesh = make_multihost_mesh()
-        axes = None                    # plan inference picks the prefix
     else:
         shape = (tuple(args.mesh_shape) if args.mesh_shape
                  else (len(jax.devices()),))
         names = ("data", "model")[: len(shape)]
         mesh = make_host_mesh(shape, names)
-        axes = None
-    del axes
 
     t0 = time.perf_counter()
     solver = build_solver(args, mesh)
@@ -155,9 +187,22 @@ def main(argv=None):
             print(json.dumps(rep))
         if chain is not None:
             _, ek = solver.spectrum(args.spectrum_bins)
-            chain.execute(BridgeData(arrays={"spectrum": np.asarray(ek)},
-                                     step=solver.step_count,
-                                     domain="spectral"))
+            payload = BridgeData(arrays={"spectrum": np.asarray(ek)},
+                                 step=solver.step_count,
+                                 domain="spectral")
+            deliver = True
+            if transit_bridge is not None:
+                # collective hop onto the consumer mesh — every process
+                # calls send(); only consumer participants get arrays
+                payload = transit_bridge.send(payload)
+                deliver = transit_bridge.is_consumer()
+            if deliver:
+                chain.execute(payload)
+        if elastic is not None:
+            # lease renewal + failure poll once per monitor interval —
+            # tick() is collective and every process is here each loop
+            elastic.heartbeat_all()
+            elastic.tick()
         if (args.ckpt_every and args.ckpt_dir
                 and solver.step_count % args.ckpt_every == 0):
             solver.save(args.ckpt_dir)
@@ -181,8 +226,11 @@ def main(argv=None):
                            stats1["sweep_candidates_timed"],
                        "bringup_misses": stats0["misses"]},
     }
+    if transit_bridge is not None:
+        summary["elastic" if elastic is not None else "transit"] = \
+            transit_bridge.report()
     if jax.process_index() == 0:
-        print(json.dumps(summary))
+        print(json.dumps(summary, default=str))
     return summary
 
 

@@ -65,6 +65,18 @@ def main(argv=None):
                          "clusters: every process must keep at least "
                          "one producer device or the run aborts "
                          "(docs/multihost.md, subset collectives)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="put the transit consumer mesh under an "
+                         "ElasticController: consumer ranks heartbeat "
+                         "every in-situ report, a rank that misses its "
+                         "lease is rescaled away (and can rejoin) "
+                         "without restarting the producer "
+                         "(docs/elastic.md; requires "
+                         "--transit-consumers)")
+    ap.add_argument("--elastic-lease", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="heartbeat lease; a consumer rank missing 3 "
+                         "leases is declared dead")
     ap.add_argument("--fail-at", type=int, nargs="*", default=None,
                     help="inject failures at these steps (FT test)")
     ap.add_argument("--production-mesh", action="store_true")
@@ -96,11 +108,25 @@ def main(argv=None):
     cfg = (registry.get_reduced(args.arch) if args.reduced
            else registry.get_config(args.arch))
     transit_bridge = None
+    elastic = None
     if args.transit_consumers:
         # M→N in-transit: the model trains on a producer mesh that
         # excludes the last N devices; spectra hop to the consumer mesh
-        from repro.launch.mesh import make_transit_setup
-        mesh, transit_bridge = make_transit_setup(args.transit_consumers)
+        if args.elastic:
+            # consumer side under an ElasticController: the controller
+            # duck-types the bridge, so every send below routes to the
+            # newest generation's mesh
+            from repro.launch.mesh import make_elastic_setup
+            mesh, elastic = make_elastic_setup(
+                args.transit_consumers, lease=args.elastic_lease)
+            transit_bridge = elastic
+        else:
+            from repro.launch.mesh import make_transit_setup
+            mesh, transit_bridge = make_transit_setup(
+                args.transit_consumers)
+    elif args.elastic:
+        raise SystemExit("--elastic requires --transit-consumers N "
+                         "(there is no consumer mesh to rescale)")
     else:
         mesh = (make_production_mesh() if args.production_mesh
                 else make_host_mesh())
@@ -185,6 +211,12 @@ def main(argv=None):
                 deliver = transit_bridge.is_consumer()
             if deliver:
                 spectra_chain.execute(payload)
+        if elastic is not None and monitor_step % args.insitu_every == 0:
+            # lease renewal + failure poll at monitor cadence; tick()
+            # is collective, and every process reaches this point at
+            # the same step, matching its contract
+            elastic.heartbeat_all()
+            elastic.tick()
         if step % 10 == 0 or step <= 2:
             extra = ""
             if "insitu" in metrics:
@@ -216,7 +248,9 @@ def main(argv=None):
         out["spectra_backpressure_ms"] = round(
             pipe.get("backpressure_s", 0.0) * 1e3, 2)
     if transit_bridge is not None:
-        out["transit"] = transit_bridge.report()
+        # controller.report() nests the live bridge's transit accounting
+        out["elastic" if elastic is not None else "transit"] = \
+            transit_bridge.report()
     print(json.dumps(out, default=str))
     return out
 

@@ -235,3 +235,4 @@ def cluster_info() -> Dict[str, object]:
 # their documented runtime-facing home.
 axis_crosses_processes = compat.axis_crosses_processes
 mesh_process_topology = compat.mesh_process_topology
+mesh_process_span = compat.mesh_process_span

@@ -1,0 +1,338 @@
+"""Elastic consumer-mesh rescaling — N→M at runtime, producer intact.
+
+ROADMAP's "stays up" story has two halves. Persistent wisdom
+(``core/fft/wisdom.py``) made *restarts* cheap; this module removes
+the restart: an :class:`ElasticController` owns the consumer side of
+an M→N transit split (``docs/multihost.md``) and rescales it — shrink
+when the :class:`~repro.runtime.fault.FailureDetector` declares a
+consumer rank dead, grow when capacity rejoins — while the producer
+mesh, and the jitted main loop compiled against it, never change.
+
+The device model: the global process-major device list splits into a
+**fixed producer prefix** (``ndev - n_consumers`` devices) and a
+**consumer pool** (the rest). Pool positions are the controller's
+*ranks*: rank r is forever pool device r, alive or dead. A rescale
+excludes dead devices from the pool and rebuilds the consumer mesh
+over the last ``n`` survivors (``launch.mesh.make_transit_meshes``
+with ``exclude_ids``); exclusions never reach the producer prefix, so
+the producer mesh is byte-identical across generations.
+
+One rescale walks the state machine ``serving → draining →
+rebuilding → serving``:
+
+1. **draining** — an attached :class:`~repro.serve.fft_engine.
+   FFTServeEngine` either drains (graceful, operator-driven) or
+   fail-contains its pending requests (failure-driven: the old mesh
+   is not trustworthy; each un-launched request fails alone with
+   ``MeshRescaled``) and swaps onto the new mesh.
+2. **rebuilding** — cached plans keyed on the old *and* new consumer
+   meshes are evicted (``plan.plan_cache_evict``): plans pin compiled
+   programs of a retired topology, and the honest bring-up of the new
+   mesh is plan-cache miss → **wisdom** read-through. Because
+   ``wisdom.topology_fingerprint`` is device-id-free, a rescaled mesh
+   with the same shape/process placement warm-starts from wisdom
+   recorded by any earlier generation — the acceptance contract is
+   ``plan_stats()`` showing ``wisdom_hits > 0`` with
+   ``sweep_candidates_timed == 0`` after a grow.
+3. A fresh :class:`~repro.core.insitu.transit.TransitBridge` is built
+   over the new mesh; subsequent ``send``\\ s route through it.
+
+**Collective contract** (multi-process clusters): ``tick()`` and
+``rescale()`` are collectives — every process calls them at the same
+point in its loop, like every other collective in this repo.
+``tick()`` broadcasts process 0's death verdict (a fixed-size rank
+bitmask via ``broadcast_one_to_all``) so all processes rebuild
+identical meshes even if wall clocks disagree. The controller
+duck-types the ``TransitBridge`` surface (``send`` / ``is_producer`` /
+``is_consumer`` / ``reset_stats``), so drivers pass it anywhere a
+bridge goes and sends automatically target the newest generation.
+
+Protocol walkthrough, failure modes, and the chaos-harness recipes:
+``docs/elastic.md``. Real 2-process exercise:
+``tools/launch_multihost.py --demo elastic``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.compat import mesh_process_span
+from repro.core.fft.plan import (FORWARD, plan_cache_evict,
+                                 plan_cache_stats, plan_dft)
+from repro.core.insitu.transit import (TransitBridge,
+                                       require_producer_spans_cluster)
+from repro.runtime.fault import FailureDetector
+
+# plan_stats() reports these as deltas since the current generation's
+# bring-up — the warm-rescale acceptance reads wisdom_hits > 0 with
+# sweep_candidates_timed == 0
+_GEN_STAT_KEYS = ("hits", "misses", "sweep_candidates_timed",
+                  "wisdom_hits", "wisdom_misses", "wisdom_stale")
+
+
+class ElasticController:
+    """Rescale the consumer mesh N→M at runtime (module docstring).
+
+    Parameters:
+
+    * ``n_consumers`` — initial consumer-mesh size; the producer mesh
+      takes every remaining device and is fixed for the controller's
+      lifetime.
+    * ``producer_axes`` / ``consumer_axes`` — mesh axis names, as in
+      ``make_transit_meshes``.
+    * ``lease`` / ``max_misses`` / ``clock`` — forwarded to the
+      :class:`FailureDetector` (ignored when ``detector`` is given).
+      ``clock`` may be a step counter for cross-process determinism.
+    * ``plan_kwargs`` — defaults for :meth:`plan` (``backend=``, ...).
+    * ``engine`` — optional :class:`FFTServeEngine` to carry across
+      rescales (also settable later via :meth:`attach_engine`).
+    * ``flag`` — the driver flag named in operator-facing errors.
+    """
+
+    def __init__(self, n_consumers: int, *,
+                 producer_axes=("data", "model"),
+                 consumer_axes=("data",),
+                 lease: float = 1.0, max_misses: int = 3,
+                 clock: Optional[Callable[[], float]] = None,
+                 detector: Optional[FailureDetector] = None,
+                 plan_kwargs: Optional[dict] = None,
+                 engine=None, flag: str = "--elastic"):
+        from repro.launch.mesh import (_process_major_devices,
+                                       make_transit_meshes)
+        self._make_transit_meshes = make_transit_meshes
+        ndev = len(jax.devices())
+        if not 1 <= n_consumers < ndev:
+            raise ValueError(
+                f"{flag}: need 1 <= n_consumers < {ndev} global devices, "
+                f"got {n_consumers}")
+        self.flag = flag
+        self._m = ndev - n_consumers
+        self._producer_axes = tuple(producer_axes)
+        self._consumer_axes = tuple(consumer_axes)
+        self.plan_kwargs = dict(plan_kwargs or {})
+        self.detector = detector or FailureDetector(
+            lease=lease, max_misses=max_misses,
+            clock=clock or time.monotonic)
+        self.producer_mesh, cmesh = make_transit_meshes(
+            self._m, n_consumers, producer_axes=self._producer_axes,
+            consumer_axes=self._consumer_axes)
+        require_producer_spans_cluster(self.producer_mesh, flag)
+        # rank r <-> pool device r, for the controller's lifetime
+        self._pool = list(_process_major_devices()[self._m:])
+        self._excluded: set = set()          # dead device ids
+        self._n = int(n_consumers)
+        self._bridge = TransitBridge(self.producer_mesh, cmesh)
+        self._engine = engine
+        self.generation = 0
+        self.state = "serving"
+        self.events: List[Dict[str, Any]] = []
+        for rank in self.active_ranks():
+            self.detector.register(rank)
+        self._stats0 = plan_cache_stats()
+
+    # -- topology views -------------------------------------------------------
+    @property
+    def consumer_mesh(self):
+        return self._bridge.consumer_mesh
+
+    @property
+    def bridge(self) -> TransitBridge:
+        """The current generation's bridge (rebuilt on every rescale)."""
+        return self._bridge
+
+    def _alive_pool(self) -> List[Any]:
+        return [d for d in self._pool if d.id not in self._excluded]
+
+    def active_ranks(self) -> List[int]:
+        """Ranks whose pool device sits in the CURRENT consumer mesh
+        (the last ``n`` survivors — these are the ranks expected to
+        heartbeat)."""
+        active = {d.id for d in self.consumer_mesh.devices.flat}
+        return [r for r, d in enumerate(self._pool) if d.id in active]
+
+    def consumer_ranks(self) -> Dict[int, Dict[str, Any]]:
+        """Operator view of the whole pool: every rank's device,
+        process, liveness, and current-mesh membership."""
+        dead = set(self.detector.dead_ranks())
+        active = set(self.active_ranks())
+        return {r: {"device_id": int(d.id),
+                    "process": int(d.process_index),
+                    "alive": r not in dead,
+                    "active": r in active}
+                for r, d in enumerate(self._pool)}
+
+    # -- heartbeats -----------------------------------------------------------
+    def heartbeat(self, rank: int, now: Optional[float] = None) -> None:
+        self.detector.heartbeat(rank, now)
+
+    def heartbeat_all(self, now: Optional[float] = None, *,
+                      drop: Iterable[int] = ()) -> None:
+        """Renew every active rank's lease except ``drop`` — the
+        driver-loop convenience (and the chaos harness's heartbeat-drop
+        injection point)."""
+        dropped = set(drop)
+        dead = set(self.detector.dead_ranks())
+        for rank in self.active_ranks():
+            if rank not in dropped and rank not in dead:
+                self.detector.heartbeat(rank, now)
+
+    # -- failure-driven rescale ----------------------------------------------
+    def tick(self, now: Optional[float] = None, *,
+             straggler_report: Optional[dict] = None) -> Optional[dict]:
+        """One monitoring tick: poll leases, fold in an optional
+        ``StragglerMonitor.rank_report`` (persistent slow ranks are
+        evicted), agree the verdict cluster-wide, and rescale away any
+        newly dead ranks. Returns the rescale event, or ``None``.
+
+        **Collective** on multi-process clusters — every process must
+        call it at the same point (the verdict broadcast runs
+        unconditionally so collective counts never diverge)."""
+        verdict = self.detector.poll(now)
+        local_dead = list(verdict["new_dead"])
+        if straggler_report is not None:
+            local_dead += self.detector.consume_straggler_report(
+                straggler_report)
+        dead = self._agree_dead(local_dead)
+        if not dead:
+            return None
+        # failure-driven: the old mesh lost a member — never wait on it
+        return self.rescale(exclude_ranks=dead, drain=False,
+                            reason=f"failure: rank(s) {dead} declared dead")
+
+    def _agree_dead(self, local_dead: List[int]) -> List[int]:
+        """Cluster-wide death verdict: process 0's view wins, shipped
+        as a fixed-size rank bitmask so the collective payload never
+        depends on the verdict. Single-process: identity."""
+        if jax.process_count() <= 1:
+            return sorted(set(local_dead))
+        from jax.experimental.multihost_utils import broadcast_one_to_all
+        mask = np.zeros(len(self._pool), np.int32)
+        for r in local_dead:
+            mask[r] = 1
+        agreed = np.asarray(broadcast_one_to_all(mask))
+        dead = [int(r) for r in np.nonzero(agreed)[0]]
+        for r in dead:           # non-0 processes adopt the verdict
+            self.detector.declare_dead(r, "agreed verdict (process 0)")
+        return dead
+
+    # -- the rescale ----------------------------------------------------------
+    def rescale(self, n: Optional[int] = None, *,
+                exclude_ranks: Iterable[int] = (),
+                rejoin_ranks: Iterable[int] = (),
+                drain: bool = True,
+                reason: str = "operator") -> Dict[str, Any]:
+        """Rebuild the consumer side over the surviving/joined pool.
+
+        ``exclude_ranks`` leave the pool (their leases are revoked);
+        ``rejoin_ranks`` return (fresh leases). ``n`` is the new mesh
+        size (default: the old size, capped to the survivors).
+        ``drain`` picks the engine's old-mesh semantics — complete
+        everything (True) or fail-contain pending (False, the
+        failure path). Returns (and logs) the rescale event.
+
+        **Collective** on multi-process clusters, like :meth:`tick`.
+        """
+        t0 = time.perf_counter()
+        old_n = self._n
+        old_mesh = self.consumer_mesh
+        self.state = "draining"
+        for rank in exclude_ranks:
+            self._excluded.add(int(self._pool[rank].id))
+            self.detector.declare_dead(rank, reason)
+        for rank in rejoin_ranks:
+            self._excluded.discard(int(self._pool[rank].id))
+            self.detector.register(rank)
+        alive = self._alive_pool()
+        if n is None:
+            n = min(old_n, len(alive))
+        n = int(n)
+        if not 1 <= n <= len(alive):
+            self.state = "serving"
+            raise ValueError(
+                f"{self.flag}: cannot rescale to {n} consumers — "
+                f"{len(alive)} of {len(self._pool)} pool devices alive")
+        self.state = "rebuilding"
+        _, new_mesh = self._make_transit_meshes(
+            self._m, n, exclude_ids=sorted(self._excluded),
+            producer_axes=self._producer_axes,
+            consumer_axes=self._consumer_axes)
+        engine_info = None
+        if self._engine is not None:
+            engine_info = self._engine.rescale_mesh(new_mesh, drain=drain)
+        # drop plans pinned to BOTH meshes: the old one is retired, and
+        # the new one must bring up fresh (miss -> wisdom read-through),
+        # even when its topology matches an earlier generation's
+        evicted = plan_cache_evict(old_mesh) + plan_cache_evict(new_mesh)
+        self._bridge = TransitBridge(self.producer_mesh, new_mesh)
+        self._n = n
+        self.generation += 1
+        self.state = "serving"
+        self._stats0 = plan_cache_stats()
+        event = {
+            "event": "rescale", "generation": self.generation,
+            "reason": reason, "drain": bool(drain),
+            "from_devices": old_n, "to_devices": n,
+            "excluded_ids": sorted(self._excluded),
+            "consumer_span": mesh_process_span(new_mesh),
+            "plans_evicted": evicted, "engine": engine_info,
+            "wall_s": round(time.perf_counter() - t0, 6),
+        }
+        self.events.append(event)
+        return event
+
+    # -- serving plumbing ------------------------------------------------------
+    def attach_engine(self, engine) -> Any:
+        """Adopt a serving engine: from now on every rescale drains or
+        fail-contains it and swaps its mesh. The engine should already
+        target :attr:`consumer_mesh` (pass ``mesh=ctl.consumer_mesh``
+        at construction)."""
+        self._engine = engine
+        return engine
+
+    def plan(self, shape, direction: str = FORWARD, **kwargs):
+        """Plan on the CURRENT consumer mesh with the controller's
+        ``plan_kwargs`` defaults — consumer-participant code's
+        generation-safe planning entry."""
+        merged = dict(self.plan_kwargs)
+        merged.update(kwargs)
+        return plan_dft(shape, direction, self.consumer_mesh, **merged)
+
+    def plan_stats(self) -> Dict[str, int]:
+        """Planner counter deltas since this generation's bring-up —
+        the warm-rescale acceptance surface (``wisdom_hits > 0`` and
+        ``sweep_candidates_timed == 0`` after a grow with recorded
+        wisdom)."""
+        now = plan_cache_stats()
+        return {k: now.get(k, 0) - self._stats0.get(k, 0)
+                for k in _GEN_STAT_KEYS}
+
+    # -- TransitBridge duck-type: sends route to the newest bridge -------------
+    def send(self, data):
+        return self._bridge.send(data)
+
+    def is_producer(self) -> bool:
+        return self._bridge.is_producer()
+
+    def is_consumer(self) -> bool:
+        return self._bridge.is_consumer()
+
+    def reset_stats(self) -> None:
+        self._bridge.reset_stats()
+
+    # -- introspection ---------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        """Controller + detector + current-bridge view, JSON-ready."""
+        return {
+            "state": self.state,
+            "generation": self.generation,
+            "producer_devices": self._m,
+            "consumer_devices": self._n,
+            "pool": {str(r): v for r, v in self.consumer_ranks().items()},
+            "plan_stats": self.plan_stats(),
+            "detector": self.detector.report(),
+            "events": list(self.events),
+            "bridge": self._bridge.report(),
+        }

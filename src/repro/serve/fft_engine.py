@@ -82,6 +82,14 @@ class AdmissionFull(RuntimeError):
     blocking wait timed out) — shed load upstream."""
 
 
+class MeshRescaled(RuntimeError):
+    """The engine's mesh was swapped out from under this request
+    (``rescale_mesh(..., drain=False)``): it was admitted against a
+    consumer mesh that no longer exists and was never launched.
+    Resubmit — the retry routes to the rebuilt mesh. Failure is
+    per-request (contained), never engine-wide."""
+
+
 class FFTFuture:
     """Per-request completion handle (one per ``submit``)."""
 
@@ -254,7 +262,7 @@ class FFTServeEngine:
                        "rejected": 0, "executes": 0, "batched_rows": 0,
                        "padded_rows": 0, "single_retries": 0,
                        "completion_resets": 0, "backpressure_s": 0.0,
-                       "queue_depth_max": 0}
+                       "queue_depth_max": 0, "rescales": 0}
         self._resolved = 0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -572,6 +580,61 @@ class FFTServeEngine:
             self._thread = None
         self._completion.close()
 
+    # -- elastic rescale --------------------------------------------------------
+    def rescale_mesh(self, new_mesh, *, drain: bool = True,
+                     timeout: float = 300.0) -> Dict[str, Any]:
+        """Swap the engine onto ``new_mesh`` — the serving half of an
+        elastic rescale (``runtime/elastic.py`` calls this; semantics:
+        ``docs/elastic.md``).
+
+        ``drain=True`` (graceful): every admitted request completes on
+        the old mesh first, then the swap. ``drain=False`` (the old
+        mesh is unusable — a consumer died): un-launched pending
+        requests fail immediately with :class:`MeshRescaled`, each on
+        its own future (contained, exactly like a poisoned payload);
+        in-flight batches are failed through the completion-reset path.
+        Either way every bucket's compiled-plan ``state`` is dropped —
+        plans pin shardings and programs of the old mesh — so the next
+        request per bucket re-plans on ``new_mesh``, warm-starting from
+        wisdom when configured. Submissions after return route to the
+        new mesh. Returns ``{"drained", "failed_pending",
+        "buckets_reset"}``."""
+        failed = 0
+        if drain:
+            self.drain(timeout=timeout)
+        else:
+            with self._cond:
+                doomed = [(b, r) for b in self._buckets.values()
+                          for r in b.pending]
+                for b in self._buckets.values():
+                    b.pending.clear()
+                self._unlaunched -= len(doomed)
+                self._cond.notify_all()       # free admission waiters
+            err = MeshRescaled(
+                "engine mesh rescaled before this request launched — "
+                "resubmit to run on the rebuilt mesh")
+            for b, req in doomed:
+                self._finish(b, req, error=err)
+            failed = len(doomed)
+            with self._cond:
+                stranded = any(not r.future.done()
+                               for reqs in self._inflight.values()
+                               for r in reqs)
+            if stranded:
+                self._recover_completion(MeshRescaled(
+                    "engine mesh rescaled mid-batch — request failed "
+                    "contained; resubmit to run on the rebuilt mesh"))
+            else:
+                self._completion.drain(raise_error=False)
+        with self._cond:
+            reset = sum(1 for b in self._buckets.values() if b.state)
+            for b in self._buckets.values():
+                b.state.clear()
+            self._mesh = new_mesh
+            self._stats["rescales"] += 1
+        return {"drained": bool(drain), "failed_pending": failed,
+                "buckets_reset": reset}
+
     def __enter__(self) -> "FFTServeEngine":
         return self.start()
 
@@ -829,6 +892,7 @@ class FFTServeEngine:
                       "backpressure_s": round(stats["backpressure_s"], 6),
                       "completion": self._completion.report(),
                       "completion_resets": stats["completion_resets"]},
+            "rescales": stats["rescales"],
             "plan_cache": plan_delta,
             "buckets": buckets,
         }

@@ -1,0 +1,672 @@
+"""Elastic consumer-mesh rescaling: the fault-injection chaos harness.
+
+Unit level: the ``FailureDetector`` lease protocol under a fake clock,
+``FaultSchedule``/``InjectedFault`` determinism (kill-at-step edges,
+heartbeat-drop windows, slow-rank factors), the ``StragglerMonitor``
+stale-EMA-after-restart regression + percentile rank report, wisdom
+``topology_fingerprint`` properties (device-id-free canonicalization),
+the transit span guards, and ``FFTServeEngine.rescale_mesh``
+containment semantics.
+
+Scenario level: a subprocess with 8 placeholder devices drives an
+``ElasticController`` through the full chaos cycle — cold measured
+bring-up, injected heartbeat drop, failure-driven shrink with
+per-request ``MeshRescaled`` containment in the attached engine, and a
+grow whose planning must warm-start purely from wisdom with
+bit-identical FFT output. The REAL 2-process cluster exercise rides
+``tools/launch_multihost.py --demo elastic`` (SKIP on rc 99, like
+every multi-process test in this suite).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import types
+from pathlib import Path
+from unittest import mock
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compat import make_mesh
+from repro.core.fft import wisdom
+from repro.runtime.fault import (FAULT_MODES, HEARTBEAT_DROP, KILL_AT_STEP,
+                                 SLOW_RANK, FailureDetector, FaultSchedule,
+                                 InjectedFailure, InjectedFault,
+                                 StragglerMonitor)
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+LAUNCHER = str(ROOT / "tools" / "launch_multihost.py")
+
+
+class FakeClock:
+    """Settable clock for deterministic lease tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# FailureDetector: the lease protocol
+# ---------------------------------------------------------------------------
+
+def test_detector_lease_protocol():
+    clk = FakeClock()
+    det = FailureDetector(lease=1.0, max_misses=3, clock=clk)
+    det.register(0)
+    det.register(1)
+    clk.t = 2.5
+    det.heartbeat(0)                      # rank 0 renews; rank 1 silent
+    v = det.poll()
+    assert v["new_dead"] == []
+    assert v["missed"] == {0: 0, 1: 2}
+    clk.t = 3.2                           # rank 1's lease is 3 periods old
+    v = det.poll()
+    assert v["new_dead"] == [1]
+    assert det.dead_ranks() == [1] and det.alive_ranks() == [0]
+    assert {"event": "dead", "rank": 1,
+            "reason": "missed 3 heartbeats"} in det.events
+    # the transition fires exactly once
+    assert det.poll()["new_dead"] == []
+
+
+def test_detector_dead_heartbeat_ignored_until_rejoin():
+    clk = FakeClock()
+    det = FailureDetector(lease=1.0, max_misses=2, clock=clk)
+    det.register(3)
+    clk.t = 5.0
+    assert det.poll()["new_dead"] == [3]
+    det.heartbeat(3)                      # late heartbeat from a ghost
+    assert det.dead_ranks() == [3]        # lease stays revoked
+    det.register(3)                       # explicit rejoin
+    assert det.dead_ranks() == []
+    assert {"event": "rejoin", "rank": 3} in det.events
+    det.heartbeat(3)                      # lease is live again
+    assert det.poll()["new_dead"] == []
+
+
+def test_detector_guards():
+    det = FailureDetector(lease=1.0, max_misses=1, clock=FakeClock())
+    with pytest.raises(KeyError):
+        det.heartbeat(7)                  # never registered
+    with pytest.raises(ValueError):
+        FailureDetector(lease=0.0)
+    with pytest.raises(ValueError):
+        FailureDetector(max_misses=0)
+
+
+def test_detector_deregister_is_graceful():
+    clk = FakeClock()
+    det = FailureDetector(lease=1.0, max_misses=1, clock=clk)
+    det.register(0)
+    det.deregister(0)
+    clk.t = 100.0
+    v = det.poll()
+    assert v["new_dead"] == [] and det.events == []
+
+
+def test_detector_declare_dead_out_of_band():
+    det = FailureDetector(clock=FakeClock())
+    det.register(0)
+    det.declare_dead(0, "operator drain")
+    assert det.dead_ranks() == [0]
+    det.declare_dead(0, "again")          # idempotent, one event
+    assert sum(e["event"] == "dead" for e in det.events) == 1
+
+
+def test_detector_straggler_eviction_needs_consecutive_streak():
+    det = FailureDetector(clock=FakeClock())
+    det.register(0)
+    det.register(1)
+    slow = {"slow_ranks": [1]}
+    assert det.consume_straggler_report(slow) == []
+    assert det.suspect_ranks() == [1]
+    # a clean report breaks the streak — one slow percentile is noise
+    assert det.consume_straggler_report({"slow_ranks": []}) == []
+    assert det.suspect_ranks() == []
+    assert det.consume_straggler_report(slow) == []
+    assert det.consume_straggler_report(slow) == []
+    assert det.consume_straggler_report(slow) == [1]    # 3rd consecutive
+    assert det.dead_ranks() == [1]
+    # dead ranks never re-evict
+    assert det.consume_straggler_report(slow) == []
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule / InjectedFault: deterministic chaos
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        FaultSchedule([InjectedFault(mode="meteor", step=0)])
+    assert set(FAULT_MODES) == {KILL_AT_STEP, HEARTBEAT_DROP, SLOW_RANK}
+
+
+def test_fault_kill_is_an_edge_not_a_level():
+    sched = FaultSchedule([InjectedFault(mode=KILL_AT_STEP, step=5,
+                                         rank=2)])
+    sched.check_kill(4, rank=2)           # before: nothing
+    sched.check_kill(5, rank=0)           # wrong rank: nothing
+    with pytest.raises(InjectedFailure) as ei:
+        sched.check_kill(5, rank=2)
+    assert (ei.value.mode, ei.value.step, ei.value.rank) \
+        == (KILL_AT_STEP, 5, 2)
+    # a restart replays step 5 without re-dying — kills are edges
+    sched.check_kill(6, rank=2)
+
+
+def test_fault_heartbeat_drop_window_and_slow_factor():
+    sched = FaultSchedule([
+        InjectedFault(mode=HEARTBEAT_DROP, step=3, rank=1, duration=2),
+        InjectedFault(mode=SLOW_RANK, step=0, rank=0, slow_factor=4.0),
+        InjectedFault(mode=SLOW_RANK, step=0, rank=0, slow_factor=2.0),
+    ])
+    assert not sched.drops_heartbeat(2, 1)
+    assert sched.drops_heartbeat(3, 1) and sched.drops_heartbeat(4, 1)
+    assert not sched.drops_heartbeat(5, 1)      # duration expired
+    assert not sched.drops_heartbeat(3, 0)      # other rank untouched
+    assert sched.slow_factor(1, 0) == 4.0       # max over active faults
+    assert sched.slow_factor(1, 1) == 1.0
+    assert {f.mode for f in sched.active(3)} \
+        == {HEARTBEAT_DROP, SLOW_RANK}
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor: reset regression + percentile rank report
+# ---------------------------------------------------------------------------
+
+def test_straggler_reset_reseeds_ema_after_restart():
+    """Regression: restarting with the pre-failure EMA judged the
+    (always slow) restore+recompile step against a trajectory that no
+    longer exists. ``reset()`` must re-seed instead."""
+    mon = StragglerMonitor(alpha=0.3, threshold=3.0)
+    for s in range(20):
+        mon.observe(s, 0.1)
+    # the stale-EMA behavior reset() exists to avoid:
+    assert mon.observe(20, 5.0) is True
+    mon.reset()
+    assert mon.ema is None and mon.dev == 0.0
+    assert mon.observe(21, 5.0) is False        # re-seeds, no verdict
+    assert mon.observe(22, 5.2) is False        # judged vs the NEW base
+    assert mon.report()["resets"] == 1
+    # the slow-step log is history, not estimate — it survives
+    assert any(e["step"] == 20 for e in mon.slow_steps)
+
+
+def test_straggler_rank_report_percentiles():
+    mon = StragglerMonitor()
+    for s in range(10):
+        for r in range(4):
+            mon.observe(s, 0.1 * (10.0 if r == 3 else 1.0), rank=r)
+    rep = mon.rank_report(percentile=90.0, slow_factor=2.0)
+    assert rep["slow_ranks"] == [3]
+    assert rep["baseline_s"] == pytest.approx(0.1)
+    assert set(rep["ranks"]) == {0, 1, 2, 3}
+    assert rep["ranks"][3] == pytest.approx(1.0)
+    empty = StragglerMonitor().rank_report()
+    assert empty["slow_ranks"] == [] and empty["baseline_s"] is None
+
+
+def test_straggler_rank_window_trims():
+    mon = StragglerMonitor(window=8)
+    for s in range(50):
+        mon.observe(s, float(s), rank=0)
+    assert mon.rank_times[0] == [float(s) for s in range(42, 50)]
+    mon.reset()
+    assert mon.rank_times == {}
+
+
+def test_straggler_report_feeds_detector_eviction():
+    mon = StragglerMonitor()
+    det = FailureDetector(clock=FakeClock())
+    for r in range(3):
+        det.register(r)
+    evicted = []
+    for s in range(4):
+        for r in range(3):
+            mon.observe(s, 0.05 * (20.0 if r == 2 else 1.0), rank=r)
+        evicted += det.consume_straggler_report(mon.rank_report())
+    assert evicted == [2]
+    assert det.dead_ranks() == [2]
+    assert any("straggler" in e["reason"] for e in det.events)
+
+
+def test_run_with_restarts_resets_straggler(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.runtime.fault import run_with_restarts
+
+    _, report = run_with_restarts(
+        make_state=lambda: {"x": jnp.zeros(())},
+        train_step=lambda state, batch: ({"x": state["x"] + batch}, {}),
+        batch_fn=lambda step: jnp.asarray(1.0),
+        total_steps=8, ckpt_dir=str(tmp_path), ckpt_every=2,
+        fail_at=[5])
+    assert report["restarts"] == 1
+    # the except-branch reset: the post-restore step re-seeds the EMA
+    assert report["straggler"]["resets"] == 1
+
+
+# ---------------------------------------------------------------------------
+# wisdom.topology_fingerprint: device-id-free canonicalization
+# ---------------------------------------------------------------------------
+
+class _Dev:
+    def __init__(self, did: int, process_index: int,
+                 platform: str = "cpu"):
+        self.id = did
+        self.process_index = process_index
+        self.platform = platform
+
+
+def _mesh_of(devs, shape, axes):
+    arr = np.empty(len(devs), dtype=object)
+    arr[:] = devs
+    m = types.SimpleNamespace()
+    m.devices = arr.reshape(shape)
+    m.axis_names = tuple(axes)
+    m.shape = dict(zip(axes, shape))
+    return m
+
+
+@settings(max_examples=15)
+@given(nproc=st.integers(min_value=1, max_value=4),
+       dpp=st.integers(min_value=1, max_value=4),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_fingerprint_stable_under_intra_process_reorder(nproc, dpp, seed):
+    """Rescales rebuild meshes from surviving devices in arbitrary id
+    order; wisdom must keep matching as long as the per-process shape
+    is unchanged — the warm-grow contract."""
+    base = [_Dev(p * 100 + i, p) for p in range(nproc)
+            for i in range(dpp)]
+    rng = np.random.default_rng(seed)
+    shuffled = []
+    for p in range(nproc):
+        blk = base[p * dpp:(p + 1) * dpp]
+        shuffled += [blk[j] for j in rng.permutation(dpp)]
+    m1 = _mesh_of(base, (nproc * dpp,), ("data",))
+    m2 = _mesh_of(shuffled, (nproc * dpp,), ("data",))
+    with mock.patch.object(jax, "process_count", lambda: nproc):
+        assert wisdom.topology_fingerprint(m1) \
+            == wisdom.topology_fingerprint(m2)
+        assert wisdom.wisdom_key("tune", m1, shape=(8, 8)) \
+            == wisdom.wisdom_key("tune", m2, shape=(8, 8))
+
+
+@settings(max_examples=10)
+@given(dpp=st.sampled_from([2, 4]))
+def test_fingerprint_distinct_across_process_count(dpp):
+    total = 2 * dpp
+    one = [_Dev(i, 0) for i in range(total)]
+    two = [_Dev(i, i // dpp) for i in range(total)]
+    m1 = _mesh_of(one, (total,), ("data",))
+    m2 = _mesh_of(two, (total,), ("data",))
+    with mock.patch.object(jax, "process_count", lambda: 1):
+        f1 = wisdom.topology_fingerprint(m1)
+    with mock.patch.object(jax, "process_count", lambda: 2):
+        f2 = wisdom.topology_fingerprint(m2)
+    assert f1 != f2
+
+
+def test_fingerprint_distinct_across_host_crossing():
+    """Same devices, same mesh shape, same per-process counts — but
+    which AXIS crosses hosts differs, and schedules tuned for an
+    ICI-only axis must not be replayed onto a DCN-crossing one."""
+    a = _mesh_of([_Dev(0, 0), _Dev(1, 0), _Dev(2, 1), _Dev(3, 1)],
+                 (2, 2), ("a", "b"))       # axis "a" crosses
+    b = _mesh_of([_Dev(0, 0), _Dev(2, 1), _Dev(1, 0), _Dev(3, 1)],
+                 (2, 2), ("a", "b"))       # axis "b" crosses
+    with mock.patch.object(jax, "process_count", lambda: 2):
+        fa = wisdom.topology_fingerprint(a)
+        fb = wisdom.topology_fingerprint(b)
+    assert fa["devices_per_process"] == fb["devices_per_process"]
+    assert fa != fb
+    assert fa["axis_crosses_hosts"] != fb["axis_crosses_hosts"]
+
+
+# ---------------------------------------------------------------------------
+# transit / elastic bring-up guards (subset-collectives discipline)
+# ---------------------------------------------------------------------------
+
+def test_make_transit_setup_rejects_consumer_only_split():
+    from repro.launch.mesh import make_transit_setup
+
+    with pytest.raises(SystemExit) as ei:
+        make_transit_setup(len(jax.devices()))
+    assert "--transit-consumers" in str(ei.value)
+
+
+def test_make_elastic_setup_rejects_consumer_only_split():
+    from repro.launch.mesh import make_elastic_setup
+
+    with pytest.raises(SystemExit) as ei:
+        make_elastic_setup(len(jax.devices()), noun="decode")
+    assert "--elastic" in str(ei.value) and "decode" in str(ei.value)
+
+
+def test_elastic_controller_validates_pool_size():
+    from repro.runtime.elastic import ElasticController
+
+    with pytest.raises(ValueError) as ei:
+        ElasticController(0)
+    assert "n_consumers" in str(ei.value)
+
+
+def test_require_producer_spans_cluster(monkeypatch):
+    from repro.core.insitu import transit
+
+    mesh = make_mesh((len(jax.devices()),), ("data",))
+    transit.require_producer_spans_cluster(mesh)   # 1 process: passes
+    monkeypatch.setattr(jax, "process_count", lambda: 2)
+    with pytest.raises(ValueError) as ei:
+        transit.require_producer_spans_cluster(mesh, "--my-flag")
+    msg = str(ei.value)
+    assert "--my-flag" in msg and "subset collectives" in msg
+
+
+def test_subset_span_pins_untimed_default(monkeypatch):
+    """A mesh spanning a strict subset of >1 processes must never even
+    START a measured sweep (timing a candidate IS the subset-collectives
+    hang) — the planner pins the untimed default before consulting
+    wisdom or timing anything."""
+    from repro.core.fft import plan as plan_mod
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    monkeypatch.setattr(plan_mod, "_process_span", lambda m: {0, 1})
+    monkeypatch.setattr(jax, "process_count", lambda: 3)
+    s0 = plan_mod.plan_cache_stats()
+    p = plan_mod.plan_dft((18, 10), plan_mod.FORWARD, mesh,
+                          decomp="slab", backend="measure")
+    s1 = plan_mod.plan_cache_stats()
+    assert p.backend == "auto"
+    assert p.overlap_chunks == 0 and p.wire_dtype is None
+    for k in ("sweep_candidates_timed", "wisdom_hits", "wisdom_misses"):
+        assert s1[k] == s0[k], (k, s0[k], s1[k])
+
+
+# ---------------------------------------------------------------------------
+# FFTServeEngine.rescale_mesh: drain vs fail-contained
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_engine_rescale_drain_completes_then_swaps(mesh):
+    from repro.serve.fft_engine import FFTServeEngine
+
+    eng = FFTServeEngine(mesh, max_batch=4, linger_s=10.0)
+    rng = np.random.default_rng(2)
+    fields = [(rng.standard_normal((16, 8))
+               + 1j * rng.standard_normal((16, 8))).astype(np.complex64)
+              for _ in range(3)]
+    futs = [eng.submit(f) for f in fields]
+    new_mesh = make_mesh((1, 1), ("data", "model"))
+    info = eng.rescale_mesh(new_mesh, drain=True)
+    assert info == {"drained": True, "failed_pending": 0,
+                    "buckets_reset": 1}
+    pre = [np.asarray(f.result(timeout=30)) for f in futs]
+    for f, got in zip(fields, pre):
+        np.testing.assert_allclose(got, np.fft.fftn(f),
+                                   rtol=2e-4, atol=2e-3)
+    assert eng.mesh is new_mesh
+    # same request class, same batch shape, rebuilt plans on the new
+    # mesh: the results must be bit-identical — rescale is transparent
+    futs2 = [eng.submit(f) for f in fields]
+    eng.step(force=True)
+    eng.drain(timeout=60.0)
+    for got, f2 in zip(pre, futs2):
+        assert np.array_equal(got, np.asarray(f2.result(timeout=30)))
+    assert eng.report()["rescales"] == 1
+    eng.stop()
+
+
+def test_engine_rescale_failfast_contains_pending(mesh):
+    from repro.serve.fft_engine import FFTServeEngine, MeshRescaled
+
+    eng = FFTServeEngine(mesh, max_batch=8, linger_s=10.0)
+    rng = np.random.default_rng(3)
+    f = (rng.standard_normal((8, 8))
+         + 1j * rng.standard_normal((8, 8))).astype(np.complex64)
+    doomed = [eng.submit(f) for _ in range(3)]
+    info = eng.rescale_mesh(make_mesh((1, 1), ("data", "model")),
+                            drain=False)
+    assert info["failed_pending"] == 3 and not info["drained"]
+    for fut in doomed:
+        with pytest.raises(MeshRescaled, match="resubmit"):
+            fut.result(timeout=5)
+    st_now = eng.stats()
+    assert st_now["failed"] == 3 and st_now["unlaunched"] == 0
+    # the failure is per-request: a resubmit lands on the new mesh
+    fut = eng.submit(f)
+    eng.step(force=True)
+    eng.drain(timeout=60.0)
+    np.testing.assert_allclose(fut.result(timeout=30), np.fft.fftn(f),
+                               rtol=2e-4, atol=2e-3)
+    rep = eng.report()
+    assert rep["rescales"] == 1
+    assert rep["requests"]["completed"] == 1
+    eng.stop()
+
+
+def test_engine_mid_batch_death_contained(mesh):
+    """A batch whose executor dies mid-flight (injected consumer
+    death) is retried request-by-request: batch-mates complete, only a
+    genuinely poisoned payload fails — and only its own future."""
+    from repro.serve.fft_engine import FFTServeEngine
+
+    calls = {"batched": 0}
+
+    def flaky(payloads, step):
+        if len(payloads) > 1:
+            calls["batched"] += 1
+            raise InjectedFailure("consumer died mid-batch",
+                                  mode=KILL_AT_STEP, step=step)
+        if payloads[0] == "poison":
+            raise ValueError("poisoned payload")
+        return [f"ok:{p}" for p in payloads]
+
+    eng = FFTServeEngine(mesh, max_batch=8, linger_s=10.0)
+    eng.register_bucket("chaos", flaky)
+    futs = [eng.submit(p, bucket="chaos") for p in ("a", "poison", "b")]
+    eng.step(force=True)
+    eng.drain(timeout=60.0)
+    assert calls["batched"] == 1
+    assert futs[0].result(timeout=5) == "ok:a"
+    assert futs[2].result(timeout=5) == "ok:b"
+    with pytest.raises(ValueError, match="poisoned"):
+        futs[1].result(timeout=5)
+    st_now = eng.stats()
+    assert st_now["single_retries"] == 3
+    assert st_now["completed"] == 2 and st_now["failed"] == 1
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# The full chaos scenario: controller + engine, 8 devices, one process
+# ---------------------------------------------------------------------------
+
+ELASTIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.pop("REPRO_WISDOM_FILE", None)
+    import json, tempfile
+    import numpy as np, jax
+    from repro.core.fft import plan as plan_mod
+    from repro.launch.mesh import make_elastic_setup
+    from repro.runtime.fault import (HEARTBEAT_DROP, SLOW_RANK,
+                                     FaultSchedule, InjectedFault,
+                                     StragglerMonitor)
+    from repro.serve.fft_engine import FFTServeEngine
+
+    out = {}
+    wfile = os.path.join(tempfile.mkdtemp(prefix="repro_elastic_"),
+                         "wisdom.json")
+    plan_mod.set_wisdom(wfile, "readwrite")
+
+    step_box = [0]
+    pm, ctl = make_elastic_setup(
+        2, lease=1.0, max_misses=2, clock=lambda: float(step_box[0]),
+        plan_kwargs={"decomp": "slab", "backend": "measure",
+                     "allow_reduced_wire": False})
+    out["producer_devices"] = int(pm.devices.size)
+    out["pool"] = {str(r): v["device_id"]
+                   for r, v in ctl.consumer_ranks().items()}
+
+    rng = np.random.default_rng(3)
+    field = rng.standard_normal((16, 24)).astype(np.float32)
+    ref = np.fft.fftn(field)
+
+    def run_fft():
+        return np.asarray(ctl.plan(field.shape).execute_complex(field))
+
+    # generation 0: cold measured bring-up, winners persist to wisdom
+    out0 = run_fft()
+    s = ctl.plan_stats()
+    out["cold_timed"] = s["sweep_candidates_timed"]
+    out["cold_wisdom_hits"] = s["wisdom_hits"]
+    out["cold_err"] = float(np.max(np.abs(out0 - ref))
+                            / np.max(np.abs(ref)))
+
+    # a serving engine rides the consumer mesh; requests stay pending
+    eng = FFTServeEngine(ctl.consumer_mesh, max_batch=4, linger_s=10.0,
+                         plan_kwargs={"decomp": "slab"})
+    ctl.attach_engine(eng)
+    pend = [eng.submit((field + i).astype(np.complex64))
+            for i in range(3)]
+
+    # chaos: rank 0 heartbeat-drops from step 2; rank 1 is briefly slow
+    # (mild enough that the percentile report must NOT evict it)
+    sched = FaultSchedule([
+        InjectedFault(mode=HEARTBEAT_DROP, step=2, rank=0),
+        InjectedFault(mode=SLOW_RANK, step=1, rank=1, duration=2,
+                      slow_factor=1.5)])
+    mon = StragglerMonitor()
+    ev = None
+    for step in range(1, 8):
+        step_box[0] = step
+        for r in ctl.active_ranks():
+            mon.observe(step, 0.1 * sched.slow_factor(step, r), rank=r)
+        ctl.heartbeat_all(drop=[r for r in ctl.active_ranks()
+                                if sched.drops_heartbeat(step, r)])
+        ev = ctl.tick(straggler_report=mon.rank_report())
+        if ev is not None:
+            break
+    out["detected_at_step"] = step_box[0]
+    out["shrink"] = None if ev is None else {
+        "generation": ev["generation"], "to_devices": ev["to_devices"],
+        "drain": ev["drain"], "plans_evicted": ev["plans_evicted"],
+        "engine": ev["engine"], "reason": ev["reason"]}
+    out["rank1_alive"] = 1 in ctl.detector.alive_ranks()
+    out["pending_errors"] = sorted({type(f.exception(5)).__name__
+                                    for f in pend})
+    out["straggler_resets"] = mon.resets
+
+    # containment is per-request: a resubmit runs on the rebuilt mesh
+    f2 = eng.submit(field.astype(np.complex64))
+    eng.step(force=True)
+    eng.drain(timeout=120.0)
+    out["resubmit_err"] = float(
+        np.max(np.abs(np.asarray(f2.result(timeout=30)) - ref))
+        / np.max(np.abs(ref)))
+    out["engine_rescales"] = eng.report()["rescales"]
+
+    out1 = run_fft()                 # shrunken-mesh plan still correct
+    out["shrunk_err"] = float(np.max(np.abs(out1 - ref))
+                              / np.max(np.abs(ref)))
+
+    # grow back: same topology as generation 0 => wisdom-pure planning
+    ev2 = ctl.rescale(n=2, rejoin_ranks=[0], drain=True,
+                      reason="capacity rejoined")
+    out2 = run_fft()
+    s = ctl.plan_stats()
+    out["warm_timed"] = s["sweep_candidates_timed"]
+    out["warm_wisdom_hits"] = s["wisdom_hits"]
+    out["grow_generation"] = ev2["generation"]
+    out["bit_identical"] = bool(np.array_equal(out0, out2))
+    rep = ctl.report()
+    out["state"] = rep["state"]
+    out["n_events"] = len(rep["events"])
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def chaos_out():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_chaos_cold_bringup_measures_and_is_correct(chaos_out):
+    assert chaos_out["producer_devices"] == 6
+    assert len(chaos_out["pool"]) == 2
+    assert chaos_out["cold_timed"] > 0
+    assert chaos_out["cold_wisdom_hits"] == 0
+    assert chaos_out["cold_err"] < 1e-4
+
+
+def test_chaos_heartbeat_drop_triggers_contained_shrink(chaos_out):
+    ev = chaos_out["shrink"]
+    assert ev is not None, "injected heartbeat drop never detected"
+    # drop at step 2, lease=1, max_misses=2 => dead at step 3, exactly
+    assert chaos_out["detected_at_step"] == 3
+    assert ev["generation"] == 1 and ev["to_devices"] == 1
+    assert ev["drain"] is False          # failure path never drains
+    assert "rank(s) [0]" in ev["reason"]
+    assert ev["plans_evicted"] > 0
+    # the attached engine fail-contained its pending requests...
+    assert ev["engine"]["failed_pending"] == 3
+    assert chaos_out["pending_errors"] == ["MeshRescaled"]
+    # ...and kept serving: the resubmit completed on the rebuilt mesh
+    assert chaos_out["resubmit_err"] < 1e-4
+    assert chaos_out["engine_rescales"] == 1
+    assert chaos_out["shrunk_err"] < 1e-4
+    # the mildly slow rank was noise, not a failure
+    assert chaos_out["rank1_alive"] is True
+
+
+def test_chaos_grow_warm_starts_from_wisdom_bit_identical(chaos_out):
+    assert chaos_out["grow_generation"] == 2
+    assert chaos_out["warm_wisdom_hits"] > 0
+    assert chaos_out["warm_timed"] == 0
+    assert chaos_out["bit_identical"] is True
+    assert chaos_out["state"] == "serving"
+    assert chaos_out["n_events"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Real 2-process cluster: the launcher's elastic demo (SKIP on rc 99)
+# ---------------------------------------------------------------------------
+
+def test_two_process_elastic_rescale():
+    """2-process cluster: injected consumer death is detected by the
+    FailureDetector, the consumer mesh rescales 2→1 and back 1→2
+    without restarting any process, the grown mesh plans purely from
+    wisdom, and its FFT output is bit-identical to generation 0's."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, LAUNCHER, "--nprocs", "2",
+         "--devices-per-proc", "2", "--timeout", "420",
+         "--demo", "elastic"],
+        env=env, capture_output=True, text=True, timeout=600)
+    if res.returncode == 99:
+        pytest.skip("multi-process CPU collectives unavailable here")
+    assert res.returncode == 0, res.stdout[-4000:] + res.stderr[-2000:]
+    assert "shrink 2->1" in res.stdout
+    assert "output bit-identical to gen0" in res.stdout
+    assert "elastic demo OK" in res.stdout
+    assert "BENCHROW,elastic_rescale_2x3," in res.stdout

@@ -10,6 +10,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 from pathlib import Path
 
 import numpy as np
@@ -108,6 +109,11 @@ def test_plan_cache_thread_race_compiles_once():
 
     def counting_compile(self):
         compiles.append(self)
+        # hold the build open long enough that the losing racer's
+        # lookup reliably lands while it is in flight — on a loaded
+        # machine the loser can otherwise be descheduled past the
+        # whole compile and take a plain hit (thread_waits == 0 flake)
+        time.sleep(0.25)
         return orig_compile(self)
 
     barrier = threading.Barrier(2)

@@ -36,6 +36,15 @@ Modes:
       must plan entirely from wisdom — ``wisdom_hits > 0`` and ZERO
       timed sweep candidates, asserted in-child — and the launcher
       asserts the warm bring-up is ≥5x faster than cold.
+    - ``elastic``: a real multi-process rescale-under-failure run
+      (``docs/elastic.md``): an ``ElasticController`` owns the
+      consumer side of an M→N transit split, a consumer rank's
+      heartbeats are dropped by a deterministic chaos schedule, the
+      ``FailureDetector`` declares it dead and the consumer mesh
+      shrinks 2→1 WITHOUT restarting any process, then grows back
+      1→2 — asserting the grown mesh plans purely from wisdom
+      (``wisdom_hits > 0``, zero timed sweeps) and its FFT output is
+      bit-identical to the pre-failure generation's.
 * ``-- CMD ...`` — run an arbitrary command per process under the
   cluster env (the command must call
   ``repro.runtime.cluster.init_cluster()`` early, as the launch
@@ -482,6 +491,138 @@ def _demo_solver() -> None:
     print("solver demo OK", flush=True)
 
 
+def _demo_elastic() -> None:
+    """Elastic consumer-mesh rescale under injected failure (the
+    parent's elastic phase boots this cluster with ≥3 devices per
+    process: the producer prefix must span EVERY process, and the
+    consumer pool must fit inside the last one so the consumer span
+    stays single-process — the only span where measured sweeps and
+    consumer-mesh collectives are legal; docs/elastic.md). Scenario:
+    cold-plan on the 2-device consumer mesh (measured winners persist
+    to the shared wisdom file), drop one consumer rank's heartbeats
+    via a deterministic chaos schedule, assert the detector-driven
+    shrink, grow back, and assert the warm-start contract —
+    ``wisdom_hits > 0`` with ZERO timed sweeps — plus bit-identical
+    FFT output vs the pre-failure generation and the numpy oracle."""
+    import numpy as np
+    import jax
+    from jax.experimental.multihost_utils import process_allgather
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.fft.plan import wisdom_store
+    from repro.core.insitu.bridge import BridgeData
+    from repro.runtime.elastic import ElasticController
+    from repro.runtime.fault import (HEARTBEAT_DROP, FaultSchedule,
+                                     InjectedFault)
+
+    nproc = jax.process_count()
+    dpp = len(jax.local_devices())
+    assert dpp >= 3, "elastic demo wants >=3 devices/process"
+    assert wisdom_store() is not None, \
+        "elastic demo needs REPRO_WISDOM_FILE in the child env"
+    pool = dpp - 1          # consumer pool = the last process's devices
+                            # minus one (it must keep a producer device)
+    step_box = [0]
+    ctl = ElasticController(
+        pool, lease=1.0, max_misses=2,
+        clock=lambda: float(step_box[0]),   # cross-process determinism
+        plan_kwargs={"decomp": "slab", "backend": "measure",
+                     "allow_reduced_wire": False})
+    print(f"elastic: producer={ctl.report()['producer_devices']}dev "
+          f"pool={ctl.consumer_ranks()}", flush=True)
+
+    rng = np.random.default_rng(11)
+    field = rng.standard_normal((16, 32)).astype(np.float32)
+    ref = np.fft.fftn(field)
+    # replicated producer sharding: the pool size varies with dpp and
+    # must not constrain the field's divisibility
+    psh = NamedSharding(ctl.producer_mesh, P())
+
+    def ship_and_fft():
+        """Collective producer→consumer hop, then (consumer process
+        only) a measured wisdom-backed plan + FFT checked against the
+        numpy oracle. Returns (spectrum | None, plan_wall_s)."""
+        px = (_make_global(field, psh) if ctl.is_producer()
+              else np.zeros_like(field))
+        out = ctl.send(BridgeData(arrays={"field": px},
+                                  step=step_box[0]))
+        if not ctl.is_consumer():
+            return None, 0.0
+        got = out.arrays["field"]
+        for s in got.addressable_shards:
+            if not np.array_equal(np.asarray(s.data), field[s.index]):
+                raise AssertionError("transit delivery not bit-identical")
+        t0 = time.perf_counter()
+        cplan = ctl.plan(field.shape)
+        wall = time.perf_counter() - t0
+        cm = ctl.consumer_mesh
+        zero = jax.device_put(
+            np.zeros_like(field),
+            NamedSharding(cm, P(*cplan.schedule().in_spec)))
+        moved = jax.device_put(got, cplan.input_sharding())
+        fr, fi = cplan.execute(moved, zero)
+        spec = np.asarray(fr) + 1j * np.asarray(fi)
+        err = float(np.max(np.abs(spec - ref)) / np.max(np.abs(ref)))
+        assert err < 1e-4, f"consumer FFT off the oracle: {err}"
+        return spec, wall
+
+    # generation 0: cold bring-up — the sweep runs and persists wisdom
+    out0, cold_wall = ship_and_fft()
+    if ctl.is_consumer():
+        s = ctl.plan_stats()
+        assert s["sweep_candidates_timed"] > 0, s
+        print(f"elastic[gen0]: cold plan {cold_wall:.2f}s stats={s}",
+              flush=True)
+
+    # chaos: rank 0 stops heartbeating at step 3; with the step clock,
+    # lease=1 and max_misses=2 the detector must see it by step 4
+    victim = ctl.active_ranks()[0]
+    sched = FaultSchedule([InjectedFault(mode=HEARTBEAT_DROP, step=3,
+                                         rank=victim)])
+    ev = None
+    for step in range(1, 10):
+        step_box[0] = step
+        ctl.heartbeat_all(drop=[r for r in ctl.active_ranks()
+                                if sched.drops_heartbeat(step, r)])
+        ev = ctl.tick()
+        if ev is not None:
+            break
+    assert ev is not None, "injected heartbeat drop never detected"
+    assert ev["to_devices"] == pool - 1 and not ev["drain"], ev
+    assert victim in ctl.detector.dead_ranks(), ctl.detector.report()
+    print(f"elastic[gen{ctl.generation}]: shrink {pool}->{pool - 1} "
+          f"({ev['reason']}) wall={ev['wall_s']}s", flush=True)
+    ship_and_fft()        # delivery + oracle hold on the shrunken mesh
+
+    # grow back: capacity rejoins; the rebuilt mesh matches generation
+    # 0's topology, so planning must warm-start purely from wisdom
+    t0 = time.perf_counter()
+    ev2 = ctl.rescale(n=pool, rejoin_ranks=[victim], drain=True,
+                      reason="capacity rejoined")
+    out2, warm_wall = ship_and_fft()
+    grow_wall = time.perf_counter() - t0
+    assert ev2["generation"] == ctl.generation == 2, ev2
+    if ctl.is_consumer():
+        s = ctl.plan_stats()
+        assert s["wisdom_hits"] > 0, f"grown mesh found no wisdom: {s}"
+        assert s["sweep_candidates_timed"] == 0, \
+            f"grown mesh still timed sweep candidates: {s}"
+        assert np.array_equal(out0, out2), \
+            "post-rescale FFT output not bit-identical to gen0"
+        print(f"elastic[gen2]: warm plan {warm_wall:.2f}s stats={s} "
+              f"output bit-identical to gen0", flush=True)
+
+    # fleet-level bench: restart-free rescale (drain + rebuild + warm
+    # replan) vs the cold bring-up it replaces. The walls live on the
+    # consumer process — allgather ships them to process 0's BENCHROW
+    mine = np.asarray([cold_wall, grow_wall], np.float32)
+    walls = np.asarray(process_allgather(mine)).reshape(nproc, -1).max(0)
+    _bench_row(f"elastic_rescale_{nproc}x{dpp}", float(walls[1]) * 1e6,
+               f"cold_us={float(walls[0]) * 1e6:.0f};pool={pool}"
+               f";generations={ctl.generation}")
+    print("elastic demo OK", flush=True)
+
+
 def _child_main(demo: str) -> int:
     try:
         from repro.runtime import cluster
@@ -508,6 +649,10 @@ def _child_main(demo: str) -> int:
         # warm — the parent's wisdom phase launches two dedicated
         # clusters instead (see _wisdom_phase)
         _demo_wisdom()
+    if demo == "elastic":
+        # also parent-phase-only: the split needs >=3 devices/process
+        # and a fresh wisdom file, which _elastic_phase provides
+        _demo_elastic()
     if jax.process_count() > 1:
         # leave together: demo work is asymmetric (producer processes
         # finish first) and a skewed exit trips the shutdown barrier
@@ -560,6 +705,41 @@ def _wisdom_phase(ns, rows: dict) -> int:
     return 0
 
 
+def _elastic_phase(ns, rows: dict) -> int:
+    """Failure-driven rescale demo: boot a dedicated cluster whose
+    per-process device count fits the elastic split — the producer
+    prefix must span every process AND leave a ≥2-device consumer
+    pool inside the last one, so the children need ≥3 devices per
+    process — against a fresh shared wisdom file. The children assert
+    detection, restart-free shrink, warm grow, and bit-identical
+    output (see ``_demo_elastic``); the launcher asserts the bench row
+    and OK marker made it out."""
+    dpp = max(3, ns.devices_per_proc)
+    cmd = [sys.executable, str(Path(__file__).resolve()), "--child",
+           "--demo", "elastic"]
+    with tempfile.TemporaryDirectory(prefix="repro_elastic_") as tmp:
+        rc, outs = launch(
+            ns.nprocs, dpp, cmd, timeout=ns.timeout, port=ns.port,
+            extra_env={"REPRO_WISDOM_FILE": os.path.join(tmp,
+                                                         "wisdom.json"),
+                       "REPRO_WISDOM_MODE": "readwrite"})
+    if rc != 0:
+        return rc
+    prows = _bench_rows(outs)
+    rows.update(prows)
+    key = f"elastic_rescale_{ns.nprocs}x{dpp}"
+    if key not in prows:
+        print(f"[launcher] FAIL: elastic demo emitted no {key} row")
+        return 1
+    if not any("elastic demo OK" in o for o in outs):
+        print("[launcher] FAIL: elastic demo missing its OK marker")
+        return 1
+    row = prows[key]
+    print(f"[launcher] elastic rescale: "
+          f"{row['us_per_call'] / 1e6:.2f}s ({row['derived']})")
+    return 0
+
+
 def main(argv=None) -> int:
     args = list(sys.argv[1:] if argv is None else argv)
     passthrough = None
@@ -575,7 +755,8 @@ def main(argv=None) -> int:
                     help="CPU placeholder devices per process "
                          "(XLA_FLAGS, set before the child imports jax)")
     ap.add_argument("--demo", default="all",
-                    choices=("fft", "transit", "solver", "wisdom", "all"))
+                    choices=("fft", "transit", "solver", "wisdom",
+                             "elastic", "all"))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="collect process 0's BENCHROW lines into a "
                          "BENCH-style JSON artifact")
@@ -589,7 +770,7 @@ def main(argv=None) -> int:
         return _child_main(ns.demo)
 
     rc, rows = 0, {}
-    if passthrough is not None or ns.demo != "wisdom":
+    if passthrough is not None or ns.demo not in ("wisdom", "elastic"):
         cmd = passthrough or [sys.executable,
                               str(Path(__file__).resolve()),
                               "--child", "--demo", ns.demo]
@@ -602,6 +783,11 @@ def main(argv=None) -> int:
             rows.update(_bench_rows(outs))
     if rc == 0 and passthrough is None and ns.demo in ("wisdom", "all"):
         rc = _wisdom_phase(ns, rows)
+        if rc == UNSUPPORTED_RC:
+            print("[launcher] multi-process unsupported here (rc 99)")
+            return rc
+    if rc == 0 and passthrough is None and ns.demo in ("elastic", "all"):
+        rc = _elastic_phase(ns, rows)
         if rc == UNSUPPORTED_RC:
             print("[launcher] multi-process unsupported here (rc 99)")
             return rc
