@@ -474,6 +474,166 @@ def bench_fft_r2c_schedules():
         f";hp={out['pencil_tf_hp']};half-width-exchanges")
 
 
+def bench_fft_wire():
+    """Compressed wire formats on the pencil exchange: exact f32 vs the
+    bf16 cast vs per-block scaled int8, one row per codec with the
+    bytes moved per exchange AND the measured max rel-err against the
+    exact-wire plan — the same numbers the measured sweep's error
+    budget gates on (``wire_tol``, docs/wire.md). The uniform ``int8``
+    codec rides the data exchange only (its single per-row scale cannot
+    split across the model axis), so its derived column says so."""
+    script = textwrap.dedent("""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core.fft import wire
+        from repro.core.fft.plan import plan_dft, FORWARD
+
+        def timeit(fn, *args, iters=10):
+            jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        out = {}
+        rng = np.random.default_rng(0)
+        mesh = make_mesh((4, 2), ("data", "model"))
+        G = (24, 16, 128)
+        x = rng.standard_normal(G).astype(np.float32)
+
+        p0 = plan_dft(G, FORWARD, mesh, decomp="pencil")
+        args0 = p0.place(x)
+        want = p0.execute(*args0)
+        ref = np.asarray(want[0]) + 1j * np.asarray(want[1])
+        norm = float(np.max(np.abs(ref)))
+        out["exact"] = {"us": timeit(p0.execute, *args0), "err": 0.0,
+                        "bytes": wire.exact_bytes(G, jnp.complex64),
+                        "stages": "2/2"}
+        for tag, wd, codec, stages in (
+            ("bf16", "bfloat16", "bf16", "2/2"),
+            ("int8", (None, "int8"), "int8", "1/2"),
+            ("int8_block64", "int8_block64", "int8_block64", "2/2"),
+        ):
+            p = plan_dft(G, FORWARD, mesh, decomp="pencil",
+                         wire_dtype=wd)
+            args = p.place(x)
+            got = p.execute(*args)
+            g = np.asarray(got[0]) + 1j * np.asarray(got[1])
+            out[tag] = {"us": timeit(p.execute, *args),
+                        "err": float(np.max(np.abs(g - ref)) / norm),
+                        "bytes": wire.get_codec(codec).wire_bytes(
+                            G, jnp.complex64),
+                        "stages": stages}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        print(res.stderr[-3000:], file=sys.stderr)
+        row("fft_wire_sweep", -1, "ERROR")
+        return
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    base = out["exact"]
+    row("fft_wire_exact_pencil_4x2", base["us"],
+        f"N=24x16x128;wire_MB={base['bytes']/1e6:.2f};baseline")
+    for tag in ("bf16", "int8", "int8_block64"):
+        o = out[tag]
+        row(f"fft_wire_{tag}_pencil_4x2", o["us"],
+            f"vs_exact={base['us']/o['us']:.2f}x"
+            f";bytes_win={base['bytes']/o['bytes']:.2f}x"
+            f";maxrel={o['err']:.1e};stages={o['stages']}")
+
+
+def bench_transit_async():
+    """Producer-side cost of the M->N transit hop: blocking ``send``
+    (the producer stalls through the gather AND the consumer-side
+    analysis) vs ``send_async`` (snapshot + enqueue; the hop and the
+    analysis run on the pipeline executor). Both walls are the
+    producer's submit loop over the same steps/payload/analysis, so
+    their ratio is exactly the overlap the async engine buys."""
+    script = textwrap.dedent("""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.insitu.bridge import BridgeData
+        from repro.core.insitu.transit import TransitBridge
+        from repro.launch.mesh import make_transit_meshes
+
+        pm, cm = make_transit_meshes(6, 2)
+        bridge = TransitBridge(pm, cm)
+        rng = np.random.default_rng(3)
+        field = rng.standard_normal((192, 256)).astype(np.float32)
+        sh = NamedSharding(pm, P("data", None))
+        gx = jax.device_put(field, sh)
+
+        def analyse(data):
+            # consumer-side spectral analysis (real work, not a sleep)
+            f = np.asarray(data.arrays["field"])
+            for _ in range(8):
+                np.abs(np.fft.fft2(f))
+
+        def produce():
+            # the simulation step the producer should be overlapping
+            for _ in range(4):
+                np.abs(np.fft.fft2(field))
+
+        STEPS = 6
+        # blocking baseline: step + hop + analysis all on one wall
+        t0 = time.perf_counter()
+        for s in range(STEPS):
+            produce()
+            got = bridge.send(BridgeData(arrays={"field": gx}, step=s))
+            analyse(got)
+        wall_block = time.perf_counter() - t0
+        bytes_moved = bridge.report()["bytes_moved"]
+
+        bridge.reset_stats()
+        t0 = time.perf_counter()
+        for s in range(STEPS):
+            produce()
+            bridge.send_async(
+                BridgeData(arrays={"field": gx}, step=s),
+                on_result=analyse, depth=STEPS)
+        wall_async = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        bridge.drain_async()
+        drain = time.perf_counter() - t0
+        rep = bridge.report()["async"]
+        assert rep["completed"] == STEPS and rep["error"] is None, rep
+        print(json.dumps({
+            "block_us": wall_block / STEPS * 1e6,
+            "async_us": wall_async / STEPS * 1e6,
+            "drain_us": drain * 1e6,
+            "overlap_eff": rep["overlap_efficiency"],
+            "bytes": bytes_moved}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        print(res.stderr[-3000:], file=sys.stderr)
+        row("transit_async_sweep", -1, "ERROR")
+        return
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    row("transit_async_blocking_6to2", out["block_us"],
+        f"steps=6;bytes={out['bytes']}")
+    row("transit_async_overlap_6to2", out["async_us"],
+        f"vs_blocking={out['async_us']/out['block_us']:.2f}x"
+        f";overlap_eff={out['overlap_eff']:.2f}"
+        f";drain_us={out['drain_us']:.0f}")
+
+
 def bench_fft_pencil2d():
     """The 2-axis decomposition of 2-D grids vs the 1-axis slab on the
     same hardware: all 8 devices tile the grid instead of 8 slabs,
@@ -897,6 +1057,8 @@ BENCHES = [
     ("bandpass", bench_bandpass),
     ("fft_schedule", bench_fft_schedules),
     ("fft_r2c_schedule", bench_fft_r2c_schedules),
+    ("fft_wire", bench_fft_wire),
+    ("transit_async", bench_transit_async),
     ("fft_pencil2d", bench_fft_pencil2d),
     ("fft_rfft", bench_fft_rfft),
     ("fft_slab_scaling", bench_fft_slab_scaling),
@@ -936,7 +1098,8 @@ def write_outputs(emit_json: bool, partial: bool = False) -> None:
         _write_bench_json(ROOT / "BENCH_fft.json", {
             n: {"us_per_call": round(u, 1), "derived": d}
             for n, u, d in ROWS
-            if n.startswith(("fft", "chain_pipeline", "solver_step"))})
+            if n.startswith(("fft", "chain_pipeline", "solver_step",
+                             "transit_async"))})
         # BENCH_serve.json: the serving SLO trajectory (load harness
         # latency percentiles / throughput), gated like the FFT rows
         _write_bench_json(ROOT / "BENCH_serve.json", {

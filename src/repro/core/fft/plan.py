@@ -29,6 +29,10 @@ Three FFTW behaviors are reproduced on top of that:
       backend        ∈ {fourstep, stockham (pow-2 grids), jnp}
       overlap_chunks ∈ {0, 2, 4}   (any overlap-capable schedule)
       wire_dtype     ∈ {None, bfloat16} ∪ {per-stage profile}
+                      ∪ {per-stage int8 / block-scaled-int8 codec
+                         tuples on host-crossing exchanges, each
+                         gated by the wire_tol error budget against
+                         the exact-wire oracle — see docs/wire.md}
 
   The per-stage wire candidate is TOPOLOGY-aware: when the schedule's
   exchanges have a mixed host-crossing profile (some cross DCN, some
@@ -142,6 +146,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.fft import rfft as rfft_mod
+from repro.core.fft import wire as wire_lib
 from repro.core.fft import wisdom as wisdom_mod
 from repro.core.fft.dft import to_complex, to_pair
 from repro.core.fft.schedule import (CAPS, Schedule, build_schedule,
@@ -170,8 +175,17 @@ _TUNE_CACHE: Dict[tuple, dict] = {}
 _DECOMP_CACHE: Dict[tuple, str] = {}
 _TUNE_SKIPS: List[dict] = []
 _STATS = {"hits": 0, "misses": 0, "wire_profile_candidates": 0,
+          "wire_codec_candidates": 0,
           "thread_waits": 0, "sweep_candidates_timed": 0,
           "wisdom_hits": 0, "wisdom_misses": 0, "wisdom_stale": 0}
+
+# Compressed-wire candidate policy for the measured sweep (a test/bench
+# hook, NOT a tuning input — it never enters cache or wisdom keys):
+#   "auto"   — codec candidates only on host-crossing exchanges (prod)
+#   "always" — treat every exchange as crossing (single-host testing of
+#              the codec path + error-budget gate without a cluster)
+#   "never"  — no codec candidates at all
+_WIRE_SWEEP_POLICY = "auto"
 
 # Persistent wisdom (core/fft/wisdom.py). None until first use: the
 # explicit set_wisdom() wins; otherwise the REPRO_WISDOM_FILE /
@@ -233,12 +247,18 @@ def _mesh_key(mesh: Mesh) -> tuple:
 
 
 def _wire_name(wire_dtype):
+    """Hashable/canonical wire spec: codec names pass verbatim (they
+    are already canonical strings — see ``wire.py``), dtype specs
+    canonicalize through ``jnp.dtype``."""
+    def one(w):
+        if w is None or wire_lib.is_codec(w):
+            return w
+        return jnp.dtype(w).name
     if wire_dtype is None:
         return None
-    if isinstance(wire_dtype, tuple):
-        return tuple(None if w is None else jnp.dtype(w).name
-                     for w in wire_dtype)
-    return jnp.dtype(wire_dtype).name
+    if isinstance(wire_dtype, (tuple, list)):
+        return tuple(one(w) for w in wire_dtype)
+    return one(wire_dtype)
 
 
 def _plan_key(shape, direction, mesh, decomp, axis_names, backend,
@@ -254,7 +274,10 @@ def plan_cache_stats() -> Dict[str, int]:
     ``autotune_skips()``), ``decomp_sweeps`` (cached topology sweeps),
     and ``wire_profile_candidates`` (per-stage wire tuples the knob
     sweep generated from a mixed ICI/DCN topology — 0 on single-host
-    meshes, where the candidate is skip-recorded instead), plus
+    meshes, where the candidate is skip-recorded instead) /
+    ``wire_codec_candidates`` (compressed int8/block-scaled wire
+    tuples generated on host-crossing exchanges, each vetted by the
+    ``wire_tol`` error-budget gate before timing — docs/wire.md), plus
     ``thread_waits`` (calls that blocked on another thread's
     in-flight build of the same key — the shared-warm-cache signal:
     N serve workers racing one cold plan show N-1 waits and ONE
@@ -312,6 +335,21 @@ def plan_cache_evict(mesh: Mesh) -> int:
                 del cache[k]
             evicted += len(doomed)
     return evicted
+
+
+def set_wire_sweep_policy(policy: str) -> str:
+    """Set the compressed-wire candidate policy (``auto`` / ``always``
+    / ``never`` — see ``_WIRE_SWEEP_POLICY``) and return the previous
+    one. ``always`` exists so single-host tests and benches can drive
+    the codec candidates + error-budget gate without a multi-process
+    cluster; production leaves this on ``auto`` (ICI stays exact)."""
+    global _WIRE_SWEEP_POLICY
+    if policy not in ("auto", "always", "never"):
+        raise ValueError(f"wire sweep policy {policy!r} not in "
+                         f"auto/always/never")
+    with _LOCK:
+        prev, _WIRE_SWEEP_POLICY = _WIRE_SWEEP_POLICY, policy
+    return prev
 
 
 def set_wisdom(path, mode: str = "readwrite"):
@@ -456,11 +494,16 @@ def plan_dft(shape, direction: str, mesh: Mesh, *,
              axis_names: Optional[Tuple[str, ...]] = None,
              backend: str = "auto", overlap_chunks: int = 0,
              real: bool = False, batch_ndim: int = 0,
-             wire_dtype=None, allow_reduced_wire: bool = True) -> FFTPlan:
+             wire_dtype=None, allow_reduced_wire: bool = True,
+             wire_tol: float = 1e-2) -> FFTPlan:
     """``fftw_mpi_plan_dft_*`` equivalent: decomposition inference, a
     process-wide plan cache, and ``backend="measure"`` autotuning.
-    Identical arguments return the SAME compiled plan object."""
+    Identical arguments return the SAME compiled plan object.
+    ``wire_tol`` is the measured sweep's error budget for compressed
+    wire candidates (max rel-err vs the exact-wire oracle; over-budget
+    candidates are skip-recorded, never selected — docs/wire.md)."""
     shape = tuple(int(s) for s in shape)
+    wire_tol = float(wire_tol)
     if decomp == MEASURE:
         axis_names = tuple(axis_names) if axis_names is not None else None
         decomp = _autotune_decomp(shape, direction, mesh, backend=backend,
@@ -468,7 +511,8 @@ def plan_dft(shape, direction: str, mesh: Mesh, *,
                                   wire_dtype=wire_dtype,
                                   real=real, batch_ndim=batch_ndim,
                                   allow_reduced_wire=allow_reduced_wire,
-                                  axis_names=axis_names)
+                                  axis_names=axis_names,
+                                  wire_tol=wire_tol)
         if axis_names is not None and decomp in CAPS:
             # the sweep raced each candidate over the prefix of the
             # caller's axes it needs — build the winner the same way
@@ -478,13 +522,15 @@ def plan_dft(shape, direction: str, mesh: Mesh, *,
 
     key = _plan_key(shape, direction, mesh, decomp, axis_names, backend,
                     overlap_chunks, real, batch_ndim, wire,
-                    allow_reduced_wire if backend == MEASURE else None)
+                    (allow_reduced_wire, wire_tol)
+                    if backend == MEASURE else None)
 
     def _build() -> FFTPlan:
         if backend == MEASURE:
             tuned = _autotune(shape, direction, mesh, decomp, axis_names,
                               real=real, batch_ndim=batch_ndim,
-                              allow_reduced_wire=allow_reduced_wire)
+                              allow_reduced_wire=allow_reduced_wire,
+                              wire_tol=wire_tol)
             return plan_dft(shape, direction, mesh, decomp=decomp,
                             axis_names=axis_names, real=real,
                             batch_ndim=batch_ndim, **tuned)
@@ -594,9 +640,24 @@ def _tune_from_wisdom(value):
         return None
     if backend not in _WISDOM_BACKENDS or overlap < 0:
         return None
+
+    def _wire_ok(w) -> bool:
+        # a wire entry must be a known codec or a real dtype name —
+        # wisdom recorded by a build with other codecs is stale here
+        if w is None or wire_lib.is_codec(w):
+            return True
+        try:
+            jnp.dtype(w)
+            return True
+        except TypeError:
+            return False
+
     if isinstance(wire, (list, tuple)):
         wire = tuple(None if w is None else str(w) for w in wire)
-    elif wire is not None and not isinstance(wire, str):
+        if not all(_wire_ok(w) for w in wire):
+            return None
+    elif wire is not None and (not isinstance(wire, str)
+                               or not _wire_ok(wire)):
         return None
     return {"backend": backend, "overlap_chunks": overlap,
             "wire_dtype": wire}
@@ -711,6 +772,75 @@ def _dummy_args(shape, direction, mesh, decomp, axis_names, real,
     return (zero, zero)
 
 
+def _oracle_args(shape, direction, mesh, decomp, axis_names, real,
+                 batch_ndim):
+    """Deterministic NON-zero sweep input for the wire error-budget
+    oracle. ``_dummy_args`` times on zeros — fine for walls, useless
+    for error measurement (every codec is exact on zeros). The fill is
+    a fixed sum of per-axis cosines computed INSIDE jit from iota, so
+    it is bit-identical on every process with no host-array transfer
+    ambiguity, and elementwise, so each array keeps its sweep-input
+    sharding."""
+    args = _dummy_args(shape, direction, mesh, decomp, axis_names, real,
+                       batch_ndim)
+
+    @jax.jit
+    def fill(z, seed):
+        out = z
+        for d in range(z.ndim):
+            idx = jax.lax.broadcasted_iota(jnp.float32, z.shape, d)
+            out = out + jnp.cos((0.37 + 0.11 * seed) * (d + 1) * idx + 0.1)
+        return out
+
+    return tuple(fill(z, jnp.float32(i)) for i, z in enumerate(args))
+
+
+def _max_rel_err(got, want) -> float:
+    """max |got - want| / max |want| over the (re, im) pair — a single
+    replicated scalar, identical on every process (same global arrays,
+    same reduction), so budget decisions never diverge."""
+    got = got if isinstance(got, tuple) else (got,)
+    want = want if isinstance(want, tuple) else (want,)
+    num = 0.0
+    den = 0.0
+    for g, w in zip(got, want):
+        num = max(num, float(jnp.max(jnp.abs(g - w))))
+        den = max(den, float(jnp.max(jnp.abs(w))))
+    return num / max(den, 1e-30)
+
+
+def _wire_codec_variant(wire_dtype) -> bool:
+    """True when a wire spec carries any compressed codec entry (these
+    are the candidates the error-budget gate must vet)."""
+    entries = wire_dtype if isinstance(wire_dtype, tuple) else (wire_dtype,)
+    return any(wire_lib.is_codec(w) for w in entries)
+
+
+def _wire_codec_candidates(shape, direction, mesh, decomp, axis_names,
+                           real):
+    """Compressed-wire candidates for the measured sweep: one per-stage
+    tuple per stock int8 codec, compressing ONLY the host-crossing
+    exchanges (ICI stays exact — intra-host wire is cheap and
+    quantizing it buys nothing). Under the ``always`` policy every
+    exchange counts as crossing, so single-host tests can exercise the
+    full codec path. Returns a (possibly empty) list of wire tuples;
+    derived from mesh placement only, hence identical on every process
+    (the sweep's collective control flow depends on that)."""
+    if _WIRE_SWEEP_POLICY == "never":
+        return []
+    sched = build_schedule(decomp, shape, mesh, axis_names,
+                           inverse=direction == BACKWARD, real=real)
+    flags = [bool(t["crosses_hosts"]) for t in exchange_topology(sched)]
+    if _WIRE_SWEEP_POLICY == "always":
+        flags = [True] * len(flags)
+    if not any(flags):
+        return []
+    profs = []
+    for codec in ("int8", f"int8_block{wire_lib.DEFAULT_BLOCK}"):
+        profs.append(tuple(codec if f else None for f in flags))
+    return profs
+
+
 def _wire_profile_candidate(shape, direction, mesh, decomp, axis_names,
                             real):
     """The topology-aware per-stage wire tuple: cast ONLY the
@@ -756,13 +886,23 @@ def _schedule_variants(shape, decomp, *, allow_reduced_wire,
     instead of being timed twice. The mesh's device placement is
     identical on every process, so the candidate list — and with it
     the sweep's collective control flow — stays deterministic
-    cluster-wide."""
+    cluster-wide.
+
+    Compressed-wire candidates (``_wire_codec_candidates``): per-stage
+    int8 / block-scaled-int8 tuples on host-crossing exchanges only,
+    each later vetted by the sweep's error-budget gate against the
+    exact-wire oracle before it may be timed, let alone win. To keep
+    the variant-count explosion in check they sweep at
+    ``overlap_chunks=0`` only — a codec's win is wire bytes, which
+    overlap chunking does not change (and chunked encode would change
+    block boundaries, i.e. the error being budget-checked)."""
     caps = CAPS[decomp]
     backends = ["fourstep", "jnp"]
     if all(_pow2(s) for s in shape):
         backends.append("stockham")
     overlaps = [0, 2, 4] if caps.overlap else [0]
     wires = [None]
+    codec_wires = []
     if allow_reduced_wire and caps.wire:
         wires.append("bfloat16")
         if mesh is not None:
@@ -777,13 +917,24 @@ def _schedule_variants(shape, decomp, *, allow_reduced_wire,
                     _STATS["wire_profile_candidates"] += 1
             elif record_skip is not None:
                 record_skip(prof)
-    return [{"backend": be, "overlap_chunks": ov, "wire_dtype": wr}
-            for be in backends for ov in overlaps for wr in wires]
+            try:
+                codec_wires = _wire_codec_candidates(
+                    shape, direction, mesh, decomp, axis_names, real)
+            except Exception:  # noqa: BLE001 — schedule unbuildable
+                codec_wires = []
+            with _LOCK:
+                _STATS["wire_codec_candidates"] += len(codec_wires)
+    variants = [{"backend": be, "overlap_chunks": ov, "wire_dtype": wr}
+                for be in backends for ov in overlaps for wr in wires]
+    variants.extend({"backend": be, "overlap_chunks": 0, "wire_dtype": wr}
+                    for be in backends for wr in codec_wires)
+    return variants
 
 
 def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
                      wire_dtype, real, batch_ndim,
-                     allow_reduced_wire, axis_names=None) -> str:
+                     allow_reduced_wire, axis_names=None,
+                     wire_tol: float = 1e-2) -> str:
     """``decomp="measure"``: time every layout-compatible decomposition
     for this (grid, mesh TOPOLOGY, knobs) and return the fastest.
 
@@ -813,7 +964,7 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
         return _infer(shape, None, None, mesh)[0]
     dkey = (shape, direction, _mesh_key(mesh), axis_names, real,
             batch_ndim, backend, overlap_chunks, _wire_name(wire_dtype),
-            allow_reduced_wire)
+            allow_reduced_wire, float(wire_tol))
 
     def _sweep() -> str:
         fallback = _infer(shape, None, None, mesh)[0]
@@ -827,7 +978,8 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
             axis_names=axis_names, real=real, batch_ndim=batch_ndim,
             backend=backend, overlap_chunks=overlap_chunks,
             wire_dtype=_wire_name(wire_dtype),
-            allow_reduced_wire=allow_reduced_wire)
+            allow_reduced_wire=allow_reduced_wire,
+            wire_tol=float(wire_tol))
 
         def _decode(value):
             # a recorded decomp must still be a legal substitution for
@@ -868,7 +1020,8 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
                     tuned = _autotune(
                         shape, direction, mesh, decomp, cand_axes,
                         real=real, batch_ndim=batch_ndim,
-                        allow_reduced_wire=allow_reduced_wire)
+                        allow_reduced_wire=allow_reduced_wire,
+                        wire_tol=wire_tol)
                 else:
                     tuned = {"backend": backend,
                              "overlap_chunks": overlap_chunks,
@@ -911,13 +1064,24 @@ def _autotune_decomp(shape, direction, mesh, *, backend, overlap_chunks,
 
 
 def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
-              batch_ndim, allow_reduced_wire) -> dict:
+              batch_ndim, allow_reduced_wire,
+              wire_tol: float = 1e-2) -> dict:
     """Sweep the schedule variant space, return the fastest knob
     setting. Results cache per (shape, mesh, decomp, direction, real,
     batch) so only the first measure-plan pays the sweep; skipped
-    variants land in ``autotune_skips()``."""
+    variants land in ``autotune_skips()``.
+
+    Compressed-wire candidates are additionally gated by an
+    **error budget**: before a codec variant may be timed, the sweep
+    executes it and the exact-wire reference on the same deterministic
+    non-zero input (``_oracle_args``) and skips it with reason
+    ``"wire-error-budget"`` when its max rel-err exceeds ``wire_tol``
+    — a lossy wire may win on speed, never on accuracy it does not
+    have. The measured error and the budget are recorded in the skip
+    entry (and ``max_rel_err`` on nothing: in-budget candidates carry
+    their error into the timed phase only)."""
     tkey = (shape, direction, _mesh_key(mesh), decomp, axis_names, real,
-            batch_ndim, allow_reduced_wire)
+            batch_ndim, allow_reduced_wire, float(wire_tol))
 
     def _sweep() -> dict:
         fallback = {"backend": "auto", "overlap_chunks": 0,
@@ -930,7 +1094,8 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
         wkey = wisdom_mod.wisdom_key(
             "tune", mesh, shape=shape, direction=direction,
             decomp=decomp, axis_names=axis_names, real=real,
-            batch_ndim=batch_ndim, allow_reduced_wire=allow_reduced_wire)
+            batch_ndim=batch_ndim, allow_reduced_wire=allow_reduced_wire,
+            wire_tol=float(wire_tol))
         hit = _wisdom_sweep_hit("tune", wkey, span, _tune_from_wisdom)
         if hit is not None:
             return hit
@@ -963,6 +1128,32 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
             shape, decomp, allow_reduced_wire=allow_reduced_wire,
             direction=direction, mesh=mesh, axis_names=axis_names,
             real=real, record_skip=_record_wire_skip)
+        # error-budget oracle: the exact-wire reference output on a
+        # deterministic non-zero input, built lazily at the first
+        # codec candidate that survives its build gate. The candidate
+        # list and every gate below are cluster-agreed, so all
+        # processes build (or fail) the oracle at the same loop point.
+        oracle = {"tried": False, "args": None, "want": None}
+
+        def _oracle_ready() -> bool:
+            if not oracle["tried"]:
+                oracle["tried"] = True
+                oerr = None
+                try:
+                    oracle["args"] = _oracle_args(
+                        shape, direction, mesh, decomp, axis_names,
+                        real, batch_ndim)
+                    ref = FFTPlan(shape, direction, mesh, decomp,
+                                  axis_names, real=real,
+                                  batch_ndim=batch_ndim).compile()
+                    oracle["want"] = ref.execute(*oracle["args"])
+                    jax.block_until_ready(oracle["want"])
+                except Exception as e:  # noqa: BLE001 — per-process
+                    oerr = f"{type(e).__name__}: {e}"
+                if not _sweep_ok(oerr is None, span):
+                    oracle["want"] = None
+            return oracle["want"] is not None
+
         best, best_t, best_plan = None, float("inf"), None
         for variant in variants:
             cand = FFTPlan(shape, direction, mesh, decomp, axis_names,
@@ -984,6 +1175,41 @@ def _autotune(shape, direction, mesh, decomp, axis_names, *, real,
                     "batch_ndim": batch_ndim, **variant,
                     "error": err or "variant failed on another process"})
                 continue
+            if _wire_codec_variant(variant["wire_dtype"]):
+                # the error-budget gate: a compressed wire must prove
+                # itself within wire_tol of the exact oracle BEFORE it
+                # is timed — never selected over budget (docs/wire.md)
+                if not _oracle_ready():
+                    _record_skip({
+                        "shape": shape, "direction": direction,
+                        "decomp": decomp, "real": real,
+                        "batch_ndim": batch_ndim, **variant,
+                        "error": "wire-oracle-unavailable"})
+                    continue
+                rel = None
+                try:
+                    rel = _max_rel_err(cand.execute(*oracle["args"]),
+                                       oracle["want"])
+                except Exception as e:  # noqa: BLE001 — cand collective
+                    err = f"{type(e).__name__}: {e}"
+                if not _sweep_ok(err is None, span):
+                    _record_skip({
+                        "shape": shape, "direction": direction,
+                        "decomp": decomp, "real": real,
+                        "batch_ndim": batch_ndim, **variant,
+                        "error": err
+                        or "wire oracle failed on another process"})
+                    continue
+                # rel is a reduction over replicated global arrays —
+                # identical on every process, so this branch is too
+                if rel > wire_tol:
+                    _record_skip({
+                        "shape": shape, "direction": direction,
+                        "decomp": decomp, "real": real,
+                        "batch_ndim": batch_ndim, **variant,
+                        "error": "wire-error-budget",
+                        "max_rel_err": rel, "wire_tol": wire_tol})
+                    continue
             try:
                 t = _time_plan(cand, args)
             except Exception as e:  # noqa: BLE001 — variant unsupported

@@ -16,9 +16,14 @@ input/output ``PartitionSpec`` tails, executed by ONE generic
   endcaps along the last axis; the half-spectrum is padded to
   ``pad_to`` (a multiple of the shard count) for the tiled all_to_all
 * ``AllToAll(axis_name, split, concat, shards, wire_dtype,
-  crosses_hosts)`` — the distribution exchange, with optional
-  reduced-precision transport (e.g. ``"bfloat16"`` halves the dominant
-  collective bytes; compute stays f32) and a host-crossing annotation:
+  crosses_hosts, wire_codec)`` — the distribution exchange, with
+  optional reduced-precision transport (e.g. ``"bfloat16"`` halves the
+  dominant collective bytes; compute stays f32), optional *compressed*
+  transport (``wire_codec`` names a ``wire.py`` codec: the payload is
+  encoded — e.g. block-scaled int8 + f32 scales, ~3.6x fewer bytes —
+  packed into ONE byte buffer, moved through a single tiled
+  all_to_all, and unpacked + decoded on arrival; every codec carries a
+  documented error bound the planner budget-checks) and a host-crossing annotation:
   ``build_schedule`` marks every exchange with whether its mesh axis
   spans processes (DCN) or stays on one host (ICI) —
   ``exchange_topology`` summarizes a schedule's wire profile and the
@@ -83,8 +88,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import axis_crosses_processes, shard_map
+from repro.core.fft import wire as wire_mod
 from repro.core.fft.dft import cmul, fft_along
 
+# A wire spec entry is a dtype NAME ("bfloat16"), a wire CODEC name
+# ("int8", "int8_block64", "bf16" — see wire.py), or None (exact).
 WireSpec = Union[None, str, Tuple[Optional[str], ...]]
 
 
@@ -149,9 +157,42 @@ class AllToAll:
     shards: int
     wire_dtype: Optional[str] = None        # dtype NAME (hashable)
     crosses_hosts: Optional[bool] = None    # None = not annotated
+    wire_codec: Optional[str] = None        # codec NAME (wire.py)
+
+    def __post_init__(self):
+        # builders pass one wire spec entry positionally as wire_dtype;
+        # codec names ("int8", "int8_block64", "bf16") reroute to the
+        # codec slot so the two lossy paths stay distinct downstream
+        if self.wire_dtype is not None and self.wire_codec is None \
+                and wire_mod.is_codec(self.wire_dtype):
+            object.__setattr__(self, "wire_codec", self.wire_dtype)
+            object.__setattr__(self, "wire_dtype", None)
 
     def _one(self, x):
         s, c = self.split % x.ndim, self.concat % x.ndim
+        if self.wire_codec is not None:
+            codec = wire_mod.get_codec(self.wire_codec)
+            parts = codec.encode_wire(x)
+            if len(parts) == 1:
+                moved = (jax.lax.all_to_all(
+                    parts[0], self.axis_name, split_axis=s,
+                    concat_axis=c, tiled=True),)
+            else:
+                # Payload and scales ride ONE packed collective: as
+                # separate all_to_alls their differing message sizes
+                # can cross-pair on the CPU gloo transport when XLA
+                # schedules them concurrently (flaky preamble-length
+                # aborts), and one collective is one message of wire
+                # latency anyway.
+                last = parts[0].ndim - 1
+                packed, meta = wire_mod.pack_wire(
+                    parts, self.shards, split_last=(s == last),
+                    concat_last=(c == last))
+                movedp = jax.lax.all_to_all(
+                    packed, self.axis_name, split_axis=s, concat_axis=c,
+                    tiled=True)
+                moved = wire_mod.unpack_wire(movedp, meta)
+            return codec.decode(moved, x.dtype)
         wd = None if self.wire_dtype is None else jnp.dtype(self.wire_dtype)
         if wd is not None and x.dtype != wd:
             y = jax.lax.all_to_all(x.astype(wd), self.axis_name,
@@ -264,22 +305,31 @@ def _bspec(nb: int, *tail) -> P:
     return P(*((None,) * nb), *tail)
 
 
+def _wire_entry(w) -> Optional[str]:
+    """Normalize ONE wire spec entry: None, a codec name (verbatim —
+    see ``wire.py``), or a dtype name canonicalized via ``jnp.dtype``."""
+    if w is None:
+        return None
+    if wire_mod.is_codec(w):
+        return w
+    return jnp.dtype(w).name
+
+
 def _wire_tuple(wire_dtype: WireSpec, n_a2a: int
                 ) -> Tuple[Optional[str], ...]:
-    """Normalize a wire spec to one dtype NAME per AllToAll stage.
+    """Normalize a wire spec to one dtype/codec NAME per AllToAll stage.
 
-    Accepts None (exact everywhere), a single dtype/name (applied to
-    every exchange), or a tuple with one entry per exchange (per-stage
-    wire: e.g. cast only the first, larger rotation of a pencil)."""
+    Accepts None (exact everywhere), a single dtype/codec name (applied
+    to every exchange), or a tuple with one entry per exchange
+    (per-stage wire: e.g. compress only the host-crossing rotation of a
+    pencil)."""
     if isinstance(wire_dtype, tuple):
         if len(wire_dtype) != n_a2a:
             raise ValueError(
                 f"wire_dtype tuple has {len(wire_dtype)} entries for "
                 f"{n_a2a} all_to_all stages")
-        return tuple(None if w is None else jnp.dtype(w).name
-                     for w in wire_dtype)
-    one = None if wire_dtype is None else jnp.dtype(wire_dtype).name
-    return (one,) * n_a2a
+        return tuple(_wire_entry(w) for w in wire_dtype)
+    return (_wire_entry(wire_dtype),) * n_a2a
 
 
 # ---------------------------------------------------------------------------
@@ -613,10 +663,13 @@ def exchange_topology(sched: Schedule) -> Tuple[dict, ...]:
     ``{axis_name, shards, wire_dtype, crosses_hosts}``. The
     host-crossing flags are the schedule's *wire profile* — e.g. a
     pencil whose first rotation stays on-host but whose second crosses
-    DCN reads ``(False, True)``. See ``docs/multihost.md`` for how to
-    read these when choosing a decomposition."""
+    DCN reads ``(False, True)``. ``wire_codec`` is the compressed-wire
+    codec name when the stage encodes (wire.py), else None. See
+    ``docs/multihost.md`` for how to read these when choosing a
+    decomposition."""
     return tuple({"axis_name": st.axis_name, "shards": st.shards,
                   "wire_dtype": st.wire_dtype,
+                  "wire_codec": st.wire_codec,
                   "crosses_hosts": st.crosses_hosts}
                  for st in sched.stages if isinstance(st, AllToAll))
 

@@ -1,0 +1,387 @@
+"""Wire codecs — compressed transport formats for distribution exchanges.
+
+Multi-node distributed FFT is all_to_all-bound (Verma et al.,
+arXiv:2202.12756): the bytes an exchange moves over DCN set the
+scaling ceiling, not the local FLOPs. ``schedule.py`` already treats
+the wire *dtype* as a plan knob (``wire_dtype="bfloat16"`` halves the
+collective bytes); this module generalizes that idea to wire
+**codecs**: an exchange may encode its payload into a compressed
+representation (int8 payload + per-block float scales), move the
+compressed parts through the same tiled ``all_to_all``, and decode on
+arrival. Compute stays f32 everywhere — only the wire is lossy, and
+each codec documents an elementwise error bound that the planner's
+error-budget gate (``plan.py``, ``wire_tol``) verifies against the
+exact-wire oracle before a codec may win a measured sweep.
+
+Codecs (``get_codec(name)``; names are plain strings so schedules stay
+hashable, exactly like ``wire_dtype``):
+
+========== ===================== =========================== =========
+name       wire format           elementwise error bound     bytes/elt
+========== ===================== =========================== =========
+``bf16``   bfloat16 cast         ``2^-8 · |x|``              2
+``int8``   int8 + 1 scale/row    ``absmax_row / 254``        1 + 4/n
+``int8_blockB`` int8 + 1 scale   ``absmax_block / 254``      1 + 4/B
+           per B-elt block
+========== ===================== =========================== =========
+
+(``absmax`` is the max magnitude over the scaling span; ``row`` = the
+whole last axis. ``int8_block64`` is the stock block-scaled codec; any
+``int8_block<B>`` name parses.) The block-scaled variant exists
+because a single outlier poisons a global absmax — every other value
+collapses toward zero (the historical ``optim/compress.py`` bug, now
+fixed by delegating here): per-block scales contain the damage to the
+outlier's own block.
+
+**Complex payloads** are handled as interleaved re/im planes: a
+complex array is viewed as a real array whose last axis interleaves
+``re0, im0, re1, im1, …`` (``interleave_complex``), encoded as usual,
+and de-interleaved on decode — so a block's scale always covers
+spatially adjacent complex samples. (The schedule executor never needs
+this: its state is already split (re, im) f32 pairs.)
+
+**Exchange alignment.** ``AllToAll`` moves the encoded parts as ONE
+packed byte buffer through a single tiled all_to_all
+(``pack_wire``/``unpack_wire``): each shard's slice of the buffer
+holds that shard's payload bytes followed by its scale bytes, so one
+collective carries the whole codec wire. One collective is not just
+one message of latency — it is a *correctness* requirement on the CPU
+gloo transport, where two concurrently-scheduled collectives with
+different message sizes on the same mesh axis can cross-pair their
+messages and abort (preamble length mismatch). Blocks stay atomic
+through the exchange as long as the payload's last-axis extent is a
+multiple of the block size on both sides; ``encode_wire`` enforces
+exact divisibility and raises ``ValueError`` otherwise — at trace
+time, where the planner's sweep records it as an ordinary skipped
+candidate (``pack_wire`` enforces the analogous per-shard divisibility
+when the exchange splits the last axis). Standalone
+``encode``/``decode`` (gradient compression, tests) accept arbitrary
+shapes via a zero-padded trailing partial block.
+
+See ``docs/wire.md`` for the full guide (sweep gating, the
+``wire_tol`` budget knob, agree-then-persist flow).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# absmax guard: a zero block must decode to zeros, not NaN
+_EPS = 1e-12
+
+# bfloat16 has 7 explicit mantissa bits -> round-to-nearest relative
+# error <= 2^-8; the absolute term covers f32 values below bf16's
+# smallest subnormal (which flush to zero on cast)
+BF16_REL_BOUND = 2.0 ** -8
+BF16_ABS_GUARD = 1e-38
+
+# int8 absmax: scale = absmax/127, round error <= scale/2 = absmax/254
+INT8_REL_BOUND = 0.5 / 127.0
+
+
+def interleave_complex(x):
+    """Complex (..., n) -> real (..., 2n) with re/im interleaved."""
+    parts = jnp.stack([jnp.real(x), jnp.imag(x)], axis=-1)
+    return parts.reshape(*x.shape[:-1], 2 * x.shape[-1]).astype(jnp.float32)
+
+
+def deinterleave_complex(y):
+    """Inverse of ``interleave_complex``: real (..., 2n) -> complex."""
+    p = y.reshape(*y.shape[:-1], y.shape[-1] // 2, 2)
+    return p[..., 0] + 1j * p[..., 1]
+
+
+def nblocks(n: int, block: Optional[int]) -> int:
+    """Closed-form scale count for a length-``n`` last axis:
+    ``ceil(n / block)``, or 1 when ``block`` is None (one scale spans
+    the whole axis)."""
+    if block is None:
+        return 1
+    return -(-int(n) // int(block))
+
+
+class WireCodec:
+    """One compressed wire format.
+
+    ``encode(x)`` returns the tuple of arrays that travel (payload
+    first); ``decode(parts, dtype)`` reconstructs. Every part has the
+    payload's rank, so an exchange applies the SAME split/concat axes
+    to each. ``encode_wire`` is the exchange-side entry point: it
+    additionally enforces the block-alignment contract (exact
+    divisibility) so blocks stay atomic through a tiled all_to_all.
+    """
+
+    name: str = "?"
+
+    def encode(self, x) -> Tuple:
+        raise NotImplementedError
+
+    def decode(self, parts: Tuple, dtype=jnp.float32):
+        raise NotImplementedError
+
+    def encode_wire(self, x) -> Tuple:
+        return self.encode(x)
+
+    def max_error(self, x):
+        """Elementwise bound on ``|decode(encode(x)) - x|`` for real
+        ``x`` (for complex payloads, apply to the interleaved view)."""
+        raise NotImplementedError
+
+    def wire_bytes(self, shape, dtype=jnp.float32) -> int:
+        """Bytes this codec puts on the wire for one array."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec(WireCodec):
+    """The existing reduced-precision wire as a codec: one bfloat16
+    cast, no side payload. Error: ``2^-8 · |x|`` per element."""
+    name: str = "bf16"
+
+    def encode(self, x):
+        if jnp.iscomplexobj(x):
+            x = interleave_complex(x)
+        return (x.astype(jnp.bfloat16),)
+
+    def decode(self, parts, dtype=jnp.float32):
+        (y,) = parts
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+            return deinterleave_complex(y.astype(jnp.float32)).astype(dtype)
+        return y.astype(dtype)
+
+    def max_error(self, x):
+        return BF16_REL_BOUND * jnp.abs(x) + BF16_ABS_GUARD
+
+    def wire_bytes(self, shape, dtype=jnp.float32) -> int:
+        n = int(np.prod(shape, dtype=np.int64))
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+            n *= 2
+        return 2 * n
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(WireCodec):
+    """Absmax int8 with per-block f32 scales over the last axis.
+
+    ``block=None`` scales each whole last-axis row with ONE factor
+    (the historical ``optim/compress.py`` scheme, per row instead of
+    per leaf); ``block=B`` scales every B-element chunk independently,
+    so an outlier only coarsens its own block's grid. Error bound:
+    ``|decode(encode(x)) - x| <= absmax_span / 254`` per element,
+    where the span is the element's scaling block.
+    """
+    name: str = "int8"
+    block: Optional[int] = None
+
+    def _blocked(self, x):
+        """(padded blocks view (..., nb, b), true last extent)."""
+        n = x.shape[-1]
+        b = n if self.block is None else int(self.block)
+        nb = nblocks(n, b)
+        pad = nb * b - n
+        if pad:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        return x.reshape(*x.shape[:-1], nb, b), n
+
+    def block_scales(self, x):
+        """The per-block scale array (shape ``x.shape[:-1] + (nb,)``)."""
+        blocks, _ = self._blocked(jnp.asarray(x, jnp.float32))
+        absmax = jnp.max(jnp.abs(blocks), axis=-1)
+        return (absmax + _EPS) / 127.0
+
+    def encode(self, x):
+        if jnp.iscomplexobj(x):
+            x = interleave_complex(x)
+        x = jnp.asarray(x, jnp.float32)
+        blocks, n = self._blocked(x)
+        absmax = jnp.max(jnp.abs(blocks), axis=-1)
+        scales = ((absmax + _EPS) / 127.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(blocks / scales[..., None]), -127, 127)
+        q = q.reshape(*x.shape[:-1], blocks.shape[-2] * blocks.shape[-1])
+        return q[..., :n].astype(jnp.int8), scales
+
+    def encode_wire(self, x):
+        n = int(x.shape[-1])
+        if self.block is not None and n % int(self.block):
+            raise ValueError(
+                f"wire codec {self.name}: last-axis extent {n} is not a "
+                f"multiple of the block size {self.block} — blocks would "
+                f"not stay atomic through the tiled all_to_all")
+        return self.encode(x)
+
+    def decode(self, parts, dtype=jnp.float32):
+        q, scales = parts
+        n = q.shape[-1]
+        nb = scales.shape[-1]
+        # block span: the codec's own block size, or (block=None) the
+        # exact per-scale span the exchange produced — a concat along
+        # the last axis turns one scale per source row into nb scales
+        # each spanning that source's row extent
+        b = int(self.block) if self.block is not None else n // max(nb, 1)
+        rep = jnp.repeat(scales.astype(jnp.float32), b, axis=-1)[..., :n]
+        out = q.astype(jnp.float32) * rep
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+            return deinterleave_complex(out).astype(dtype)
+        return out.astype(dtype)
+
+    def max_error(self, x):
+        scales = self.block_scales(x)
+        n = x.shape[-1]
+        b = n if self.block is None else int(self.block)
+        return 0.5 * jnp.repeat(scales, b, axis=-1)[..., :n]
+
+    def wire_bytes(self, shape, dtype=jnp.float32) -> int:
+        shape = tuple(int(s) for s in shape)
+        last = shape[-1] if shape else 1
+        rows = int(np.prod(shape[:-1], dtype=np.int64)) if len(shape) > 1 \
+            else 1
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+            last *= 2
+        return rows * last + 4 * rows * nblocks(last, self.block)
+
+
+def exact_bytes(shape, dtype=jnp.float32) -> int:
+    """The exact-wire baseline: one f32/complex64/... copy."""
+    return (int(np.prod(shape, dtype=np.int64))
+            * jnp.dtype(dtype).itemsize)
+
+
+# ---------------------------------------------------------------------------
+# Wire packing — all encoded parts ride ONE collective
+# ---------------------------------------------------------------------------
+
+def _as_bytes(p):
+    """View an array as uint8 along a widened last axis."""
+    dt = jnp.dtype(p.dtype)
+    b = jax.lax.bitcast_convert_type(p, jnp.uint8)
+    if dt.itemsize == 1:
+        return b
+    return b.reshape(*p.shape[:-1], p.shape[-1] * dt.itemsize)
+
+
+def _from_bytes(b, dtype):
+    """Inverse of ``_as_bytes``: uint8 (..., nbytes) -> dtype array."""
+    dt = jnp.dtype(dtype)
+    if dt.itemsize == 1:
+        return jax.lax.bitcast_convert_type(b, dt)
+    v = b.reshape(*b.shape[:-1], b.shape[-1] // dt.itemsize, dt.itemsize)
+    return jax.lax.bitcast_convert_type(v, dt)
+
+
+def pack_wire(parts: Tuple, shards: int, *, split_last: bool,
+              concat_last: bool) -> Tuple:
+    """Pack encoded parts into ONE uint8 buffer for a single tiled
+    all_to_all.
+
+    The exchange that moves a codec's parts (int8 payload, f32 scales)
+    as separate collectives is a hazard on the CPU gloo transport:
+    concurrently-scheduled collectives with different message sizes on
+    the same mesh axis can cross-pair and abort. Packing makes the
+    whole codec wire one collective of one size.
+
+    Alignment contract: when the all_to_all SPLITS the last axis
+    (``split_last``), the packed last axis is laid out as ``shards``
+    contiguous segments, each holding one shard's slice of every part
+    — so the tiled split hands every shard exactly its own payload and
+    scale bytes. Each part's last-axis extent must then be a multiple
+    of ``shards`` (the same feasibility rule the separate exchanges
+    had); violations raise ``ValueError`` at trace time. When the
+    exchange CONCATS along the last axis, the received buffer holds
+    ``shards`` packed segments, which ``unpack_wire`` re-splices into
+    per-part arrays matching what per-part exchanges would have
+    produced.
+
+    Returns ``(packed, meta)``; pass ``meta`` (static python data) to
+    ``unpack_wire`` on the far side of the exchange.
+    """
+    k = int(shards) if split_last else 1
+    segs = []
+    spec = []
+    for p in parts:
+        n = int(p.shape[-1])
+        if n % k:
+            raise ValueError(
+                f"wire pack: part last-axis extent {n} is not a "
+                f"multiple of the {k} exchange shards — parts would "
+                f"not stay aligned through the tiled all_to_all")
+        v = p.reshape(*p.shape[:-1], k, n // k)
+        segs.append(_as_bytes(v))
+        spec.append((jnp.dtype(p.dtype).name, n))
+    packed = jnp.concatenate(segs, axis=-1)
+    packed = packed.reshape(*packed.shape[:-2],
+                            packed.shape[-2] * packed.shape[-1])
+    m = int(shards) if concat_last else 1
+    return packed, (tuple(spec), k, m)
+
+
+def unpack_wire(packed, meta) -> Tuple:
+    """Inverse of ``pack_wire``, applied AFTER the exchange: recover
+    the per-part arrays exactly as per-part all_to_alls would have
+    delivered them."""
+    spec, k, m = meta
+    seg_bytes = sum(jnp.dtype(d).itemsize * n for d, n in spec) // k
+    seg = packed.reshape(*packed.shape[:-1], m, seg_bytes)
+    parts = []
+    off = 0
+    for dtype, n in spec:
+        nb = jnp.dtype(dtype).itemsize * n // k
+        piece = _from_bytes(seg[..., off:off + nb], dtype)
+        off += nb
+        parts.append(piece.reshape(*piece.shape[:-2],
+                                   piece.shape[-2] * piece.shape[-1]))
+    return tuple(parts)
+
+
+# ---------------------------------------------------------------------------
+# Registry — codec names are the hashable plan-knob currency
+# ---------------------------------------------------------------------------
+
+DEFAULT_BLOCK = 64
+
+_BLOCK_NAME = re.compile(r"^int8_block(\d+)$")
+
+_REGISTRY: Dict[str, WireCodec] = {
+    "bf16": Bf16Codec(),
+    "int8": Int8Codec("int8", None),
+    f"int8_block{DEFAULT_BLOCK}": Int8Codec(f"int8_block{DEFAULT_BLOCK}",
+                                            DEFAULT_BLOCK),
+}
+
+
+def get_codec(name: str) -> WireCodec:
+    """Resolve a codec name (``bf16`` / ``int8`` / ``int8_block<B>``).
+    Raises ``ValueError`` for anything else — dtype names like
+    ``"bfloat16"`` are NOT codecs; they stay on the plain
+    ``wire_dtype`` cast path."""
+    codec = _REGISTRY.get(name)
+    if codec is not None:
+        return codec
+    m = _BLOCK_NAME.match(name or "")
+    if m:
+        b = int(m.group(1))
+        if b < 1:
+            raise ValueError(f"wire codec block size must be >= 1: {name}")
+        codec = Int8Codec(name, b)
+        _REGISTRY[name] = codec
+        return codec
+    raise ValueError(
+        f"unknown wire codec {name!r}; known: {sorted(_REGISTRY)} "
+        f"plus any int8_block<B>")
+
+
+def is_codec(name) -> bool:
+    """True when ``name`` names a wire codec (vs a plain wire dtype)."""
+    if not isinstance(name, str):
+        return False
+    return name in _REGISTRY or bool(_BLOCK_NAME.match(name))
+
+
+def codec_names() -> Tuple[str, ...]:
+    """The stock codec names (stable order, for sweeps and docs)."""
+    return ("bf16", "int8", f"int8_block{DEFAULT_BLOCK}")

@@ -88,7 +88,11 @@ SCHEMA = 1
 # from a race that no longer exists.
 # rev 2: topology_fingerprint canonicalized (device ids dropped in
 # favor of per-process device counts) for elastic rescale warm-starts.
-SWEEP_REV = 2
+# rev 3: compressed-wire codec candidates (int8 / block-scaled int8 on
+# host-crossing exchanges) joined the knob sweep behind the wire_tol
+# error-budget gate; wire entries may now name codecs, and tune keys
+# carry wire_tol — winners from the rev-2 race are no longer comparable.
+SWEEP_REV = 3
 
 MODES = ("off", "read", "readwrite")
 

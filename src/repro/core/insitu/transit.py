@@ -45,6 +45,15 @@ gathers roughly that many payload bytes across the cluster, while
 ``device_put`` may move fewer on the wire (XLA relocates only the
 shards that change owners).
 
+``send`` blocks the producer for the full hop; ``send_async`` does
+not: it snapshots the (still in-flight, JAX-async-dispatched) device
+buffers onto a bounded single-worker queue and runs the gather/
+reconstruct there — the ``HostPipeline`` executor discipline applied
+to transit. In-order delivery, backpressure at ``depth``, failure
+containment on the next ``send_async``/``drain_async``, and an
+``overlap_efficiency`` row under ``report()["async"]``. Drivers
+expose it as ``--transit-async`` (train/solver).
+
 Drivers that run their main jitted loop on the producer mesh (train/
 serve behind ``--transit-consumers``) must call
 ``require_producer_spans_cluster`` first: a producer mesh that
@@ -60,8 +69,10 @@ requests on the old mesh drain or fail-contained first
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -69,8 +80,139 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import mesh_process_span
 from repro.core.insitu.bridge import BridgeData
+from repro.core.insitu.pipeline import PipelineError
 
 VIAS = ("auto", "device_put", "host")
+
+_STOP = object()
+
+
+class _AsyncHop:
+    """The async transit executor: one bounded queue, ONE ordered
+    worker running the bridge's (collective) hop off the producer's
+    critical path — the ``HostPipeline`` discipline applied to transit.
+
+    ``submit`` snapshots the field by reference: the arrays are live
+    ``jax.Array``s whose computation JAX is still dispatching — the
+    worker's host gather blocks on them *there*, so the producer's
+    jitted loop keeps running. One worker per process + submission
+    order = every process executes the Nth send's collectives as its
+    Nth hop, keeping the cluster's collective ordering consistent
+    (drivers must not interleave OTHER global host collectives with
+    in-flight async sends — drain first; ``ElasticController`` does).
+
+    Failure containment mirrors ``HostPipeline``: a hop failure is
+    captured as :class:`PipelineError`, re-raised to the producer on
+    the next ``submit``/``drain``; queued fields behind it are dropped
+    and counted, and the producer never deadlocks on a dead consumer.
+    """
+
+    def __init__(self, bridge: "TransitBridge", depth: int,
+                 on_result: Optional[Callable[[BridgeData], Any]]):
+        if depth < 1:
+            raise ValueError(f"transit async depth must be >= 1, "
+                             f"got {depth}")
+        self.bridge = bridge
+        self.depth = depth
+        self.on_result = on_result
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._lock = threading.Lock()
+        self._error: Optional[PipelineError] = None
+        self._closed = False
+        self._submitted = 0
+        self._completed = 0
+        self._dropped = 0
+        self._backpressure_s = 0.0    # producer blocked on the full queue
+        self._drain_wait_s = 0.0      # producer blocked in drain()
+        self._hop_busy_s = 0.0        # worker inside the collective hop
+        self._results: List[BridgeData] = []
+        self._thread = threading.Thread(target=self._work,
+                                        name="transit-async", daemon=True)
+        self._thread.start()
+
+    def submit(self, data: BridgeData) -> None:
+        if self._error is not None:
+            raise self._error
+        if self._closed:
+            raise RuntimeError("async transit hop is closed")
+        t0 = time.perf_counter()
+        self._q.put(data)
+        with self._lock:
+            self._backpressure_s += time.perf_counter() - t0
+            self._submitted += 1
+
+    def drain(self, *, raise_error: bool = True) -> List[BridgeData]:
+        t0 = time.perf_counter()
+        self._q.join()
+        with self._lock:
+            self._drain_wait_s += time.perf_counter() - t0
+            out, self._results = self._results, []
+        if raise_error and self._error is not None:
+            raise self._error
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(_STOP)
+        self._thread.join()
+
+    def _work(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _STOP:
+                    return
+                if self._error is not None:
+                    with self._lock:
+                        self._dropped += 1
+                    continue
+                t0 = time.perf_counter()
+                out = self.bridge.send(item)
+                if self.on_result is not None:
+                    self.on_result(out)
+                with self._lock:
+                    self._hop_busy_s += time.perf_counter() - t0
+                    self._completed += 1
+                    if self.on_result is None:
+                        # delivery-by-drain mode: retain for the caller
+                        self._results.append(out)
+            except Exception as err:  # noqa: BLE001 — re-raised at submit
+                with self._lock:
+                    if self._error is None:
+                        step = getattr(item, "step", "?")
+                        self._error = PipelineError(step, "transit", err)
+                    self._dropped += 1
+                    self._hop_busy_s += time.perf_counter() - t0
+            finally:
+                self._q.task_done()
+
+    def report(self) -> Dict[str, Any]:
+        """Async accounting incl. ``overlap_efficiency``: the fraction
+        of the hop's busy time hidden from the producer —
+        ``1 - producer_blocked_s / hop_busy_s`` (clamped to [0, 1]),
+        where the producer only blocks on backpressure and drain. A
+        blocking ``send`` loop scores ~0 (the producer eats every hop
+        second); a fully overlapped run approaches 1."""
+        with self._lock:
+            blocked = self._backpressure_s + self._drain_wait_s
+            busy = self._hop_busy_s
+            eff = 0.0
+            if busy > 0.0:
+                eff = min(1.0, max(0.0, 1.0 - blocked / busy))
+            return {
+                "depth": self.depth,
+                "submitted": self._submitted,
+                "completed": self._completed,
+                "dropped": self._dropped,
+                "backpressure_s": self._backpressure_s,
+                "drain_wait_s": self._drain_wait_s,
+                "hop_busy_s": busy,
+                "producer_blocked_s": blocked,
+                "overlap_efficiency": eff,
+                "error": str(self._error) if self._error else None,
+            }
 
 
 def _mesh_addressable(mesh) -> bool:
@@ -141,6 +283,7 @@ class TransitBridge:
         self._bytes = 0
         self._wall_s = 0.0
         self._per_array: Dict[str, int] = {}
+        self._async: Optional[_AsyncHop] = None
 
     # -- participation ------------------------------------------------------
     def is_producer(self) -> bool:
@@ -273,6 +416,47 @@ class TransitBridge:
         return data.replace(arrays=out,
                             meta={**data.meta, "transit_via": self.via})
 
+    # -- async hop ----------------------------------------------------------
+    def send_async(self, data: BridgeData, *,
+                   on_result: Optional[Callable[[BridgeData], Any]] = None,
+                   depth: int = 2) -> None:
+        """Enqueue one field for the bounded background hop and return
+        immediately — the producer's next jitted step overlaps the
+        gather/reconstruct (the arrays are async-dispatch snapshots;
+        the worker blocks on them, not the producer).
+
+        Delivery is in submission order. ``on_result`` (fixed at the
+        first call, like ``depth``) runs on the worker with each
+        delivered ``BridgeData`` — the consumer-side chain hook; without
+        it, delivered fields are retained and returned by
+        ``drain_async``. Blocks only when ``depth`` fields are already
+        in flight (backpressure). Raises the contained
+        :class:`PipelineError` of an earlier failed hop. The
+        multi-process contract is ``send``'s, one level up: every
+        process calls ``send_async`` for the same fields in the same
+        order, and no other global host collective may run while sends
+        are in flight (``drain_async`` first — docs/multihost.md)."""
+        if self._async is None:
+            self._async = _AsyncHop(self, depth, on_result)
+        self._async.submit(data)
+
+    def drain_async(self, *, raise_error: bool = True) -> List[BridgeData]:
+        """Block until every async send completed; return the delivered
+        fields retained since the last drain (empty when ``on_result``
+        consumes them). Re-raises a contained hop failure unless
+        ``raise_error=False``. No-op without pending async sends."""
+        if self._async is None:
+            return []
+        return self._async.drain(raise_error=raise_error)
+
+    def close_async(self) -> None:
+        """Drain (never raising) and stop the async worker — called by
+        the elastic controller before it swaps in a new bridge, so an
+        orphaned worker can never run a stale mesh's collectives."""
+        if self._async is not None:
+            self._async.drain(raise_error=False)
+            self._async.close()
+
     # -- accounting ---------------------------------------------------------
     def reset_stats(self) -> None:
         """Zero the accounting (fields/bytes/wall) without touching
@@ -291,7 +475,7 @@ class TransitBridge:
             return {"shape": dict(mesh.shape),
                     "processes": sorted({d.process_index
                                          for d in mesh.devices.flat})}
-        return {
+        rep = {
             "via": self.via,
             "fields": self._fields,
             "bytes_moved": self._bytes,
@@ -300,3 +484,8 @@ class TransitBridge:
             "producer": span(self.producer_mesh),
             "consumer": span(self.consumer_mesh),
         }
+        if self._async is not None:
+            # incl. the overlap_efficiency row — how much of the hop
+            # the producer never saw (see _AsyncHop.report)
+            rep["async"] = self._async.report()
+        return rep

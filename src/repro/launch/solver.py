@@ -30,6 +30,12 @@ from repro.runtime.cluster import (add_cluster_args, config_from_args,
                                    init_cluster)
 
 
+def _discard(_data):
+    """--transit-async on_result for producer-only processes: their
+    send() result is a None-leaved placeholder — drop it instead of
+    letting the async hop retain it until drain."""
+
+
 def build_solver(args, mesh):
     grid = tuple(args.grid)
     common = dict(nu=args.nu, dt=args.dt, decomp=args.decomp,
@@ -90,6 +96,14 @@ def main(argv=None):
                          "a disjoint N-device consumer mesh through "
                          "core/insitu/transit.TransitBridge (0 = "
                          "persist in place)")
+    ap.add_argument("--transit-async", action="store_true",
+                    help="overlap the transit hop with the next solve "
+                         "interval: send_async() snapshots the E(k) "
+                         "report and a bounded background worker runs "
+                         "the exchange plus the consumer-side chain; "
+                         "a failed hop surfaces on the next send or "
+                         "drain (requires --transit-consumers; "
+                         "docs/multihost.md)")
     ap.add_argument("--elastic", action="store_true",
                     help="put the transit consumer mesh under an "
                          "ElasticController: consumer ranks heartbeat "
@@ -138,6 +152,9 @@ def main(argv=None):
     elif args.elastic:
         raise SystemExit("--elastic requires --transit-consumers N "
                          "(there is no consumer mesh to rescale)")
+    elif args.transit_async:
+        raise SystemExit("--transit-async requires --transit-consumers "
+                         "N (there is no transit hop to overlap)")
     elif jax.process_count() > 1:
         mesh = make_multihost_mesh()
     else:
@@ -194,13 +211,30 @@ def main(argv=None):
             if transit_bridge is not None:
                 # collective hop onto the consumer mesh — every process
                 # calls send(); only consumer participants get arrays
-                payload = transit_bridge.send(payload)
-                deliver = transit_bridge.is_consumer()
+                if args.transit_async:
+                    # bounded background worker runs the exchange and
+                    # (on consumers) the writer chain, overlapping the
+                    # next solve interval; failures surface contained
+                    # at the next send/drain
+                    transit_bridge.send_async(
+                        payload,
+                        on_result=(chain.execute
+                                   if transit_bridge.is_consumer()
+                                   else _discard))
+                    deliver = False
+                else:
+                    payload = transit_bridge.send(payload)
+                    deliver = transit_bridge.is_consumer()
             if deliver:
                 chain.execute(payload)
         if elastic is not None:
             # lease renewal + failure poll once per monitor interval —
             # tick() is collective and every process is here each loop
+            if args.transit_async:
+                # tick() runs host collectives; drain pending async
+                # sends first so the worker's collective never
+                # interleaves with them (transit.py contract)
+                transit_bridge.drain_async()
             elastic.heartbeat_all()
             elastic.tick()
         if (args.ckpt_every and args.ckpt_dir
@@ -208,6 +242,11 @@ def main(argv=None):
             solver.save(args.ckpt_dir)
     wall = time.perf_counter() - t1
 
+    if transit_bridge is not None and args.transit_async:
+        # consumer-side chain work runs on the async worker — finish
+        # every pending hop (surfacing contained failures) before the
+        # chain finalizes and the bridge reports
+        transit_bridge.drain_async()
     files = []
     if chain is not None:
         fin = chain.finalize()

@@ -38,6 +38,12 @@ from repro.sharding.policy import make_policy
 from repro.train import step as train_step_mod
 
 
+def _discard(_data):
+    """--transit-async on_result for producer-only processes: their
+    send() result is a None-leaved placeholder — drop it instead of
+    letting the async hop retain it until drain."""
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -65,6 +71,14 @@ def main(argv=None):
                          "clusters: every process must keep at least "
                          "one producer device or the run aborts "
                          "(docs/multihost.md, subset collectives)")
+    ap.add_argument("--transit-async", action="store_true",
+                    help="overlap the M→N transit hop with the next "
+                         "train step: send_async() snapshots the "
+                         "report and a bounded background worker runs "
+                         "the exchange plus the consumer-side chain; "
+                         "a failed hop surfaces on the next send or "
+                         "drain (requires --transit-consumers; "
+                         "docs/multihost.md)")
     ap.add_argument("--elastic", action="store_true",
                     help="put the transit consumer mesh under an "
                          "ElasticController: consumer ranks heartbeat "
@@ -130,6 +144,9 @@ def main(argv=None):
     else:
         mesh = (make_production_mesh() if args.production_mesh
                 else make_host_mesh())
+    if args.transit_async and not args.transit_consumers:
+        raise SystemExit("--transit-async requires --transit-consumers N "
+                         "(there is no transit hop to overlap)")
     policy = make_policy(mesh, global_batch=args.batch)
 
     opt = AdamW(warmup_cosine(args.lr, max(args.steps // 20, 1),
@@ -207,14 +224,31 @@ def main(argv=None):
                 # hands producers None leaves), so only they run the
                 # chain; producer-only processes still fall through to
                 # the progress log below
-                payload = transit_bridge.send(payload)
-                deliver = transit_bridge.is_consumer()
+                if args.transit_async:
+                    # async hop: the bounded worker runs the exchange
+                    # and (on consumers) the writer chain, overlapping
+                    # the next train step; a failed hop raises a
+                    # contained PipelineError at the next send/drain
+                    transit_bridge.send_async(
+                        payload,
+                        on_result=(spectra_chain.execute
+                                   if transit_bridge.is_consumer()
+                                   else _discard))
+                    deliver = False
+                else:
+                    payload = transit_bridge.send(payload)
+                    deliver = transit_bridge.is_consumer()
             if deliver:
                 spectra_chain.execute(payload)
         if elastic is not None and monitor_step % args.insitu_every == 0:
             # lease renewal + failure poll at monitor cadence; tick()
             # is collective, and every process reaches this point at
             # the same step, matching its contract
+            if args.transit_async:
+                # tick() runs host collectives; an in-flight async
+                # send must never interleave with them (the send_async
+                # contract in core/insitu/transit.py) — drain first
+                transit_bridge.drain_async()
             elastic.heartbeat_all()
             elastic.tick()
         if step % 10 == 0 or step <= 2:
@@ -240,6 +274,11 @@ def main(argv=None):
            "first_loss": losses[0] if losses else None,
            "final_loss": losses[-1] if losses else None,
            "wall_s": round(time.time() - t0, 1), **report}
+    if transit_bridge is not None and args.transit_async:
+        # consumer-side chain work runs on the async worker — complete
+        # (and surface any contained failure from) every pending hop
+        # before the chain drains and the bridge reports
+        transit_bridge.drain_async()
     if spectra_chain is not None:
         spectra_chain.drain()
         pipe = spectra_chain.marshaling_report().get("pipeline", {})

@@ -43,9 +43,12 @@ point in its loop, like every other collective in this repo.
 ``tick()`` broadcasts process 0's death verdict (a fixed-size rank
 bitmask via ``broadcast_one_to_all``) so all processes rebuild
 identical meshes even if wall clocks disagree. The controller
-duck-types the ``TransitBridge`` surface (``send`` / ``is_producer`` /
-``is_consumer`` / ``reset_stats``), so drivers pass it anywhere a
-bridge goes and sends automatically target the newest generation.
+duck-types the ``TransitBridge`` surface (``send`` / ``send_async`` /
+``drain_async`` / ``is_producer`` / ``is_consumer`` /
+``reset_stats``), so drivers pass it anywhere a bridge goes and sends
+automatically target the newest generation; a rescale drains and
+closes the old bridge's async hop before the swap, so in-flight
+``send_async`` work never interleaves with the new mesh.
 
 Protocol walkthrough, failure modes, and the chaos-harness recipes:
 ``docs/elastic.md``. Real 2-process exercise:
@@ -262,6 +265,12 @@ class ElasticController:
         engine_info = None
         if self._engine is not None:
             engine_info = self._engine.rescale_mesh(new_mesh, drain=drain)
+        # retire the old bridge's async hop FIRST: in-flight send_async
+        # work still targets the old consumer mesh, and a send issued
+        # after the swap must never interleave with it. close_async
+        # drains without raising (failure-path rescales must not die on
+        # a contained transit error) and stops the worker.
+        self._bridge.close_async()
         # drop plans pinned to BOTH meshes: the old one is retired, and
         # the new one must bring up fresh (miss -> wisdom read-through),
         # even when its topology matches an earlier generation's
@@ -312,6 +321,15 @@ class ElasticController:
     # -- TransitBridge duck-type: sends route to the newest bridge -------------
     def send(self, data):
         return self._bridge.send(data)
+
+    def send_async(self, data, **kw):
+        return self._bridge.send_async(data, **kw)
+
+    def drain_async(self, **kw):
+        return self._bridge.drain_async(**kw)
+
+    def close_async(self) -> None:
+        self._bridge.close_async()
 
     def is_producer(self) -> bool:
         return self._bridge.is_producer()

@@ -648,6 +648,113 @@ def test_chaos_grow_warm_starts_from_wisdom_bit_identical(chaos_out):
 
 
 # ---------------------------------------------------------------------------
+# Async transit under chaos: contained consumer death + drain-on-rescale
+# ---------------------------------------------------------------------------
+
+ASYNC_CHAOS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.insitu.bridge import BridgeData
+    from repro.core.insitu.pipeline import PipelineError
+    from repro.launch.mesh import make_elastic_setup
+    from repro.runtime.fault import (KILL_AT_STEP, FaultSchedule,
+                                     InjectedFault)
+
+    out = {}
+    pm, ctl = make_elastic_setup(2, lease=1e9)
+    rng = np.random.default_rng(7)
+    field = rng.standard_normal((12, 8)).astype(np.float32)
+
+    def payload(step):
+        x = jax.device_put(jnp.asarray(field + step),
+                           NamedSharding(pm, P("data", None)))
+        return BridgeData(arrays={"f": x}, step=step)
+
+    # -- injected consumer death surfaces contained, producer lives ----
+    sched = FaultSchedule([InjectedFault(mode=KILL_AT_STEP, step=2,
+                                         rank=0)])
+    delivered = []
+    def consume(data):
+        sched.check_kill(data.step, 0)   # raises InjectedFailure at 2
+        delivered.append(data.step)
+    err = None
+    try:
+        for i in range(4):
+            ctl.send_async(payload(i), on_result=consume, depth=2)
+        ctl.drain_async(raise_error=False)
+        ctl.send_async(payload(9))
+    except PipelineError as e:
+        err = {"step": e.step, "endpoint": e.endpoint,
+               "cause": type(e.cause).__name__}
+    out["delivered_before_kill"] = delivered
+    out["contained"] = err
+    rep = ctl.bridge.report()["async"]
+    out["dropped"] = rep["dropped"]
+    out["producer_alive"] = True        # we got here: no deadlock
+
+    # -- rescale drains + closes the old hop, new bridge sends clean ---
+    old_bridge = ctl.bridge
+    ev = ctl.rescale(n=1, reason="operator shrink")
+    out["rescaled_to"] = ev["to_devices"]
+    out["old_hop_closed"] = old_bridge._async._closed
+    out["new_bridge"] = ctl.bridge is not old_bridge
+    # the new generation's async hop starts fresh (no inherited error)
+    got = []
+    for i in range(3):
+        ctl.send_async(payload(i), on_result=lambda d: got.append(d),
+                       depth=2)
+    ctl.drain_async()
+    out["post_rescale_delivered"] = [g.step for g in got]
+    out["post_rescale_bit_identical"] = all(
+        np.array_equal(np.asarray(g.arrays["f"]), field + g.step)
+        for g in got)
+    out["new_async_clean"] = ctl.bridge.report()["async"]["error"] is None
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def async_chaos_out():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", ASYNC_CHAOS_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_async_consumer_death_contained(async_chaos_out):
+    """FaultSchedule-injected consumer death mid-hop: the producer's
+    next send raises the contained PipelineError (never deadlocks),
+    and delivery stopped exactly at the injected step."""
+    assert async_chaos_out["delivered_before_kill"] == [0, 1]
+    err = async_chaos_out["contained"]
+    assert err is not None
+    assert err["endpoint"] == "transit"
+    assert err["step"] == 2
+    assert err["cause"] == "InjectedFailure"
+    assert async_chaos_out["dropped"] >= 1
+    assert async_chaos_out["producer_alive"] is True
+
+
+def test_async_drain_on_rescale(async_chaos_out):
+    """ElasticController.rescale() retires the old bridge's async hop
+    (drained, closed) before swapping, and the new generation's
+    send_async delivers clean — no inherited error, no stale worker."""
+    assert async_chaos_out["rescaled_to"] == 1
+    assert async_chaos_out["old_hop_closed"] is True
+    assert async_chaos_out["new_bridge"] is True
+    assert async_chaos_out["post_rescale_delivered"] == [0, 1, 2]
+    assert async_chaos_out["post_rescale_bit_identical"] is True
+    assert async_chaos_out["new_async_clean"] is True
+
+
+# ---------------------------------------------------------------------------
 # Real 2-process cluster: the launcher's elastic demo (SKIP on rc 99)
 # ---------------------------------------------------------------------------
 

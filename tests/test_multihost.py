@@ -210,6 +210,135 @@ def test_transit_bridge_guards(single_out):
 
 
 # ---------------------------------------------------------------------------
+# Async transit: ordering, backpressure, failure containment (8 devices)
+# ---------------------------------------------------------------------------
+
+ASYNC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.insitu.bridge import BridgeData
+    from repro.core.insitu.pipeline import PipelineError
+    from repro.core.insitu.transit import TransitBridge
+    from repro.launch.mesh import make_transit_meshes
+
+    out = {}
+    pm, cm = make_transit_meshes(6, 2)
+    rng = np.random.default_rng(0)
+
+    def place(a):
+        return jax.device_put(jnp.asarray(a),
+                              NamedSharding(pm, P("data", None)))
+
+    fields = [rng.standard_normal((12, 8)).astype(np.float32)
+              for _ in range(5)]
+
+    # -- in-order, bit-identical delivery (host transport, drain mode) --
+    b = TransitBridge(pm, cm, via="host")
+    for i, f in enumerate(fields):
+        b.send_async(BridgeData(arrays={"f": place(f)}, step=i), depth=2)
+    got = b.drain_async()
+    out["order"] = [g.step for g in got]
+    out["bit_identical"] = all(
+        np.array_equal(np.asarray(g.arrays["f"]), f)
+        for g, f in zip(got, fields))
+    rep = b.report()["async"]
+    out["report_keys"] = sorted(rep)
+    out["completed"] = rep["completed"]
+    out["efficiency_bounded"] = 0.0 <= rep["overlap_efficiency"] <= 1.0
+    out["drain_empty_after"] = b.drain_async() == []
+
+    # -- backpressure: a slow consumer bounds the queue at depth --------
+    inflight = {"now": 0, "max": 0}
+    def slow(data):
+        inflight["now"] += 1
+        inflight["max"] = max(inflight["max"], inflight["now"])
+        time.sleep(0.05)
+        inflight["now"] -= 1
+    b2 = TransitBridge(pm, cm, via="host")
+    t0 = time.perf_counter()
+    for i in range(6):
+        b2.send_async(BridgeData(arrays={"f": place(fields[0])}, step=i),
+                      on_result=slow, depth=1)
+    submit_wall = time.perf_counter() - t0
+    b2.drain_async()
+    rep2 = b2.report()["async"]
+    out["bp_completed"] = rep2["completed"]
+    out["bp_backpressured"] = rep2["backpressure_s"] > 0.0
+    # depth=1: at most one field in the hop + one queued, so the
+    # producer must have blocked for ~4 of the 6 hops
+    out["bp_submit_blocked"] = submit_wall > 0.15
+    out["bp_never_overran"] = inflight["max"] == 1
+
+    # -- failure containment: consumer death surfaces on NEXT send ------
+    def dying(data):
+        if data.step == 1:
+            raise RuntimeError("consumer died")
+    b3 = TransitBridge(pm, cm, via="host")
+    err = None
+    try:
+        for i in range(3):   # step 1 fails; later submits may already
+            b3.send_async(   # see the contained error
+                BridgeData(arrays={"f": place(fields[0])}, step=i),
+                on_result=dying, depth=2)
+        b3.drain_async(raise_error=False)
+        b3.send_async(BridgeData(arrays={"f": place(fields[0])}, step=9))
+    except PipelineError as e:
+        err = {"step": e.step, "endpoint": e.endpoint,
+               "cause": str(e.cause)}
+    out["contained"] = err
+    rep3 = b3.report()["async"]
+    out["fail_dropped"] = rep3["dropped"]
+    out["fail_error_set"] = rep3["error"] is not None
+
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def async_out():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", ASYNC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_transit_async_in_order_bit_identical(async_out):
+    assert async_out["order"] == [0, 1, 2, 3, 4]
+    assert async_out["bit_identical"] is True
+    assert async_out["completed"] == 5
+    assert async_out["drain_empty_after"] is True
+    assert async_out["efficiency_bounded"] is True
+    assert async_out["report_keys"] == [
+        "backpressure_s", "completed", "depth", "drain_wait_s",
+        "dropped", "error", "hop_busy_s", "overlap_efficiency",
+        "producer_blocked_s", "submitted"]
+
+
+def test_transit_async_backpressure_bounds_queue(async_out):
+    assert async_out["bp_completed"] == 6
+    assert async_out["bp_backpressured"] is True
+    assert async_out["bp_submit_blocked"] is True
+    assert async_out["bp_never_overran"] is True
+
+
+def test_transit_async_failure_contained_on_next_send(async_out):
+    err = async_out["contained"]
+    assert err is not None, "failed hop never surfaced"
+    assert err["endpoint"] == "transit"
+    assert err["step"] == 1
+    assert "consumer died" in err["cause"]
+    # the failing hop and everything queued behind it are dropped
+    assert async_out["fail_dropped"] >= 1
+    assert async_out["fail_error_set"] is True
+
+
+# ---------------------------------------------------------------------------
 # Real 2-process CPU cluster smoke tests (the tentpole's acceptance)
 # ---------------------------------------------------------------------------
 
@@ -246,6 +375,19 @@ def test_two_process_transit_bit_identical():
     assert res.returncode == 0, res.stdout[-4000:] + res.stderr[-2000:]
     assert "transit delivery bit-identical" in res.stdout
     assert "transit demo OK" in res.stdout
+
+
+def test_two_process_wire_codec_and_async_transit():
+    """2-process cluster: the compressed-wire demo — block-scaled int8
+    on the host-crossing exchange stays within the error budget with a
+    >=2x wire-byte win, the measured sweep generates codec candidates
+    and agrees one winner cluster-wide, and the async transit submit
+    loop beats the blocking one."""
+    res = _run_launcher("--demo", "wire")
+    assert res.returncode == 0, res.stdout[-4000:] + res.stderr[-2000:]
+    assert "codec candidate(s)" in res.stdout
+    assert "sweep winner wire (cluster-agreed):" in res.stdout
+    assert "wire demo OK" in res.stdout
 
 
 def test_two_process_solver_spectrum_agreement():

@@ -45,9 +45,30 @@ def test_schedule_shape():
 def test_int8_quantization_error_bound(seed):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.standard_normal(256).astype(np.float32))
-    q, scale = quantize_int8(x)
-    err = jnp.max(jnp.abs(dequantize_int8(q, scale) - x))
-    assert float(err) <= float(scale) / 2 + 1e-6
+    q, scales = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, scales) - x))
+    assert float(err) <= float(jnp.max(scales)) / 2 + 1e-6
+
+
+def test_int8_outlier_block_containment():
+    """Regression: one huge outlier must not zero the rest of the
+    gradient. The historical per-leaf absmax scale collapsed every
+    other entry to round(x/scale) = 0; block scales confine the coarse
+    grid to the outlier's own block."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(512).astype(np.float32)
+    x[5] = 1e5                          # outlier dominates block 0 only
+    q, scales = quantize_int8(jnp.asarray(x), block=64)
+    deq = np.asarray(dequantize_int8(q, scales, block=64))
+    # blocks 1.. reconstruct to normal relative accuracy ...
+    rest = slice(64, None)
+    assert (np.max(np.abs(deq[rest] - x[rest]))
+            <= np.max(np.abs(x[rest])) / 254 + 1e-6)
+    assert np.count_nonzero(np.asarray(q)[rest]) > 400
+    # ... whereas one global scale (block=None on a flat row) zeroes
+    # essentially everything outside the outlier
+    qg, sg = quantize_int8(jnp.asarray(x), block=None)
+    assert np.count_nonzero(np.asarray(qg)[rest]) == 0
 
 
 def test_error_feedback_reduces_bias():
@@ -66,7 +87,7 @@ def test_error_feedback_reduces_bias():
         err = gt + err - deq
         ef_sum += np.asarray(deq)
     # residual bounded by one quantization step, not accumulating
-    assert np.max(np.abs(ef_sum - true_sum)) < 2 * float(s)
+    assert np.max(np.abs(ef_sum - true_sum)) < 2 * float(jnp.max(s))
 
 
 def test_global_norm():

@@ -56,6 +56,7 @@ def test_plan_cache_hit_and_miss_identity():
                                           "autotune_skipped": 0,
                                           "decomp_sweeps": 0,
                                           "wire_profile_candidates": 0,
+                                          "wire_codec_candidates": 0,
                                           "thread_waits": 0,
                                           "sweep_candidates_timed": 0,
                                           "wisdom_hits": 0,

@@ -451,6 +451,40 @@ SCRIPT = textwrap.dedent("""
         out[f"p2d_{tag}_rt"] = float(np.max(np.abs(
             cplx(b.execute(fr, fi)) - xb)))
 
+    # ---- compressed wire codecs: block-scaled int8 through the same ------
+    # exchanges (wire_dtype carries the codec NAME; AllToAll reroutes it
+    # to wire_codec). int8_block8 keeps every local last-axis extent on
+    # these grids an exact block multiple.
+    for tag, kw in [("slab_int8b", {"wire_dtype": "int8_block8"}),
+                    # p2d's last exchange SPLITS its last axis: the
+                    # scale row must split too, so the block must
+                    # divide the per-target chunk (48/4 = 12 -> 4)
+                    ("p2d_int8b",
+                     {"wire_dtype": (None, None, "int8_block4")})]:
+        f = plan_dft((N0, N1), FORWARD, mesh, batch_ndim=1,
+                     decomp="pencil2d" if tag.startswith("p2d") else "slab",
+                     **kw)
+        fr, fi = f.execute(*f.place(xb))
+        out[tag] = relerr(cplx((fr, fi)), ref2)
+    for tag, kw in [("pencil_int8b", {"wire_dtype": "int8_block4"}),
+                    ("pencil_mixed_int8b",
+                     {"wire_dtype": ("bfloat16", "int8_block4")})]:
+        f = plan_dft(G, FORWARD, mesh, decomp="pencil", batch_ndim=1, **kw)
+        fr, fi = f.execute(*f.place(x3b))
+        out[tag] = relerr(cplx((fr, fi)), ref3b)
+    # r2c: the (re, im) pair crosses the compressed wire too — per
+    # stage, since the half-axis exchange's padded extent (14 then 7) fits
+    # no power-of-two block (that candidate fails loudly at trace time; the
+    # sweep records it as an ordinary build skip)
+    f = plan_rfft(G, FORWARD, mesh, decomp="pencil", batch_ndim=1,
+                  wire_dtype=(None, "int8_block7"))
+    fr, fi = f.execute(*f.place(x3r))
+    out["rpencil_int8b"] = relerr(cplx((fr, fi))[..., :h3], ref3r)
+    # topology reports the codec on its stage (and None dtype there)
+    topo = f.topology()
+    assert [t["wire_codec"] for t in topo] == [None, "int8_block7"]
+    assert all(t["wire_dtype"] is None for t in topo)
+
     # ---- pencil2d r2c: real gather + half-width spectral scatters ---------
     hp2d = rfft.padded_half(N1r, 8)
     for tag, kw in [("plain", {}), ("ov", {"overlap_chunks": 2})]:
@@ -480,6 +514,7 @@ def run_subprocess():
 
 TIGHT = 1e-4      # exact-wire f32 transforms
 LOOSE = 5e-2      # bf16 wire: ~3 decimal digits traded for 2x bytes
+WIRE_TOL = 1e-2   # the planner's default compressed-wire error budget
 
 
 def test_schedule_executor_all_decomps():
@@ -488,8 +523,81 @@ def test_schedule_executor_all_decomps():
         if key == "fourstep_overlap_raises":
             assert val is True, out
             continue
-        tol = LOOSE if "bf16" in key else TIGHT
-        if key.endswith("_rt") and "bf16" in key:
-            # round-trips re-cross the wire: same loose budget
+        tol = TIGHT
+        if "bf16" in key:
             tol = LOOSE
+        if "int8" in key:
+            # compressed wire must land within the budget the planner's
+            # error-budget gate would hold it to
+            tol = WIRE_TOL
         assert val < tol, (key, val, out)
+
+
+# ---------------------------------------------------------------------------
+# Measured sweep: codec candidates live and die by the error budget
+# ---------------------------------------------------------------------------
+
+SWEEP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.compat import make_mesh
+    from repro.core.fft import plan as plan_mod
+    from repro.core.fft.plan import FORWARD, plan_dft
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    # single-process meshes never cross hosts; force the candidates so
+    # the budget gate itself is exercised
+    plan_mod.set_wire_sweep_policy("always")
+    out = {}
+
+    # impossible budget: every codec candidate must be rejected with
+    # the wire-error-budget reason, and the winner must stay exact-wire
+    p = plan_dft((24, 16, 128), FORWARD, mesh, decomp="pencil",
+                 backend="measure", wire_tol=1e-9)
+    out["candidates"] = plan_mod.plan_cache_stats()[
+        "wire_codec_candidates"]
+    skips = [s for s in plan_mod.autotune_skips()
+             if s.get("error") == "wire-error-budget"]
+    out["budget_skips"] = len(skips)
+    out["skips_carry_budget"] = all(
+        s.get("max_rel_err", 0) > 1e-9 and s.get("wire_tol") == 1e-9
+        for s in skips)
+    out["winner_wire_exact"] = all(
+        t["wire_codec"] is None for t in p.topology())
+
+    # roomy budget: candidates survive the gate and get timed (whether
+    # one WINS depends on the host's all_to_all cost model — only the
+    # gating behavior is contractual)
+    plan_mod.plan_cache_clear()
+    p2 = plan_dft((24, 16, 128), FORWARD, mesh, decomp="pencil",
+                  backend="measure", wire_tol=1e-1)
+    out["candidates2"] = plan_mod.plan_cache_stats()[
+        "wire_codec_candidates"]
+    out["budget_skips2"] = len(
+        [s for s in plan_mod.autotune_skips()
+         if s.get("error") == "wire-error-budget"])
+    out["wire_tol_keys_cache"] = plan_dft(
+        (24, 16, 128), FORWARD, mesh, decomp="pencil",
+        backend="measure", wire_tol=1e-1) is p2
+
+    print(json.dumps(out))
+""")
+
+
+def test_measured_sweep_wire_error_budget():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SWEEP_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["candidates"] >= 1, out
+    assert out["budget_skips"] >= 1, out
+    assert out["skips_carry_budget"] is True, out
+    assert out["winner_wire_exact"] is True, out
+    assert out["candidates2"] >= 1, out
+    assert out["budget_skips2"] == 0, out
+    assert out["wire_tol_keys_cache"] is True, out
